@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks: us/call of each Pallas kernel (interpret mode on
+CPU — relative numbers; TPU is the deployment target) against its jnp
+oracle, plus derived bandwidth figures."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.natural.kernel import natural_compress_2d
+from repro.kernels.natural.ref import natural_compress_ref
+from repro.kernels.qsgd.kernel import qsgd_dequantized
+from repro.kernels.qsgd.ref import qsgd_dequantized_ref
+from repro.kernels.selective_scan.ops import selective_scan_op
+from repro.kernels.selective_scan.ref import selective_scan_ref
+
+
+def run():
+    k = jax.random.PRNGKey(0)
+
+    x = jax.random.normal(k, (256, 2048))
+    u = jax.random.uniform(jax.random.PRNGKey(1), x.shape)
+    for name, fn in [("qsgd_kernel", lambda: qsgd_dequantized(x, u)),
+                     ("qsgd_ref", lambda: qsgd_dequantized_ref(x, u))]:
+        us, _ = timed(fn)
+        emit(name, us, f"GB/s={x.nbytes / (us * 1e-6) / 1e9:.2f}")
+
+    for name, fn in [("natural_kernel", lambda: natural_compress_2d(x, u)),
+                     ("natural_ref", lambda: natural_compress_ref(x, u))]:
+        us, _ = timed(fn)
+        emit(name, us, f"GB/s={x.nbytes / (us * 1e-6) / 1e9:.2f}")
+
+    B, L, E, N = 2, 256, 128, 16
+    dt = jax.nn.softplus(jax.random.normal(k, (B, L, E))) * 0.1
+    Bm = jax.random.normal(jax.random.PRNGKey(2), (B, L, N))
+    Cm = jax.random.normal(jax.random.PRNGKey(3), (B, L, N))
+    xx = jax.random.normal(jax.random.PRNGKey(4), (B, L, E))
+    A = -jnp.abs(jax.random.normal(jax.random.PRNGKey(5), (E, N)))
+    us, _ = timed(lambda: selective_scan_op(dt, Bm, Cm, xx, A, chunk=64))
+    emit("selective_scan_kernel", us, f"tokens/s={B * L / (us * 1e-6):.0f}")
+    us, _ = timed(lambda: selective_scan_ref(dt, Bm, Cm, xx, A))
+    emit("selective_scan_ref", us, f"tokens/s={B * L / (us * 1e-6):.0f}")
+
+    q = jax.random.normal(k, (1, 4, 512, 64))
+    kk = jax.random.normal(jax.random.PRNGKey(6), (1, 4, 512, 64))
+    v = jax.random.normal(jax.random.PRNGKey(7), (1, 4, 512, 64))
+    us, _ = timed(lambda: flash_attention(q, kk, v, bq=128, bk=128))
+    emit("flash_attention_kernel", us, "S=512,H=4,D=64")
+    us, _ = timed(lambda: flash_attention_ref(q, kk, v))
+    emit("flash_attention_ref", us, "S=512,H=4,D=64")
+
+
+if __name__ == "__main__":
+    run()

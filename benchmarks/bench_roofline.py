@@ -1,0 +1,66 @@
+"""Deliverable (g): roofline table from the dry-run artifacts.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+prints the three roofline terms, dominant bottleneck, MODEL_FLOPS ratio
+per (arch x shape x mesh).  Also emits a markdown table to
+experiments/roofline_table.md for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(pattern: str = "*.json"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(write_md: bool = True):
+    recs = load_records()
+    ok = [r for r in recs if r.get("status") == "OK"]
+    skip = [r for r in recs if r.get("status") == "SKIP"]
+    fail = [r for r in recs if r.get("status") == "FAIL"]
+    lines = ["| arch | shape | mesh | compute s | memory s | collective s "
+             "| dominant | useful FLOPs ratio |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in ok:
+        t = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {'x'.join(map(str, r['mesh']))} "
+            f"| {t['compute_s']:.3g} | {t['memory_s']:.3g} "
+            f"| {t['collective_s']:.3g} | {t['dominant']} "
+            f"| {ratio:.3f} |" if ratio else
+            f"| {r['arch']} | {r['shape']} | {'x'.join(map(str, r['mesh']))} "
+            f"| {t['compute_s']:.3g} | {t['memory_s']:.3g} "
+            f"| {t['collective_s']:.3g} | {t['dominant']} | n/a |")
+        emit(f"roofline_{r['tag']}", 0.0,
+             f"dominant={t['dominant']} "
+             f"c/m/x={t['compute_s']:.3g}/{t['memory_s']:.3g}/"
+             f"{t['collective_s']:.3g}")
+    for r in skip:
+        arch = r.get("arch") or r["tag"].split("__")[0]
+        shape = r.get("shape") or r["tag"].split("__")[1]
+        lines.append(f"| {arch} | {shape} "
+                     f"| — | — | — | — | SKIP ({r.get('skipped', '')}) | — |")
+    emit("roofline_summary", 0.0,
+         f"ok={len(ok)} skip={len(skip)} fail={len(fail)}")
+    if write_md:
+        out = os.path.join(DRYRUN_DIR, "..", "roofline_table.md")
+        with open(out, "w") as f:
+            f.write("\n".join(lines) + "\n")
+    assert not fail, [r["tag"] for r in fail]
+    return ok, skip, fail
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import logreg_loss_and_grad, make_logreg_data
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 5):
+    """us per call after warmup (CPU wall time; TPU is the target, so these
+    numbers are for relative comparisons of the jnp paths only)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def logreg_setup(n_clients: int = 5, heterogeneity: float = 1.0, seed: int = 0):
+    data = make_logreg_data(n_clients=n_clients, heterogeneity=heterogeneity,
+                            seed=seed)
+    X, Y = jnp.asarray(data.features), jnp.asarray(data.labels)
+
+    def grad_fn(p, b):
+        loss, g = logreg_loss_and_grad(p["w"], b[0], b[1], 0.01)
+        return loss, {"w": g}
+
+    def mean_loss(w_stacked):
+        return float(np.mean([
+            logreg_loss_and_grad(jnp.asarray(w_stacked)[i], X[i], Y[i])[0]
+            for i in range(n_clients)]))
+
+    def mean_loss_global(w):
+        return float(np.mean([logreg_loss_and_grad(w, X[i], Y[i])[0]
+                              for i in range(n_clients)]))
+
+    return X, Y, grad_fn, mean_loss, mean_loss_global

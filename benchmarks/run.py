@@ -1,0 +1,52 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+  fig3   -- meta-parameter (p, lambda) sweep            [paper Fig. 3]
+  fig4   -- compressor comparison, loss vs bits         [paper Figs. 4-6]
+  table2 -- bits/n to reach a target quality            [paper Table II]
+  fig7   -- FedAvg recovery at eta*lam/(np) = 1         [paper Figs. 7-8]
+  kernels -- Pallas kernel microbench                   [system]
+  roofline -- dry-run roofline table                    [deliverable g]
+
+Prints ``name,us_per_call,derived`` CSV lines.  Run:
+  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (bench_fig3_sweep, bench_fig4_compressors,
+                        bench_fig7_fedavg_recovery, bench_kernels,
+                        bench_roofline, bench_table2_bits)
+
+BENCHES = {
+    "fig3": bench_fig3_sweep.run,
+    "fig4": bench_fig4_compressors.run,
+    "table2": bench_table2_bits.run,
+    "fig7": bench_fig7_fedavg_recovery.run,
+    "kernels": bench_kernels.run,
+    "roofline": bench_roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=list(BENCHES))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            BENCHES[name]()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

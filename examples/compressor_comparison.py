@@ -1,0 +1,59 @@
+"""Paper Figures 4-6 analog: compressed L2GD under every compressor of
+Table I, on a reduced transformer LM — final loss, bits/n and the
+loss-per-bit ordering.
+
+  PYTHONPATH=src python examples/compressor_comparison.py [--steps N]
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import L2GDHyper, make_compressor
+from repro.data import TokenStream
+from repro.fl import run_l2gd
+from repro.models import init_params, loss_fn
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=150)
+args = ap.parse_args()
+
+cfg = dataclasses.replace(get_config("stablelm-1.6b").reduced(),
+                          vocab_size=64)
+n = 2
+ts = TokenStream(n_clients=n, vocab=cfg.vocab_size, batch=8, seq=16, seed=0)
+keys = jax.random.split(jax.random.PRNGKey(0), n)
+params0 = jax.vmap(lambda k: init_params(k, cfg))(keys)
+
+
+def grad_fn(p, b):
+    (loss, _), g = jax.value_and_grad(
+        lambda q: loss_fn(q, cfg, b), has_aux=True)(p)
+    return loss, g
+
+
+hp = L2GDHyper(eta=0.1, lam=0.5, p=0.2, n=n)
+print(f"{'compressor':12s} {'final loss':>10s} {'bits/n':>12s} "
+      f"{'vs identity':>12s} {'unbiased':>9s}")
+rows = []
+for name in ("identity", "natural", "qsgd", "terngrad", "bernoulli", "randk",
+             "topk"):
+    comp = make_compressor(name)
+    r = run_l2gd(jax.random.PRNGKey(1), params0, grad_fn, hp,
+                 lambda k: {"tokens": jnp.asarray(ts.batch_at(k))},
+                 args.steps, client_comp=comp, master_comp=comp, seed=2)
+    final = float(np.mean([l for _, l in r.losses][-5:]))
+    rows.append((name, final, r.ledger.bits_per_client))
+
+id_bits = rows[0][2]
+for name, final, bits in rows:
+    unb = "yes" if name not in ("topk",) else "NO"
+    print(f"{name:12s} {final:10.3f} {bits:12.3e} {id_bits / bits:11.1f}x "
+          f"{unb:>9s}")
+
+print("\nPaper claim check: natural compression keeps loss closest to the "
+      "uncompressed run at ~3.6x fewer bits (its variance omega = 1/8 is the "
+      "smallest of the unbiased operators).")

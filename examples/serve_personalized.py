@@ -1,0 +1,76 @@
+"""Personalized serving: train a small federated LM with compressed L2GD,
+then serve TWO different clients' personalized models side by side — their
+generations diverge because each client's model fits its own data law,
+which is the point of formulation (1).
+
+  PYTHONPATH=src python examples/serve_personalized.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import L2GDHyper, make_compressor
+from repro.data import TokenStream
+from repro.fl import run_l2gd
+from repro.models import decode_step, init_caches, init_params, loss_fn
+
+cfg = dataclasses.replace(get_config("stablelm-1.6b").reduced(),
+                          vocab_size=64)
+n = 2
+ts = TokenStream(n_clients=n, vocab=cfg.vocab_size, batch=8, seq=16, seed=0)
+keys = jax.random.split(jax.random.PRNGKey(0), n)
+params = jax.vmap(lambda k: init_params(k, cfg))(keys)
+
+
+def grad_fn(p, b):
+    (loss, _), g = jax.value_and_grad(
+        lambda q: loss_fn(q, cfg, b), has_aux=True)(p)
+    return loss, g
+
+
+print("training 2 personalized clients with compressed L2GD ...")
+hp = L2GDHyper(eta=0.1, lam=0.5, p=0.2, n=n)
+run = run_l2gd(jax.random.PRNGKey(1), params, grad_fn, hp,
+               lambda k: {"tokens": jnp.asarray(ts.batch_at(k))}, 250,
+               client_comp=make_compressor("natural"),
+               master_comp=make_compressor("natural"), seed=2)
+print(f"  final loss {run.losses[-1][1]:.3f}, rounds={run.ledger.rounds}, "
+      f"bits/n={run.ledger.bits_per_client:.2e}")
+
+
+def generate(client: int, prompt, steps: int = 10):
+    p_i = jax.tree.map(lambda a: a[client], run.state.params)
+    B = 1
+    caches = init_caches(cfg, B, len(prompt) + steps)
+    step = jax.jit(lambda pa, c, i, b: decode_step(pa, cfg, c, i, b))
+    tok = jnp.asarray([[prompt[0]]], jnp.int32)
+    out = [int(tok[0, 0])]
+    for i in range(len(prompt) + steps - 1):
+        logits, caches = step(p_i, caches, jnp.asarray(i, jnp.int32),
+                              {"tokens": tok})
+        if i + 1 < len(prompt):
+            tok = jnp.asarray([[prompt[i + 1]]], jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    return out
+
+
+prompt = [int(t) for t in ts.batch_at(999)[0, 0, :4]]
+print(f"\nprompt tokens: {prompt}")
+for c in range(n):
+    gen = generate(c, prompt)
+    # each client's ground-truth continuation under ITS OWN law
+    truth = [prompt[-1]]
+    for _ in range(10):
+        truth.append(int((ts.a[c] * truth[-1] + ts.b[c]) % cfg.vocab_size))
+    match = np.mean([g == t for g, t in zip(gen[3:], truth)])
+    print(f"client {c}: generated {gen[4:]}  "
+          f"(law a={ts.a[c]}, b={ts.b[c]}; match-own-law={match:.0%})")
+
+g0, g1 = generate(0, prompt), generate(1, prompt)
+print(f"\npersonalization visible: client generations "
+      f"{'DIVERGE' if g0 != g1 else 'agree'} on the same prompt.")

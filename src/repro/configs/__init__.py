@@ -1,0 +1,4 @@
+"""Config registry: one module per assigned architecture (+ paper-native
+configs).  ``get_config("<arch-id>")`` lazy-imports and returns it."""
+from repro.configs.base import (ArchConfig, InputShape, INPUT_SHAPES,
+                                get_config, list_archs, register, ARCH_IDS)

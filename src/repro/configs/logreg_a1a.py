@@ -1,0 +1,7 @@
+"""Paper-native convex problem: l2-regularized logistic regression on an
+a1a-like dataset (d=124), 5 clients — the paper's §VII-A meta-parameter
+study setting.  Not an ArchConfig; exported constants used by examples/
+benchmarks."""
+D_FEATURES = 124
+N_CLIENTS = 5
+L2 = 0.01

@@ -1,0 +1,25 @@
+"""Core library: the paper's contribution (compressed L2GD) as composable
+JAX modules — compressors, the probabilistic-protocol step, the compressed
+aggregation layer, and the convergence-theory calculators."""
+from repro.core.compressors import (
+    Compressor, Identity, QSGD, Natural, TernGrad, Bernoulli, RandK, TopK,
+    make_compressor, tree_apply, tree_wire_bits, joint_omega,
+)
+from repro.core.l2gd import (
+    L2GDHyper, L2GDState, init_state, l2gd_step, local_update,
+    aggregation_update, draw_xi,
+)
+from repro.core.aggregation import (
+    compressed_average, compressed_average_wire, stochastic_round_cast,
+)
+from repro.core import theory
+
+__all__ = [
+    "Compressor", "Identity", "QSGD", "Natural", "TernGrad", "Bernoulli",
+    "RandK", "TopK", "make_compressor", "tree_apply", "tree_wire_bits",
+    "joint_omega", "L2GDHyper", "L2GDState", "init_state", "l2gd_step",
+    "local_update", "aggregation_update", "draw_xi", "compressed_average",
+    "compressed_average_wire", "stochastic_round_cast", "theory",
+    "EFMemory", "init_ef_memory", "ef_average", "compress_grads",
+]
+from repro.core.extensions import EFMemory, init_ef_memory, ef_average, compress_grads

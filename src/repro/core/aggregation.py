@@ -1,0 +1,147 @@
+"""The compressed aggregation layer — the paper's master/worker exchange.
+
+Paper-faithful semantics (Algorithm 1):
+
+  1. every client i compresses its model:      c_i = C_i(x_i)
+  2. the master averages compressed models:    ybar = (1/n) sum_j c_j
+  3. the master compresses the average:        t = C_M(ybar)
+  4. every client aggregates against t.
+
+On a TPU mesh there is no physical master: step 2 is an all-reduce over
+the client axis and step 3 is computed *redundantly on every client with a
+shared PRNG key*, which is bitwise identical to a master compressing and
+broadcasting (Lemma 2 unbiasedness only needs E[C_M(ybar)] = xbar and is
+unaffected).  Wire bits are charged by the ledger at the compressors'
+true widths — see DESIGN.md §3.
+
+Two implementations:
+  * :func:`compressed_average` — stacked-client form (leading axis = n).
+    Used by the single-host simulator AND the pjit runtime (XLA turns the
+    axis-0 mean of a ("clients", ...)-sharded array into the collective).
+  * :func:`compressed_average_wire` — beyond-paper TPU-native variant for
+    shard_map: uplink = stochastic-round cast to a narrow dtype fused with
+    ``jax.lax.pmean`` (natural compression composes with collectives as a
+    dtype cast), downlink = shared-key C_M.  See EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import Compressor, tree_apply
+
+__all__ = ["compressed_average", "compressed_average_wire", "stochastic_round_cast"]
+
+
+def compressed_average(key: jax.Array, params_stacked, client_comp: Compressor,
+                       master_comp: Compressor):
+    """Return t = C_M( (1/n) sum_j C_j(x_j) ) for stacked client params.
+
+    ``params_stacked`` is a pytree whose leaves carry a leading client axis
+    of size n.  The returned pytree has NO client axis (it is the shared
+    aggregation target, identical on all clients).
+    """
+    n = jax.tree_util.tree_leaves(params_stacked)[0].shape[0]
+    k_clients, k_master = jax.random.split(key)
+    client_keys = jax.random.split(k_clients, n)
+    compressed = jax.vmap(lambda k, p: tree_apply(client_comp, k, p))(
+        client_keys, params_stacked)
+    ybar = jax.tree.map(lambda a: jnp.mean(a, axis=0), compressed)
+    return tree_apply(master_comp, k_master, ybar)
+
+
+def stochastic_round_cast(key: jax.Array, x: jax.Array,
+                          dtype=jnp.bfloat16) -> jax.Array:
+    """Unbiased stochastic rounding of float32 ``x`` to bfloat16.
+
+    Bit-exact construction: bf16 is the top 16 bits of f32, so truncation
+    drops the low 16 mantissa bits and we bump the bf16 magnitude up with
+    probability low16 / 2^16 — linear interpolation between the two
+    enclosing representables, hence exactly unbiased.  (A float-domain
+    ``nextafter`` formulation silently degenerates to nearest-rounding
+    because the next f32 value collapses back under the bf16 cast.)
+
+    Composes with XLA collectives as a plain cast, so the wire genuinely
+    carries the narrow payload.
+    """
+    if dtype != jnp.bfloat16:
+        raise NotImplementedError("stochastic_round_cast targets bf16")
+    xf = x.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(xf, jnp.uint32)
+    low = bits & jnp.uint32(0xFFFF)
+    prob = low.astype(jnp.float32) * (1.0 / 65536.0)
+    u = jax.random.uniform(key, x.shape)
+    up = (u < prob).astype(jnp.uint32)
+    trunc = (bits & jnp.uint32(0xFFFF0000)) + (up << 16)
+    out = jax.lax.bitcast_convert_type(trunc, jnp.float32)
+    passthrough = ~jnp.isfinite(xf)
+    return jnp.where(passthrough, xf, out).astype(dtype)
+
+
+def make_sharded_average(mesh, client_axes: tuple, param_pspecs_stacked,
+                         master_comp: Compressor):
+    """Beyond-paper: build an ``average_fn`` for :func:`repro.core.l2gd.
+    l2gd_step` whose UPLINK is a genuinely narrow collective.
+
+    Inside a shard_map over the full mesh, each client's local param shard
+    is stochastically rounded to bf16 (unbiased — natural-compression-style
+    narrowing) and ``pmean``-ed over the client axes: the wire carries bf16,
+    halving the aggregation's collective bytes end-to-end.  The downlink
+    C_M is applied shard-wise with a shared key (bitwise identical to a
+    master broadcast, zero extra communication — Lemma 2 unaffected).
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.tree_util import tree_map
+
+    axis = client_axes if len(client_axes) > 1 else client_axes[0]
+    out_specs = tree_map(lambda s: P(*tuple(s)[1:]), param_pspecs_stacked,
+                         is_leaf=lambda x: isinstance(x, P))
+
+    def local_fn(key, params_local):
+        # params_local leaves: (clients_per_shard, ...) — average locally
+        # first, then pmean over the client mesh axes.
+        k_up, k_master = jax.random.split(key)
+        # decorrelate uplink rounding across clients (Assumption 1:
+        # independent C_i); the master key stays shared by design.
+        for ax in (client_axes if isinstance(axis, tuple) else (axis,)):
+            k_up = jax.random.fold_in(k_up, jax.lax.axis_index(ax))
+        leaves, treedef = jax.tree_util.tree_flatten(params_local)
+        up_keys = jax.random.split(k_up, len(leaves))
+        meaned = []
+        for k_i, leaf in zip(up_keys, leaves):
+            local_mean = jnp.mean(leaf.astype(jnp.float32), axis=0)
+            narrow = stochastic_round_cast(k_i, local_mean)      # bf16 wire
+            m = narrow
+            for ax in (client_axes if isinstance(axis, tuple) else (axis,)):
+                m = jax.lax.pmean(m, ax)
+            meaned.append(m.astype(leaf.dtype))
+        ybar = jax.tree_util.tree_unflatten(treedef, meaned)
+        return tree_apply(master_comp, k_master, ybar)
+
+    def average_fn(key, params_stacked):
+        return jax.shard_map(
+            local_fn, mesh=mesh, in_specs=(P(), param_pspecs_stacked),
+            out_specs=out_specs, check_vma=False)(key, params_stacked)
+
+    return average_fn
+
+
+def compressed_average_wire(key: jax.Array, params_local, master_comp: Compressor,
+                            axis_name: str, *, wire_dtype=jnp.bfloat16):
+    """Beyond-paper TPU-native compressed aggregation (inside shard_map).
+
+    ``params_local`` is THIS client's (unstacked) param pytree; the client
+    axis is the mesh axis ``axis_name``.  Uplink: stochastic-round to
+    ``wire_dtype`` then ``pmean`` — the collective moves narrow bytes.
+    Downlink: C_M with a shared key (key must be identical across the
+    client axis; pass a key derived from the step counter, not from
+    per-client state).
+    """
+    k_up, k_master = jax.random.split(key)
+    leaves, treedef = jax.tree_util.tree_flatten(params_local)
+    up_keys = jax.random.split(k_up, len(leaves))
+    narrow = [stochastic_round_cast(k, leaf.astype(jnp.float32), wire_dtype)
+              for k, leaf in zip(up_keys, leaves)]
+    meaned = [jax.lax.pmean(x, axis_name).astype(jnp.float32) for x in narrow]
+    ybar = jax.tree_util.tree_unflatten(treedef, meaned)
+    return tree_apply(master_comp, k_master, ybar)

@@ -1,0 +1,319 @@
+"""Unbiased (and one biased) communication compressors — the paper's §IV-A.
+
+Every compressor is a pure, jit-able operator ``C: R^d -> R^d`` applied
+leaf-wise to parameter pytrees. We follow the paper's Assumption 1:
+
+  * unbiased:      E[C(x)] = x
+  * bounded var:   E||C(x) - x||^2 <= omega * ||x||^2
+
+Each operator also reports ``omega(shape)`` (its variance factor, used by
+:mod:`repro.core.theory`) and ``wire_bits(shape)`` (bits actually sent on
+the wire for an array of that shape, used by the bits/n ledger that
+reproduces the paper's Table II accounting).
+
+Implemented (Table I of the paper):
+  identity, qsgd (random dithering), natural, terngrad, bernoulli, rand-k
+  — all unbiased —
+  and top-k (biased, proof-of-concept, exactly as the paper uses it).
+
+All randomness is explicit via jax PRNG keys. ``apply`` returns the
+*dequantized* value C(x) (same shape/dtype as x); quantized wire payloads
+for the Pallas fast path live in :mod:`repro.kernels`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Compressor", "Identity", "QSGD", "Natural", "TernGrad", "Bernoulli",
+    "RandK", "TopK", "make_compressor", "tree_apply", "tree_wire_bits",
+    "joint_omega",
+]
+
+
+def _nelem(shape) -> int:
+    return int(np.prod(shape)) if len(shape) else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base class. Subclasses implement _apply_flat on float32 arrays
+    (1-D unless ``elementwise``, in which case any shape)."""
+
+    name: str = dataclasses.field(default="base", init=False)
+    # elementwise operators skip the reshape(-1): under SPMD a flatten of a
+    # model-axis-sharded weight forces an all-gather of the full matrix
+    # before compression (observed in the baseline dry-run HLO, §Perf it.1)
+    elementwise: bool = dataclasses.field(default=False, init=False)
+
+    # -- public API ---------------------------------------------------------
+    def apply(self, key: jax.Array, x: jax.Array) -> jax.Array:
+        """Return C(x) with x of any shape; dtype preserved."""
+        orig_dtype = x.dtype
+        if self.elementwise:
+            return self._apply_flat(key, x.astype(jnp.float32)).astype(orig_dtype)
+        flat = x.reshape(-1).astype(jnp.float32)
+        out = self._apply_flat(key, flat)
+        return out.reshape(x.shape).astype(orig_dtype)
+
+    def omega(self, shape) -> float:
+        """Variance factor omega for an array of this shape (Assumption 1)."""
+        raise NotImplementedError
+
+    def wire_bits(self, shape) -> float:
+        """Bits sent on the wire for an array of this shape."""
+        raise NotImplementedError
+
+    # -- subclass hook -------------------------------------------------------
+    def _apply_flat(self, key: jax.Array, x: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity(Compressor):
+    """No compression: omega = 0, 32 bits/element."""
+
+    name: str = dataclasses.field(default="identity", init=False)
+    elementwise: bool = dataclasses.field(default=True, init=False)
+
+    def _apply_flat(self, key, x):
+        return x
+
+    def omega(self, shape) -> float:
+        return 0.0
+
+    def wire_bits(self, shape) -> float:
+        return 32.0 * _nelem(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGD(Compressor):
+    """QSGD / random dithering [Alistarh et al. 2017] with ``levels`` levels.
+
+    Per bucket of size ``bucket``:  C(x) = ||x||_2 * sign(x) * xi / s where
+    xi randomly rounds s|x|/||x|| up or down to an integer.  Unbiased with
+    omega = min(d/s^2, sqrt(d)/s) for bucket dimension d.
+    """
+
+    levels: int = 127          # s; 127 -> payload fits int8 magnitudes
+    bucket: int = 2048
+    name: str = dataclasses.field(default="qsgd", init=False)
+
+    def _apply_flat(self, key, x):
+        d = x.shape[0]
+        b = self.bucket
+        pad = (-d) % b
+        xp = jnp.pad(x, (0, pad)).reshape(-1, b)
+        norm = jnp.linalg.norm(xp, axis=1, keepdims=True)
+        safe = jnp.where(norm == 0.0, 1.0, norm)
+        s = float(self.levels)
+        scaled = jnp.abs(xp) / safe * s
+        lo = jnp.floor(scaled)
+        prob = scaled - lo
+        u = jax.random.uniform(key, xp.shape)
+        q = lo + (u < prob).astype(jnp.float32)
+        out = jnp.sign(xp) * q / s * norm
+        out = jnp.where(norm == 0.0, 0.0, out)
+        return out.reshape(-1)[:d]
+
+    def omega(self, shape) -> float:
+        d = min(self.bucket, _nelem(shape))
+        s = float(self.levels)
+        return min(d / s**2, math.sqrt(d) / s)
+
+    def wire_bits(self, shape) -> float:
+        n = _nelem(shape)
+        n_buckets = math.ceil(n / self.bucket)
+        bits_per_el = math.log2(2 * self.levels + 1)
+        return n * bits_per_el + 32.0 * n_buckets  # payload + per-bucket norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Natural(Compressor):
+    """Natural compression [Horvath et al. 2019]: stochastic rounding of the
+    magnitude to a power of two.  omega = 1/8, 9 bits/element (sign+exp).
+
+    Implemented with float32 bit manipulation: probability of rounding the
+    exponent up equals mantissa / 2^23, which makes it exactly unbiased.
+    """
+
+    name: str = dataclasses.field(default="natural", init=False)
+    elementwise: bool = dataclasses.field(default=True, init=False)
+
+    def _apply_flat(self, key, x):
+        bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+        mantissa = bits & jnp.uint32(0x7FFFFF)
+        prob = mantissa.astype(jnp.float32) * (1.0 / float(1 << 23))
+        u = jax.random.uniform(key, x.shape)
+        up = (u < prob).astype(jnp.uint32)
+        # zero the mantissa; bump exponent with prob = mantissa/2^23
+        rounded = (bits & jnp.uint32(0xFF800000)) + (up << 23)
+        out = jax.lax.bitcast_convert_type(rounded, jnp.float32)
+        # exact zeros / non-finite values pass through untouched
+        passthrough = (x == 0.0) | ~jnp.isfinite(x)
+        return jnp.where(passthrough, x, out)
+
+    def omega(self, shape) -> float:
+        return 0.125
+
+    def wire_bits(self, shape) -> float:
+        return 9.0 * _nelem(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class TernGrad(Compressor):
+    """TernGrad [Wen et al. 2017]: C(x) = ||x||_inf * sign(x) * b, with
+    b ~ Bernoulli(|x| / ||x||_inf) per coordinate (per bucket).
+    Unbiased; omega <= max_i ||x||_inf * d / ||x||_2^2 - 1 (worst case d-1;
+    we report the standard bound sqrt(d))."""
+
+    bucket: int = 2048
+    name: str = dataclasses.field(default="terngrad", init=False)
+
+    def _apply_flat(self, key, x):
+        d = x.shape[0]
+        b = self.bucket
+        pad = (-d) % b
+        xp = jnp.pad(x, (0, pad)).reshape(-1, b)
+        mx = jnp.max(jnp.abs(xp), axis=1, keepdims=True)
+        safe = jnp.where(mx == 0.0, 1.0, mx)
+        prob = jnp.abs(xp) / safe
+        u = jax.random.uniform(key, xp.shape)
+        tern = (u < prob).astype(jnp.float32) * jnp.sign(xp)
+        out = tern * mx
+        return out.reshape(-1)[:d]
+
+    def omega(self, shape) -> float:
+        # E||C(x)-x||^2 = sum |x_i|(M - |x_i|) <= (sqrt(d) - 1) ||x||^2
+        d = min(self.bucket, _nelem(shape))
+        return max(math.sqrt(d) - 1.0, 0.0)
+
+    def wire_bits(self, shape) -> float:
+        n = _nelem(shape)
+        n_buckets = math.ceil(n / self.bucket)
+        return n * math.log2(3.0) + 32.0 * n_buckets
+
+
+@dataclasses.dataclass(frozen=True)
+class Bernoulli(Compressor):
+    """Bernoulli sparsifier [Khirirat et al. 2018]: C(x)_j = x_j b_j / q,
+    b_j ~ Bern(q).  Unbiased with omega = (1 - q)/q."""
+
+    q: float = 0.25
+    name: str = dataclasses.field(default="bernoulli", init=False)
+    elementwise: bool = dataclasses.field(default=True, init=False)
+
+    def _apply_flat(self, key, x):
+        b = jax.random.bernoulli(key, self.q, x.shape)
+        return jnp.where(b, x / self.q, 0.0)
+
+    def omega(self, shape) -> float:
+        return (1.0 - self.q) / self.q
+
+    def wire_bits(self, shape) -> float:
+        n = _nelem(shape)
+        # expected q*n surviving (value + index) entries
+        idx_bits = max(math.log2(max(n, 2)), 1.0)
+        return self.q * n * (32.0 + idx_bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandK(Compressor):
+    """rand-k sparsifier: keep a uniformly random k-subset, scaled by d/k.
+    Unbiased with omega = d/k - 1.  ``fraction`` = k/d."""
+
+    fraction: float = 0.1
+    name: str = dataclasses.field(default="randk", init=False)
+
+    def _apply_flat(self, key, x):
+        d = x.shape[0]
+        k = max(int(round(self.fraction * d)), 1)
+        perm = jax.random.permutation(key, d)
+        mask = jnp.zeros((d,), jnp.bool_).at[perm[:k]].set(True)
+        return jnp.where(mask, x * (d / k), 0.0)
+
+    def omega(self, shape) -> float:
+        d = _nelem(shape)
+        k = max(int(round(self.fraction * d)), 1)
+        return d / k - 1.0
+
+    def wire_bits(self, shape) -> float:
+        d = _nelem(shape)
+        k = max(int(round(self.fraction * d)), 1)
+        idx_bits = max(math.log2(max(d, 2)), 1.0)
+        return k * (32.0 + idx_bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    """Top-k sparsifier [Aji & Heafield 2017] — BIASED.  The paper uses it
+    as an empirical proof-of-concept only; no omega guarantee (we report the
+    deterministic contraction bound (1 - k/d) for reference)."""
+
+    fraction: float = 0.1
+    name: str = dataclasses.field(default="topk", init=False)
+
+    def _apply_flat(self, key, x):
+        del key  # deterministic
+        d = x.shape[0]
+        k = max(int(round(self.fraction * d)), 1)
+        thresh = jax.lax.top_k(jnp.abs(x), k)[0][-1]
+        return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+    def omega(self, shape) -> float:
+        # NOT an unbiasedness-variance factor; contraction parameter only.
+        d = _nelem(shape)
+        k = max(int(round(self.fraction * d)), 1)
+        return 1.0 - k / d
+
+    def wire_bits(self, shape) -> float:
+        d = _nelem(shape)
+        k = max(int(round(self.fraction * d)), 1)
+        idx_bits = max(math.log2(max(d, 2)), 1.0)
+        return k * (32.0 + idx_bits)
+
+
+_REGISTRY = {
+    "identity": Identity,
+    "qsgd": QSGD,
+    "natural": Natural,
+    "terngrad": TernGrad,
+    "bernoulli": Bernoulli,
+    "randk": RandK,
+    "topk": TopK,
+}
+
+
+def make_compressor(name: str, **kwargs) -> Compressor:
+    """Factory: ``make_compressor('qsgd', levels=15)``."""
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)
+
+
+# --------------------------------------------------------------------------
+# pytree helpers
+# --------------------------------------------------------------------------
+
+def tree_apply(comp: Compressor, key: jax.Array, tree):
+    """Apply a compressor leaf-wise with independent per-leaf keys."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = [comp.apply(k, leaf) for k, leaf in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_wire_bits(comp: Compressor, tree) -> float:
+    """Total wire bits to send a compressed pytree once."""
+    return sum(comp.wire_bits(leaf.shape) for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def joint_omega(omegas) -> float:
+    """Lemma 1: the joint operator C = (C_1,...,C_n) has omega = max_i omega_i."""
+    return max(omegas)

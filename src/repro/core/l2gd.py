@@ -1,0 +1,158 @@
+"""Compressed L2GD — Algorithm 1 of the paper, as a jit-able step.
+
+State layout: the n personalized models are a *stacked* pytree whose
+leaves have a leading client axis (size n).  In the single-host simulator
+that axis lives on one device; in the distributed runtime it is sharded
+over the mesh's client ("data" × "pod") axes, and the same code produces
+the collectives (see repro/launch).
+
+The probabilistic protocol is a 3-way ``lax.switch``:
+
+  branch 0  (xi_k = 0)                : local gradient step, NO communication
+  branch 1  (xi_k = 1, xi_{k-1} = 0)  : aggregation with fresh compressed
+                                        communication (uplink C_i, downlink C_M)
+  branch 2  (xi_k = 1, xi_{k-1} = 1)  : aggregation against the cached
+                                        target, NO communication
+
+Step scalings follow the paper exactly: local ``eta/(n(1-p)) * grad f_i``,
+aggregation ``(eta lam)/(n p) * (x_i - target)``.
+
+Caching subtlety (documented deviation-free reading of Algorithm 1): after
+a fresh-communication aggregation the devices cache the value they
+actually received, ``t = C_M(ybar^k)``, and reuse it for consecutive
+aggregation steps; at initialization the cache holds the exact
+``xbar^{-1}`` (given as algorithm input).  In the uncompressed case
+``t = xbar^k`` and the average is invariant across consecutive aggregation
+steps, which is precisely the paper's statement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import compressed_average
+from repro.core.compressors import Compressor, Identity
+
+__all__ = ["L2GDHyper", "L2GDState", "init_state", "l2gd_step",
+           "local_update", "aggregation_update", "draw_xi"]
+
+
+@dataclasses.dataclass(frozen=True)
+class L2GDHyper:
+    """Meta-parameters of Algorithm 1."""
+
+    eta: float          # stepsize
+    lam: float          # personalization penalty lambda
+    p: float            # aggregation probability
+    n: int              # number of clients
+
+    def __post_init__(self):
+        if not (0.0 < self.p < 1.0):
+            raise ValueError(f"p must be in (0,1), got {self.p}")
+        if self.lam < 0.0:
+            raise ValueError("lambda must be >= 0")
+
+    @property
+    def local_scale(self) -> float:
+        return self.eta / (self.n * (1.0 - self.p))
+
+    @property
+    def agg_scale(self) -> float:
+        # eta*lam/(n p); the paper observes best behaviour for values ~1 or <=0.17
+        return self.eta * self.lam / (self.n * self.p)
+
+
+class L2GDState(NamedTuple):
+    params: Any         # stacked client params, leading axis n
+    cache: Any          # cached aggregation target (no client axis)
+    xi_prev: jax.Array  # int32 scalar: xi_{k-1}
+    step: jax.Array     # int32 scalar
+
+
+def init_state(params_stacked) -> L2GDState:
+    """xi_{-1} = 1 and cache = exact xbar^{-1}, per Algorithm 1's input line."""
+    cache = jax.tree.map(lambda a: jnp.mean(a, axis=0), params_stacked)
+    return L2GDState(params=params_stacked, cache=cache,
+                     xi_prev=jnp.asarray(1, jnp.int32),
+                     step=jnp.asarray(0, jnp.int32))
+
+
+def local_update(params_stacked, grads_stacked, hp: L2GDHyper):
+    """x_i <- x_i - eta/(n(1-p)) grad f_i(x_i), all clients at once."""
+    s = hp.local_scale
+    return jax.tree.map(lambda x, g: x - s * g.astype(x.dtype), params_stacked,
+                        grads_stacked)
+
+
+def aggregation_update(params_stacked, target, hp: L2GDHyper):
+    """x_i <- x_i - (eta lam)/(n p) (x_i - t); t broadcast over the client axis."""
+    c = hp.agg_scale
+    return jax.tree.map(
+        lambda x, t: x - jnp.asarray(c, x.dtype) * (x - t[None].astype(x.dtype)),
+        params_stacked, target)
+
+
+def draw_xi(key: jax.Array, p: float) -> jax.Array:
+    return jax.random.bernoulli(key, p).astype(jnp.int32)
+
+
+def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
+              grad_fn: Callable, hp: L2GDHyper,
+              client_comp: Compressor = Identity(),
+              master_comp: Compressor = Identity(),
+              average_fn: Callable = None):
+    """One step of Algorithm 1.
+
+    Args:
+      state: current :class:`L2GDState`.
+      batch: per-client batch pytree, leaves with leading client axis n.
+      xi_k:  int32 scalar Bernoulli(p) draw for this step (drawn by the host
+             driver so the bits ledger sees the protocol, or via
+             :func:`draw_xi` under jit).
+      key:   PRNG key for compressor randomness.
+      grad_fn: per-client ``(params_i, batch_i) -> (loss_i, grads_i)``.
+      hp:    hyper-parameters.
+      client_comp / master_comp: C_i (identical across i, as in the paper's
+             experiments) and C_M.
+      average_fn: optional override of the compressed-average realization,
+             ``(key, params_stacked) -> target`` — used by the beyond-paper
+             wire-compressed shard_map aggregation (see repro.launch.steps).
+
+    Returns: (new_state, metrics dict).  Metrics include the mean client
+    loss (evaluated in branch 0; NaN-free zeros otherwise) and the branch id.
+    """
+    branch = jnp.where(xi_k == 0, 0, jnp.where(state.xi_prev == 0, 1, 2))
+
+    def branch_local(op):
+        st, k = op
+        losses, grads = jax.vmap(grad_fn)(st.params, batch)
+        new_params = local_update(st.params, grads, hp)
+        return (L2GDState(new_params, st.cache, jnp.asarray(0, jnp.int32),
+                          st.step + 1),
+                jnp.mean(losses))
+
+    def branch_agg_fresh(op):
+        st, k = op
+        if average_fn is not None:
+            target = average_fn(k, st.params)
+        else:
+            target = compressed_average(k, st.params, client_comp, master_comp)
+        new_params = aggregation_update(st.params, target, hp)
+        return (L2GDState(new_params, target, jnp.asarray(1, jnp.int32),
+                          st.step + 1),
+                jnp.asarray(0.0, jnp.float32))
+
+    def branch_agg_cached(op):
+        st, k = op
+        new_params = aggregation_update(st.params, st.cache, hp)
+        return (L2GDState(new_params, st.cache, jnp.asarray(1, jnp.int32),
+                          st.step + 1),
+                jnp.asarray(0.0, jnp.float32))
+
+    new_state, loss = jax.lax.switch(
+        branch, [branch_local, branch_agg_fresh, branch_agg_cached],
+        (state, key))
+    return new_state, {"loss": loss, "branch": branch}

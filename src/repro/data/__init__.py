@@ -1,0 +1,5 @@
+"""Data substrate: Dirichlet non-IID partitioner, the paper-native synthetic
+logistic-regression dataset, and heterogeneous synthetic token streams."""
+from repro.data.partition import dirichlet_partition, shard_partition
+from repro.data.logreg import LogRegData, make_logreg_data, logreg_loss_and_grad
+from repro.data.tokens import TokenStream, make_client_batch

@@ -1,0 +1,81 @@
+"""Host-side protocol driver for compressed L2GD (Algorithm 1).
+
+The driver owns the probabilistic protocol: it draws xi_k ~ Bernoulli(p) on
+the host (so the bits ledger sees exactly when a local->aggregation
+transition triggers communication), feeds the draw into the single jitted
+:func:`repro.core.l2gd.l2gd_step`, and records bits/n per the paper's
+accounting.  The jitted step itself is branch-static (lax.switch), so there
+is exactly one compilation regardless of the protocol realization.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Compressor, Identity, L2GDHyper, init_state,
+                        l2gd_step, tree_wire_bits)
+from repro.fl.ledger import BitsLedger
+
+__all__ = ["L2GDRun", "run_l2gd"]
+
+
+@dataclasses.dataclass
+class L2GDRun:
+    state: object
+    ledger: BitsLedger
+    losses: list                 # (step, mean client loss) at local steps
+    evals: list                  # (step, eval value) if eval_fn given
+    n_local: int = 0
+    n_agg_comm: int = 0
+    n_agg_cached: int = 0
+
+
+def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
+             batch_fn: Callable[[int], object], steps: int,
+             client_comp: Compressor = Identity(),
+             master_comp: Compressor = Identity(),
+             eval_fn: Optional[Callable] = None, eval_every: int = 50,
+             seed: int = 0, jit: bool = True) -> L2GDRun:
+    """Run Algorithm 1 for ``steps`` iterations.
+
+    batch_fn(step) -> per-client batch pytree (leading client axis n).
+    grad_fn(params_i, batch_i) -> (loss_i, grads_i).
+    """
+    state = init_state(params_stacked)
+    ledger = BitsLedger(hp.n)
+    run = L2GDRun(state, ledger, [], [])
+    rng = np.random.default_rng(seed)
+
+    step_fn = lambda st, b, xi, k: l2gd_step(st, b, xi, k, grad_fn, hp,
+                                             client_comp, master_comp)
+    if jit:
+        step_fn = jax.jit(step_fn)
+
+    # wire bits for one client's model / one broadcast (shape-static)
+    one_client = jax.tree.map(lambda a: a[0], params_stacked)
+    up_bits = tree_wire_bits(client_comp, one_client)
+    down_bits = tree_wire_bits(master_comp, one_client)
+
+    xi_prev = 1  # Algorithm 1 input: xi_{-1} = 1
+    for k in range(steps):
+        key, sub = jax.random.split(key)
+        xi = int(rng.random() < hp.p)
+        state, metrics = step_fn(state, batch_fn(k), jnp.asarray(xi, jnp.int32),
+                                 sub)
+        if xi == 0:
+            run.n_local += 1
+            run.losses.append((k, float(metrics["loss"])))
+        elif xi_prev == 0:
+            run.n_agg_comm += 1
+            ledger.record_round(up_bits, down_bits, step=k)
+        else:
+            run.n_agg_cached += 1
+        xi_prev = xi
+        if eval_fn is not None and (k + 1) % eval_every == 0:
+            run.evals.append((k, float(eval_fn(state.params))))
+    run.state = state
+    return run

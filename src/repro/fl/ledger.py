@@ -1,0 +1,43 @@
+"""bits/n accounting — the paper's Table II metric.
+
+The paper measures 'communicated bits normalized by the number of local
+devices (#bits/n)' to reach a target quality.  We charge:
+
+  * uplink:   each client sends its compressed payload to the master
+              -> sum_i wire_bits(C_i, model) / n = wire_bits per client
+  * downlink: the master broadcasts the compressed average to all n clients
+              -> n * wire_bits(C_M, model) / n = wire_bits(C_M, model)
+
+Communication only happens on local->aggregation transitions (xi_k = 1,
+xi_{k-1} = 0); the ledger is driven by the host protocol loop, which is the
+single source of truth for when a round happened.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+__all__ = ["BitsLedger"]
+
+
+@dataclasses.dataclass
+class BitsLedger:
+    n_clients: int
+    uplink_bits_per_client: float = 0.0
+    downlink_bits_per_client: float = 0.0
+    rounds: int = 0
+    history: List[dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def bits_per_client(self) -> float:
+        return self.uplink_bits_per_client + self.downlink_bits_per_client
+
+    def record_round(self, uplink_bits_one_client: float,
+                     downlink_bits: float, step: int | None = None) -> None:
+        self.uplink_bits_per_client += uplink_bits_one_client
+        self.downlink_bits_per_client += downlink_bits
+        self.rounds += 1
+        self.history.append({
+            "step": step, "round": self.rounds,
+            "bits_per_client": self.bits_per_client,
+        })

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical hot spots, each as
+<name>/{kernel,ops,ref}.py and validated in interpret mode on CPU:
+
+  qsgd            — fused QSGD quantize-dequantize (communication path)
+  natural         — natural compression bit-twiddle (communication path)
+  selective_scan  — Mamba S6 scan with VMEM-resident state
+  flash_attention — streaming-softmax causal/windowed attention
+"""
+from repro.kernels.qsgd.ops import qsgd_compress
+from repro.kernels.natural.ops import natural_compress
+from repro.kernels.selective_scan.ops import selective_scan_op
+from repro.kernels.flash_attention.ops import flash_attention_op

@@ -1,0 +1,27 @@
+"""jit'd wrapper: (B,S,H,D)-layout entry point with GQA repeat + padding."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+__all__ = ["flash_attention_op"]
+
+
+def flash_attention_op(q, k, v, *, causal: bool = True,
+                       window: int | None = None, bq: int = 128,
+                       bk: int = 128, interpret: bool = True):
+    """q: (B,S,H,D), k/v: (B,T,Kv,D) with H % Kv == 0.  Returns (B,S,H,D)."""
+    B, S, H, D = q.shape
+    Kv = k.shape[2]
+    if Kv != H:
+        rep = H // Kv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          bq=min(bq, S), bk=min(bk, kt.shape[2]),
+                          interpret=interpret)
+    return out.swapaxes(1, 2)

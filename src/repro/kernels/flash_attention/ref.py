@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: dense softmax attention with causal/window masks."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int | None = None):
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = mask & (kj <= qi)
+    if window is not None:
+        mask = mask & (qi - kj < window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)).astype(q.dtype)

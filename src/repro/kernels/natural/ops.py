@@ -1,0 +1,21 @@
+"""jit'd wrapper: natural compression of arbitrary arrays via the kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.natural.kernel import natural_compress_2d
+
+__all__ = ["natural_compress"]
+
+_LANE = 128
+
+
+def natural_compress(key, x, *, interpret: bool = True):
+    flat = x.reshape(-1).astype(jnp.float32)
+    d = flat.shape[0]
+    pad = (-d) % _LANE
+    x2d = jnp.pad(flat, (0, pad)).reshape(-1, _LANE)
+    noise = jax.random.uniform(key, x2d.shape)
+    out = natural_compress_2d(x2d, noise, interpret=interpret)
+    return out.reshape(-1)[:d].reshape(x.shape).astype(x.dtype)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for natural compression (bit-exact: same noise input).
+Identical math to repro.core.compressors.Natural."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def natural_compress_ref(x2d, noise):
+    x = x2d.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    mantissa = bits & jnp.uint32(0x7FFFFF)
+    prob = mantissa.astype(jnp.float32) * (1.0 / float(1 << 23))
+    up = (noise < prob).astype(jnp.uint32)
+    rounded = (bits & jnp.uint32(0xFF800000)) + (up << 23)
+    out = jax.lax.bitcast_convert_type(rounded, jnp.float32)
+    passthrough = (x == 0.0) | ~jnp.isfinite(x)
+    return jnp.where(passthrough, x, out).astype(x2d.dtype)

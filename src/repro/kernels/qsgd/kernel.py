@@ -1,0 +1,61 @@
+"""QSGD (random dithering) quantize-dequantize — Pallas TPU kernel.
+
+This is the hot-spot on the communication path: every aggregation round
+each client quantizes its full model shard (O(params/chips) elements), and
+at production scale (123B params / 16-way model parallel) that is ~7.7e9
+elements per client per round.  Fusing scale computation + dithering +
+(de)quantization in one VMEM pass avoids three HBM round-trips of the
+jnp composition (abs -> norm -> scale -> floor -> select).
+
+Layout: the flat parameter vector is bucketed as (n_buckets, bucket); the
+kernel tiles ``rows`` buckets per grid step so the working set
+(rows x bucket x 4B x 3 arrays) fits in VMEM.  Dither noise is an explicit
+input (generated with jax.random outside) so the kernel is bit-exact
+against ref.py and deterministic under a fixed key.
+
+bucket is expected to be a multiple of 128 (lane dimension); rows x bucket
+tiles are MXU/VPU aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["qsgd_dequantized"]
+
+
+def _qsgd_kernel(x_ref, u_ref, o_ref, *, levels: int):
+    x = x_ref[...].astype(jnp.float32)                  # (rows, bucket)
+    u = u_ref[...]
+    norm = jnp.sqrt(jnp.sum(x * x, axis=1, keepdims=True))
+    safe = jnp.where(norm == 0.0, 1.0, norm)
+    s = float(levels)
+    scaled = jnp.abs(x) / safe * s
+    lo = jnp.floor(scaled)
+    q = lo + (u < (scaled - lo)).astype(jnp.float32)
+    out = jnp.sign(x) * q * (norm / s)
+    o_ref[...] = jnp.where(norm == 0.0, 0.0, out).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "rows", "interpret"))
+def qsgd_dequantized(x2d: jax.Array, noise: jax.Array, *, levels: int = 127,
+                     rows: int = 8, interpret: bool = True) -> jax.Array:
+    """x2d: (n_buckets, bucket) float32; noise: same shape uniform [0,1).
+    Returns the dequantized compressed value, same shape."""
+    n, b = x2d.shape
+    rows = min(rows, n)
+    grid = (pl.cdiv(n, rows),)
+    return pl.pallas_call(
+        functools.partial(_qsgd_kernel, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, b), lambda i: (i, 0)),
+            pl.BlockSpec((rows, b), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b), x2d.dtype),
+        interpret=interpret,
+    )(x2d, noise)

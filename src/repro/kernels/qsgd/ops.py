@@ -1,0 +1,22 @@
+"""jit'd public wrapper: flat-pytree-leaf QSGD compression via the Pallas
+kernel, with padding/bucketing handled here."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qsgd.kernel import qsgd_dequantized
+
+__all__ = ["qsgd_compress"]
+
+
+def qsgd_compress(key, x, *, levels: int = 127, bucket: int = 2048,
+                  interpret: bool = True):
+    """Quantize-dequantize an arbitrary-shape array (compressor semantics)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    d = flat.shape[0]
+    pad = (-d) % bucket
+    x2d = jnp.pad(flat, (0, pad)).reshape(-1, bucket)
+    noise = jax.random.uniform(key, x2d.shape)
+    out = qsgd_dequantized(x2d, noise, levels=levels, interpret=interpret)
+    return out.reshape(-1)[:d].reshape(x.shape).astype(x.dtype)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the QSGD kernel (bit-exact: same noise input)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qsgd_dequantized_ref(x2d, noise, *, levels: int = 127):
+    x = x2d.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(x * x, axis=1, keepdims=True))
+    safe = jnp.where(norm == 0.0, 1.0, norm)
+    s = float(levels)
+    scaled = jnp.abs(x) / safe * s
+    lo = jnp.floor(scaled)
+    q = lo + (noise < (scaled - lo)).astype(jnp.float32)
+    out = jnp.sign(x) * q * (norm / s)
+    return jnp.where(norm == 0.0, 0.0, out).astype(x2d.dtype)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the selective scan: the straightforward sequential
+recurrence (also exercised indirectly by repro.models.mamba's chunked
+associative-scan, which is itself validated against this)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(dt, Bm, Cm, x, A):
+    """dt/x: (B,L,E); Bm/Cm: (B,L,N); A: (E,N) -> y (B,L,E)."""
+    B, L, E = x.shape
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp
+        decay = jnp.exp(dt_t[..., None] * A[None])            # (B,E,N)
+        drive = (dt_t * x_t)[..., None] * b_t[:, None, :]
+        h = decay * h + drive
+        y = jnp.sum(h * c_t[:, None, :], axis=-1)
+        return h, y
+
+    h0 = jnp.zeros((B, E, A.shape[1]), jnp.float32)
+    xs = (dt.swapaxes(0, 1).astype(jnp.float32),
+          Bm.swapaxes(0, 1).astype(jnp.float32),
+          Cm.swapaxes(0, 1).astype(jnp.float32),
+          x.swapaxes(0, 1).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype)

@@ -1,0 +1,6 @@
+"""Launch layer: production mesh, sharding rules, the multi-pod dry-run,
+and the train/serve entry points.
+
+NOTE: do NOT import repro.launch.dryrun from library code — it sets
+XLA_FLAGS for 512 placeholder devices at import time (by design)."""
+from repro.launch.mesh import make_production_mesh, client_axes, n_clients_of

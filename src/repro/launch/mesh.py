@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — smoke tests must keep seeing one
+CPU device; only dryrun.py sets the 512-placeholder-device XLA flag.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e-256-class).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the FL client axis is
+(pod, data) = 32 clients, so the aggregation collective spans the
+inter-pod links — exactly the regime the paper's compression targets.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "client_axes", "n_clients_of"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def client_axes(mesh) -> tuple:
+    """Mesh axes that together form the FL client axis."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def n_clients_of(mesh) -> int:
+    n = 1
+    for a in client_axes(mesh):
+        n *= mesh.shape[a]
+    return n

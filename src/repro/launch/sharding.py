@@ -1,0 +1,183 @@
+"""Sharding rules: param-path -> PartitionSpec.
+
+Megatron-style tensor parallelism over the "model" axis + the FL client
+axis over ("pod","data") for stacked personalized models:
+
+  * attention qkv: shard the fused head output dim; o-proj input dim
+  * MLP: shard d_ff (gate/up output, down input)
+  * MoE: shard the EXPERT dim (expert parallelism) — router replicated
+  * Mamba: shard d_inner everywhere (in/out proj, conv, A, D, dt)
+  * embedding / lm head: shard the vocab dim
+  * norms, small biases: replicated
+
+Every rule checks divisibility by the mesh's model-axis size and falls
+back to replication when a dim does not divide (e.g. gemma3's single KV
+head — its fused kv dim 1*256 still divides 16, so it shards).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["param_pspecs", "batch_pspec", "cache_pspecs", "tree_shardings",
+           "MODEL_AXIS"]
+
+MODEL_AXIS = "model"
+
+
+def _path_names(path) -> list:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def _leaf_spec(names: list, shape, model_size: int, n_prefix: int,
+               serve_mode: bool = False):
+    """PartitionSpec dims for one param leaf AFTER ``n_prefix`` leading axes
+    (client axis and/or layer-stacking axis) which the caller fills."""
+    name = names[-1]
+    body = shape[n_prefix:]
+    nd = len(body)
+    div = lambda i: body[i] % model_size == 0
+
+    def spec(*dims):
+        return list(dims)
+
+    # --- MoE experts: 3-D (E, d, ff) / router 2-D handled below ------------
+    if name in ("w_gate", "w_up", "w_down") and nd == 3:
+        return spec(MODEL_AXIS if body[0] % model_size == 0 else None,
+                    None, None)
+    if name in ("w_gate", "w_up", "shared_gate", "shared_up", "w_in") and nd == 2:
+        return spec(None, MODEL_AXIS if div(1) else None)
+    if name in ("w_down", "shared_down") and nd == 2:
+        return spec(MODEL_AXIS if div(0) else None, None)
+    if name == "router":
+        return spec(None, None)
+    # --- attention ---------------------------------------------------------
+    if name in ("wq", "wk", "wv", "wqkv", "w_uk", "w_uv") and nd == 2:
+        return spec(None, MODEL_AXIS if div(1) else None)
+    if name == "wo" and nd == 2:
+        return spec(MODEL_AXIS if div(0) else None, None)
+    # split layout (d, H, hd) / (H, hd, d): serve shards head_dim so the
+    # KV-cache update stays reshard-free; train shards heads when divisible
+    if name in ("wq", "wk", "wv") and nd == 3:
+        if serve_mode and div(2):
+            return spec(None, None, MODEL_AXIS)
+        if not serve_mode and div(1):
+            return spec(None, MODEL_AXIS, None)
+        if div(2):
+            return spec(None, None, MODEL_AXIS)
+        return spec(None, None, None)
+    if name == "wo" and nd == 3:
+        if serve_mode and div(1):
+            return spec(None, MODEL_AXIS, None)
+        if not serve_mode and div(0):
+            return spec(MODEL_AXIS, None, None)
+        if div(1):
+            return spec(None, MODEL_AXIS, None)
+        return spec(None, None, None)
+    if name == "w_dkv":
+        return spec(None, None)
+    # --- embedding ----------------------------------------------------------
+    if name == "table":
+        return spec(MODEL_AXIS if div(0) else None, None)
+    # --- mamba ---------------------------------------------------------------
+    if name in ("in_proj_x", "in_proj_z", "dt_proj") and nd == 2:
+        return spec(None, MODEL_AXIS if div(1) else None)
+    if name in ("x_proj", "out_proj", "A_log") and nd == 2:
+        return spec(MODEL_AXIS if div(0) else None, None)
+    if name == "conv_w":
+        return spec(None, MODEL_AXIS if div(1) else None)
+    if name in ("conv_b", "dt_bias", "D") and nd == 1:
+        return spec(MODEL_AXIS if div(0) else None)
+    # --- norms / everything else: replicated --------------------------------
+    return spec(*([None] * nd))
+
+
+def param_pspecs(params_shapes, model_size: int, client_axes: tuple = (),
+                 stacked_layers: bool = True, serve_mode: bool = False):
+    """PartitionSpec pytree for a param tree (ShapeDtypeStructs or arrays).
+
+    client_axes: () for a single (unstacked) model, or e.g. ("data",) /
+    ("pod","data") when leaves carry a leading client axis.
+    """
+    n_client = 1 if client_axes else 0
+
+    def one(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        # prefix axes: [client] + [layer-stack if inside a layer group]
+        in_layer_group = any(n in ("layers", "dense_layers", "encoder", "cross")
+                             for n in names)
+        n_prefix = n_client + (1 if (in_layer_group and stacked_layers) else 0)
+        body_spec = _leaf_spec(names, shape, model_size, n_prefix, serve_mode)
+        prefix = []
+        if n_client:
+            prefix.append(client_axes if len(client_axes) > 1 else client_axes[0])
+        if in_layer_group and stacked_layers:
+            prefix.append(None)
+        return P(*(prefix + body_spec))
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def batch_pspec(client_axes: tuple, extra_dims: int = 2):
+    """Spec for per-client batches (n_clients, per_batch, seq[, d])."""
+    lead = client_axes if len(client_axes) > 1 else client_axes[0]
+    return P(*([lead] + [None] * extra_dims))
+
+
+def cache_pspecs(caches_shapes, model_size: int, *, batch_axis: Optional[str],
+                 seq_axis: Optional[str], axis_sizes: Optional[dict] = None):
+    """Specs for decode caches.  KV tensors are (B, C, Kv, hd) (GQA),
+    (B, C, R) (MLA latent), (B, K-1, E)/(B, E, N) (Mamba).  ``batch_axis``
+    shards B (decode_32k); ``seq_axis`` shards the capacity dim C
+    (long_500k context parallelism).  The last dim additionally shards over
+    "model" when divisible."""
+
+    def one(path, leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        dims = [None] * nd
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        is_kv = name in ("k", "v", "c_kv", "k_rope", "cross_k", "cross_v")
+        is_mamba_conv = name == "conv"
+        is_mamba_h = name == "h"
+        if batch_axis is not None and shape[0] % _axis_size(batch_axis) == 0:
+            dims[0] = batch_axis
+        if seq_axis is not None and is_kv and nd >= 2 \
+                and shape[1] % _axis_size(seq_axis) == 0:
+            dims[1] = seq_axis
+        if is_kv and shape[-1] % model_size == 0:
+            dims[-1] = MODEL_AXIS            # head_dim / latent rank
+        elif is_mamba_conv and shape[-1] % model_size == 0:
+            dims[-1] = MODEL_AXIS            # d_inner
+        elif is_mamba_h and nd >= 2 and shape[1] % model_size == 0:
+            dims[1] = MODEL_AXIS             # d_inner (NOT the tiny N dim)
+        return P(*dims)
+
+    def _axis_size(axis) -> int:
+        sizes = axis_sizes or {}
+        if isinstance(axis, tuple):
+            n = 1
+            for a in axis:
+                n *= sizes.get(a, 16)
+            return n
+        return sizes.get(axis, 16)
+
+    return jax.tree_util.tree_map_with_path(one, caches_shapes)
+
+
+def tree_shardings(mesh, pspec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,144 @@
+"""Step builders + input specs for every (arch x input-shape) pair.
+
+``input_specs(cfg, shape, n_clients)`` returns ShapeDtypeStruct stand-ins
+for every model input — weak-type-correct, shardable, no device allocation
+(the dry-run lowers against these).  Frontend embeddings for [vlm]/[audio]
+archs are supplied directly (stub carve-out).
+
+Step semantics per shape kind:
+  train    -> compressed-L2GD train step (Algorithm 1, 3-way lax.switch:
+              the aggregation branch carries the compressed collectives)
+  prefill  -> full-sequence forward, last-position logits
+  decode   -> one-token decode against a KV/SSM cache of seq_len
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.core import Compressor, Identity, L2GDHyper, L2GDState, l2gd_step
+from repro.models import (decode_step, forward, init_caches, init_params,
+                          loss_fn)
+
+__all__ = ["input_specs", "state_specs", "cache_specs", "build_train_step",
+           "build_prefill_step", "build_serve_step", "stacked_param_shapes"]
+
+_I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _cdt(cfg: ArchConfig):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.compute_dtype]
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, n_clients: int) -> dict:
+    """ShapeDtypeStruct batch for one step of the given kind."""
+    cdt = _cdt(cfg)
+    if shape.kind == "train":
+        per = shape.global_batch // n_clients
+        assert per >= 1, (shape.name, n_clients)
+        s = shape.seq_len
+        batch = {}
+        if cfg.frontend == "vision":
+            p = cfg.n_frontend_tokens
+            batch["patches"] = _sds((n_clients, per, p, cfg.d_model), cdt)
+            batch["tokens"] = _sds((n_clients, per, s - p), _I32)
+        elif cfg.is_encdec:
+            batch["frames"] = _sds((n_clients, per, cfg.n_frontend_tokens,
+                                    cfg.d_model), cdt)
+            batch["tokens"] = _sds((n_clients, per, s), _I32)
+        else:
+            batch["tokens"] = _sds((n_clients, per, s), _I32)
+        return batch
+    if shape.kind == "prefill":
+        B, s = shape.global_batch, shape.seq_len
+        batch = {}
+        if cfg.frontend == "vision":
+            p = cfg.n_frontend_tokens
+            batch["patches"] = _sds((B, p, cfg.d_model), cdt)
+            batch["tokens"] = _sds((B, s - p), _I32)
+        elif cfg.is_encdec:
+            batch["frames"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model), cdt)
+            batch["tokens"] = _sds((B, s), _I32)
+        else:
+            batch["tokens"] = _sds((B, s), _I32)
+        return batch
+    # decode
+    return {"tokens": _sds((shape.global_batch, 1), _I32)}
+
+
+def stacked_param_shapes(cfg: ArchConfig, n_clients: int):
+    """Client-stacked parameter ShapeDtypeStructs via eval_shape."""
+
+    def make(key):
+        keys = jax.random.split(key, n_clients)
+        return jax.vmap(lambda k: init_params(k, cfg))(keys)
+
+    return jax.eval_shape(make, jax.random.PRNGKey(0))
+
+
+def param_shapes(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def state_specs(cfg: ArchConfig, n_clients: int) -> L2GDState:
+    """L2GDState ShapeDtypeStructs for the train dry-run."""
+    params = stacked_param_shapes(cfg, n_clients)
+    cache = jax.tree.map(lambda s: _sds(s.shape[1:], s.dtype), params)
+    return L2GDState(params=params, cache=cache,
+                     xi_prev=_sds((), _I32), step=_sds((), _I32))
+
+
+def cache_specs(cfg: ArchConfig, batch: int, capacity: int):
+    return jax.eval_shape(functools.partial(init_caches, cfg, batch, capacity))
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ArchConfig, hp: L2GDHyper,
+                     client_comp: Compressor = Identity(),
+                     master_comp: Compressor = Identity(),
+                     average_fn=None):
+    """Compressed-L2GD step over client-stacked model params.
+
+    ``average_fn`` (optional) overrides the aggregation realization — used
+    by the beyond-paper wire-compressed shard_map variant (§Perf)."""
+
+    def grad_fn(params_i, batch_i):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch_i), has_aux=True)(params_i)
+        return loss, grads
+
+    def train_step(state: L2GDState, batch, xi: jax.Array,
+                   key_data: jax.Array):
+        key = jax.random.wrap_key_data(key_data)
+        new_state, metrics = l2gd_step(state, batch, xi, key, grad_fn, hp,
+                                       client_comp, master_comp,
+                                       average_fn=average_fn)
+        return new_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        logits, _ = forward(params, cfg, batch)
+        return logits[:, -1]
+    return prefill_step
+
+
+def build_serve_step(cfg: ArchConfig):
+    def serve_step(params, caches, index: jax.Array, batch):
+        logits, new_caches = decode_step(params, cfg, caches, index, batch)
+        return logits[:, 0], new_caches
+    return serve_step

@@ -1,0 +1,4 @@
+"""Model zoo substrate: composable attention/MoE/SSM/hybrid blocks and the
+unified config-driven model covering all 10 assigned architectures."""
+from repro.models.model import (init_params, forward, loss_fn, layer_kinds,
+                                init_caches, decode_step, param_count)

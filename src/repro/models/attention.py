@@ -1,0 +1,282 @@
+"""Attention variants: GQA (with optional sliding window + qk-norm), MLA
+(DeepSeek-V2 latent attention with decoupled RoPE and absorbed decode), and
+plain bidirectional/cross attention for the encoder-decoder arch.
+
+Two execution paths everywhere:
+  * train/prefill: full-sequence causal (optionally windowed) attention;
+  * decode: one new token against a KV cache.  Windowed layers use a ring
+    buffer of size ``window`` so a 524288-token serving config does not
+    materialize half a million KV slots for local layers.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import apply_rope, dense_init, init_rmsnorm, rmsnorm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# core softmax attention
+# ---------------------------------------------------------------------------
+
+def attention_core(q, k, v, mask=None, scale=None):
+    """q: (B,S,H,D), k/v: (B,T,K,D) with H % K == 0 (GQA repeat), mask
+    broadcastable to (B,H,S,T).  fp32 softmax."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    if K != H:
+        rep = H // K
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    return out
+
+
+def causal_mask(S: int, T: int, window: Optional[int] = None,
+                offset: int = 0) -> jax.Array:
+    """(1,1,S,T) boolean; query i attends key j iff j <= i+offset and
+    (no window or i+offset - j < window)."""
+    qi = jnp.arange(S)[:, None] + offset
+    kj = jnp.arange(T)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m = m & (qi - kj < window)
+    return m[None, None]
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             dtype, qk_norm: bool = False, layout: str = "fused") -> dict:
+    """layout='fused' stores (d, H*hd) projections (classic megatron);
+    layout='split' stores 3-D (d, H, hd) so the SPMD partitioner can shard
+    the head/head_dim axes independently — this is what lets the decode
+    KV-cache update stay reshard-free (§Perf iteration, EXPERIMENTS.md)."""
+    ks = jax.random.split(key, 4)
+    if layout == "qkv_fused":
+        # single (d, (H+2Kv)*hd) projection: backward emits ONE dx
+        # partial-sum all-reduce instead of three (§Perf 'qkv_fused')
+        p = {
+            "wqkv": dense_init(ks[0], (d_model,
+                                       (n_heads + 2 * n_kv) * head_dim), dtype),
+            "wo": dense_init(ks[3], (n_heads * head_dim, d_model), dtype),
+        }
+        if qk_norm:
+            p["q_norm"] = init_rmsnorm(head_dim, dtype)
+            p["k_norm"] = init_rmsnorm(head_dim, dtype)
+        return p
+    if layout == "split":
+        p = {
+            "wq": dense_init(ks[0], (d_model, n_heads, head_dim), dtype),
+            "wk": dense_init(ks[1], (d_model, n_kv, head_dim), dtype),
+            "wv": dense_init(ks[2], (d_model, n_kv, head_dim), dtype),
+            "wo": dense_init(ks[3], (n_heads, head_dim, d_model), dtype),
+        }
+    else:
+        p = {
+            "wq": dense_init(ks[0], (d_model, n_heads * head_dim), dtype),
+            "wk": dense_init(ks[1], (d_model, n_kv * head_dim), dtype),
+            "wv": dense_init(ks[2], (d_model, n_kv * head_dim), dtype),
+            "wo": dense_init(ks[3], (n_heads * head_dim, d_model), dtype),
+        }
+    if qk_norm:
+        p["q_norm"] = init_rmsnorm(head_dim, dtype)
+        p["k_norm"] = init_rmsnorm(head_dim, dtype)
+    return p
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # (B, C, Kv, D) — C = cache capacity (seq or window)
+    v: jax.Array
+
+
+def init_kv_cache(batch: int, capacity: int, n_kv: int, head_dim: int,
+                  dtype) -> KVCache:
+    shape = (batch, capacity, n_kv, head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def gqa_attention(params: dict, x: jax.Array, positions: jax.Array, *,
+                  n_heads: int, n_kv: int, head_dim: int, theta: float,
+                  window: Optional[int] = None, qk_norm: bool = False,
+                  cache: Optional[KVCache] = None,
+                  cache_index: Optional[jax.Array] = None,
+                  ring: bool = False,
+                  mask_override: Optional[jax.Array] = None):
+    """Returns (out, new_cache).  Train/prefill when cache is None.
+    ``mask_override`` replaces the computed causal mask (used by the
+    scan-over-layers path where the window/global pattern is a traced
+    per-layer flag)."""
+    B, S, _ = x.shape
+    if "wqkv" in params:  # qkv_fused layout
+        qkv = x @ params["wqkv"]
+        nq = n_heads * head_dim
+        nk = n_kv * head_dim
+        q = qkv[..., :nq].reshape(B, S, n_heads, head_dim)
+        k = qkv[..., nq:nq + nk].reshape(B, S, n_kv, head_dim)
+        v = qkv[..., nq + nk:].reshape(B, S, n_kv, head_dim)
+    elif params["wq"].ndim == 3:  # split layout: no fused-dim reshape
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    else:
+        q = (x @ params["wq"]).reshape(B, S, n_heads, head_dim)
+        k = (x @ params["wk"]).reshape(B, S, n_kv, head_dim)
+        v = (x @ params["wv"]).reshape(B, S, n_kv, head_dim)
+    if qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+
+    if cache is None:
+        mask = mask_override if mask_override is not None else causal_mask(S, S, window)
+        out = attention_core(q, k, v, mask)
+    else:
+        C = cache.k.shape[1]
+        idx = cache_index
+        slot = jnp.mod(idx, C) if ring else idx
+        ck = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+        cache = KVCache(ck, cv)
+        slots = jnp.arange(C)
+        if ring:
+            # slot s holds position idx - ((idx - s) mod C); valid once written
+            stored_pos = idx - jnp.mod(idx - slots, C)
+            valid = stored_pos >= 0
+        else:
+            valid = slots <= idx
+        mask = valid[None, None, None, :]
+        out = attention_core(q, ck, cv, mask)
+
+    if params["wo"].ndim == 3:
+        out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    else:
+        out = out.reshape(B, S, n_heads * head_dim) @ params["wo"]
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, d_model: int, n_heads: int, kv_lora: int, dtype, *,
+             nope_dim: int = 128, rope_dim: int = 64,
+             v_dim: int = 128) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d_model, n_heads * (nope_dim + rope_dim)), dtype),
+        "w_dkv": dense_init(ks[1], (d_model, kv_lora + rope_dim), dtype),
+        "kv_norm": init_rmsnorm(kv_lora, dtype),
+        "w_uk": dense_init(ks[2], (kv_lora, n_heads * nope_dim), dtype),
+        "w_uv": dense_init(ks[3], (kv_lora, n_heads * v_dim), dtype),
+        "wo": dense_init(ks[4], (n_heads * v_dim, d_model), dtype),
+    }
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # (B, C, kv_lora) — the compressed latent, MLA's win
+    k_rope: jax.Array  # (B, C, rope_dim)
+
+
+def init_mla_cache(batch: int, capacity: int, kv_lora: int, rope_dim: int,
+                   dtype) -> MLACache:
+    return MLACache(jnp.zeros((batch, capacity, kv_lora), dtype),
+                    jnp.zeros((batch, capacity, rope_dim), dtype))
+
+
+def mla_attention(params: dict, x: jax.Array, positions: jax.Array, *,
+                  n_heads: int, kv_lora: int, theta: float,
+                  nope_dim: int = 128, rope_dim: int = 64, v_dim: int = 128,
+                  cache: Optional[MLACache] = None,
+                  cache_index: Optional[jax.Array] = None):
+    """Latent attention.  Decode path uses the absorbed formulation: scores
+    are taken directly against the cached latent (q absorbed through w_uk),
+    and values are re-expanded from the latent through w_uv."""
+    B, S, _ = x.shape
+    H = n_heads
+    scale = 1.0 / math.sqrt(nope_dim + rope_dim)
+
+    q = (x @ params["wq"]).reshape(B, S, H, nope_dim + rope_dim)
+    q_nope, q_rope = q[..., :nope_dim], q[..., nope_dim:]
+    q_rope = apply_rope(q_rope, positions, theta)
+
+    dkv = x @ params["w_dkv"]
+    c_kv = rmsnorm(params["kv_norm"], dkv[..., :kv_lora])         # (B,S,R)
+    k_rope = apply_rope(dkv[..., None, kv_lora:], positions, theta)[:, :, 0]
+
+    if cache is None:
+        k_nope = (c_kv @ params["w_uk"]).reshape(B, S, H, nope_dim)
+        val = (c_kv @ params["w_uv"]).reshape(B, S, H, v_dim)
+        scores = (jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+                  + jnp.einsum("bshd,btd->bhst", q_rope, k_rope))
+        scores = scores.astype(jnp.float32) * scale
+        scores = jnp.where(causal_mask(S, S), scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(val.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", probs, val)
+        new_cache = None
+    else:
+        idx = cache_index
+        cc = jax.lax.dynamic_update_slice(cache.c_kv, c_kv, (0, idx, 0))
+        cr = jax.lax.dynamic_update_slice(cache.k_rope, k_rope, (0, idx, 0))
+        new_cache = MLACache(cc, cr)
+        C = cc.shape[1]
+        wuk = params["w_uk"].reshape(kv_lora, H, nope_dim)
+        q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, wuk)         # absorb
+        scores = (jnp.einsum("bshr,btr->bhst", q_abs, cc)
+                  + jnp.einsum("bshd,btd->bhst", q_rope, cr))
+        scores = scores.astype(jnp.float32) * scale
+        valid = (jnp.arange(C) <= idx)[None, None, None, :]
+        scores = jnp.where(valid, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(cc.dtype)
+        ctx_latent = jnp.einsum("bhst,btr->bshr", probs, cc)       # (B,S,H,R)
+        wuv = params["w_uv"].reshape(kv_lora, H, v_dim)
+        out = jnp.einsum("bshr,rhd->bshd", ctx_latent, wuv)
+
+    out = out.reshape(B, S, H * v_dim) @ params["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# plain MHA for encoder / cross attention (whisper)
+# ---------------------------------------------------------------------------
+
+def init_mha(key, d_model: int, n_heads: int, head_dim: int, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d_model, n_heads * head_dim), dtype),
+        "wk": dense_init(ks[1], (d_model, n_heads * head_dim), dtype),
+        "wv": dense_init(ks[2], (d_model, n_heads * head_dim), dtype),
+        "wo": dense_init(ks[3], (n_heads * head_dim, d_model), dtype),
+    }
+
+
+def mha_attention(params: dict, x: jax.Array, kv_src: jax.Array, *,
+                  n_heads: int, head_dim: int, mask=None,
+                  precomputed_kv=None):
+    """Bidirectional or cross attention (no RoPE; whisper uses learned/sin
+    absolute positions added at the embedding level).  ``precomputed_kv``
+    short-circuits the kv projections for cached cross-attention."""
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, n_heads, head_dim)
+    if precomputed_kv is None:
+        T = kv_src.shape[1]
+        k = (kv_src @ params["wk"]).reshape(B, T, n_heads, head_dim)
+        v = (kv_src @ params["wv"]).reshape(B, T, n_heads, head_dim)
+    else:
+        k, v = precomputed_kv
+    out = attention_core(q, k, v, mask)
+    return out.reshape(B, S, n_heads * head_dim) @ params["wo"], (k, v)

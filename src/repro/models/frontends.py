@@ -1,0 +1,38 @@
+"""STUB modality frontends — the sanctioned carve-out (DESIGN.md §4).
+
+[audio] and [vlm] architectures specify the transformer backbone only; the
+mel-spectrogram + conv feature extractor (Whisper) and the ViT/projector
+(InternVL) are NOT implemented.  These helpers produce precomputed
+frame/patch embeddings of the right shape — deterministic given a key —
+for training, serving and the dry-run input_specs.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ArchConfig
+
+__all__ = ["stub_patch_embeddings", "stub_frame_embeddings", "stub_frontend"]
+
+
+def stub_patch_embeddings(key, cfg: ArchConfig, *lead) -> jax.Array:
+    """ViT patch embeddings stand-in: (*lead, n_patches, d_model)."""
+    assert cfg.frontend == "vision"
+    return 0.02 * jax.random.normal(
+        key, (*lead, cfg.n_frontend_tokens, cfg.d_model))
+
+
+def stub_frame_embeddings(key, cfg: ArchConfig, *lead) -> jax.Array:
+    """Audio frame embeddings stand-in: (*lead, n_frames, d_model)."""
+    assert cfg.frontend == "audio" or cfg.is_encdec
+    return 0.02 * jax.random.normal(
+        key, (*lead, cfg.n_frontend_tokens, cfg.d_model))
+
+
+def stub_frontend(key, cfg: ArchConfig, batch: dict, *lead) -> dict:
+    """Attach the right stub embedding (if any) to a token batch."""
+    if cfg.frontend == "vision":
+        batch = dict(batch, patches=stub_patch_embeddings(key, cfg, *lead))
+    elif cfg.is_encdec:
+        batch = dict(batch, frames=stub_frame_embeddings(key, cfg, *lead))
+    return batch

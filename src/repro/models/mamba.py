@@ -1,0 +1,159 @@
+"""Mamba-1 (S6 selective state space) mixer.
+
+Training/prefill uses a chunked scan: ``lax.scan`` over sequence chunks
+carrying the (B, d_inner, N) state, with a ``jax.lax.associative_scan``
+inside each chunk.  The (B, L, d_inner, N) tensor is never materialized for
+the full sequence — only per chunk — which keeps activation memory linear
+in chunk size (the same insight the CUDA hardware-aware scan exploits; on
+TPU the Pallas kernel in repro/kernels/selective_scan tiles the same
+computation through VMEM).
+
+Decode carries (conv_state, ssm_state) and is O(1) per token — this is what
+makes the 524288-token ``long_500k`` shape runnable for SSM archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import dense_init
+
+__all__ = ["init_mamba", "mamba_forward", "mamba_decode_step", "MambaCache",
+           "init_mamba_cache", "selective_scan_chunked"]
+
+
+def init_mamba(key, d_model: int, d_state: int = 16, expand: int = 2,
+               d_conv: int = 4, dt_rank: Optional[int] = None,
+               dtype=jnp.float32) -> dict:
+    d_inner = expand * d_model
+    dt_rank = dt_rank if dt_rank is not None else max(d_model // 16, 1)
+    ks = jax.random.split(key, 8)
+    # S4D-real initialization for A
+    A = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    dt_init = jnp.exp(jax.random.uniform(ks[6], (d_inner,), jnp.float32)
+                      * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        "in_proj_x": dense_init(ks[0], (d_model, d_inner), dtype),
+        "in_proj_z": dense_init(ks[1], (d_model, d_inner), dtype),
+        "conv_w": dense_init(ks[2], (d_conv, d_inner), dtype, scale=d_conv ** -0.5),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[3], (d_inner, dt_rank + 2 * d_state), dtype),
+        "dt_proj": dense_init(ks[4], (dt_rank, d_inner), dtype,
+                              scale=dt_rank ** -0.5),
+        "dt_bias": dt_bias.astype(dtype),
+        "A_log": jnp.log(A).astype(dtype),
+        "D": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[5], (d_inner, d_model), dtype),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  x: (B,L,Ch), w: (K,Ch)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def _ssm_inputs(params, x_conv, d_state: int):
+    """Shared projection math.  x_conv: (..., d_inner)."""
+    dt_rank = params["dt_proj"].shape[0]
+    dbc = x_conv @ params["x_proj"]
+    dt = jax.nn.softplus(dbc[..., :dt_rank] @ params["dt_proj"]
+                         + params["dt_bias"])
+    Bm = dbc[..., dt_rank:dt_rank + d_state]
+    Cm = dbc[..., dt_rank + d_state:]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    return dt, Bm, Cm, A
+
+
+def selective_scan_chunked(dt, Bm, Cm, x, A, h0, chunk: int = 16):
+    """S6 scan.  dt/x: (B,L,E), Bm/Cm: (B,L,N), A: (E,N), h0: (B,E,N).
+    Returns (y (B,L,E), h_final).  Chunked: only (B,chunk,E,N) tensors are
+    live at any time."""
+    Bsz, L, E = x.shape
+    N = A.shape[1]
+    pad = (-L) % chunk
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    nC = (L + pad) // chunk
+    resh = lambda a: a.reshape(Bsz, nC, chunk, -1).swapaxes(0, 1)
+    dt_c, B_c, C_c, x_c = resh(dt), resh(Bm), resh(Cm), resh(x)
+
+    def scan_chunk(h, inp):
+        dtc, bc, cc, xc = inp                       # (B,chunk,*)
+        dtc = dtc.astype(jnp.float32)
+        decay = jnp.exp(dtc[..., None] * A[None, None])            # (B,c,E,N)
+        drive = (dtc * xc.astype(jnp.float32))[..., None] \
+            * bc.astype(jnp.float32)[:, :, None, :]                # (B,c,E,N)
+
+        def combine(a, b):
+            (d1, u1), (d2, u2) = a, b
+            return d1 * d2, u1 * d2 + u2
+
+        dec_cum, drive_cum = jax.lax.associative_scan(
+            combine, (decay, drive), axis=1)
+        h_all = dec_cum * h[:, None] + drive_cum                   # (B,c,E,N)
+        y = jnp.einsum("bcen,bcn->bce", h_all, cc.astype(jnp.float32))
+        return h_all[:, -1], y
+
+    h_final, y = jax.lax.scan(scan_chunk, h0.astype(jnp.float32),
+                              (dt_c, B_c, C_c, x_c))
+    y = y.swapaxes(0, 1).reshape(Bsz, L + pad, E)[:, :L]
+    return y, h_final
+
+
+def mamba_forward(params: dict, x: jax.Array, *, d_state: int = 16,
+                  chunk: int = 16, h0=None):
+    """Full-sequence forward.  x: (B,L,d_model) -> (B,L,d_model)."""
+    B, L, _ = x.shape
+    xi = x @ params["in_proj_x"]
+    z = x @ params["in_proj_z"]
+    xc = jax.nn.silu(_causal_conv1d(xi, params["conv_w"], params["conv_b"]))
+    dt, Bm, Cm, A = _ssm_inputs(params, xc, d_state)
+    E = xc.shape[-1]
+    h0 = h0 if h0 is not None else jnp.zeros((B, E, A.shape[1]), jnp.float32)
+    y, _ = selective_scan_chunked(dt, Bm, Cm, xc, A, h0, chunk)
+    y = y.astype(x.dtype) + params["D"][None, None, :] * xc
+    return (y * jax.nn.silu(z)) @ params["out_proj"]
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (B, d_conv-1, d_inner) — last K-1 pre-conv inputs
+    h: jax.Array      # (B, d_inner, N) fp32 SSM state
+
+
+def init_mamba_cache(batch: int, d_inner: int, d_state: int, d_conv: int,
+                     dtype) -> MambaCache:
+    return MambaCache(jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+                      jnp.zeros((batch, d_inner, d_state), jnp.float32))
+
+
+def mamba_decode_step(params: dict, x: jax.Array, cache: MambaCache, *,
+                      d_state: int = 16):
+    """One-token step.  x: (B,1,d_model).  O(1) in context length."""
+    B = x.shape[0]
+    xi = (x @ params["in_proj_x"])[:, 0]            # (B,E)
+    z = (x @ params["in_proj_z"])[:, 0]
+    w = params["conv_w"]                            # (K,E)
+    K = w.shape[0]
+    window = jnp.concatenate([cache.conv, xi[:, None, :]], axis=1)  # (B,K,E)
+    xc = jax.nn.silu(jnp.einsum("bke,ke->be", window, w) + params["conv_b"])
+    dt, Bm, Cm, A = _ssm_inputs(params, xc, d_state)
+    dt = dt.astype(jnp.float32)
+    decay = jnp.exp(dt[..., None] * A[None])                         # (B,E,N)
+    drive = (dt * xc.astype(jnp.float32))[..., None] \
+        * Bm.astype(jnp.float32)[:, None, :]
+    h = decay * cache.h + drive
+    y = jnp.einsum("ben,bn->be", h, Cm.astype(jnp.float32)).astype(x.dtype)
+    y = y + params["D"][None, :] * xc
+    out = ((y * jax.nn.silu(z)) @ params["out_proj"])[:, None, :]
+    return out, MambaCache(window[:, 1:], h)

@@ -1,0 +1,67 @@
+"""Minimal functional optimizers.
+
+L2GD's local step IS plain (scaled) gradient descent — the algorithm's
+update rules live in repro.core.l2gd.  These optimizers serve the
+baselines: client-side SGD for FedAvg local epochs and server-side Adam for
+FedOpt, plus schedules for the end-to-end training example.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sgd_init", "sgd_update", "adam_init", "adam_update",
+           "cosine_schedule", "AdamState"]
+
+
+def sgd_init(params, momentum: float = 0.0):
+    if momentum == 0.0:
+        return None
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def sgd_update(params, grads, state, lr: float, momentum: float = 0.0):
+    if momentum == 0.0:
+        new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+        return new, None
+    vel = jax.tree.map(lambda v, g: momentum * v + g.astype(v.dtype), state, grads)
+    new = jax.tree.map(lambda p, v: p - lr * v, params, vel)
+    return new, vel
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adam_init(params) -> AdamState:
+    z = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamState(z(), z(), jnp.zeros((), jnp.int32))
+
+
+def adam_update(params, grads, state: AdamState, lr: float, b1: float = 0.9,
+                b2: float = 0.999, eps: float = 1e-8):
+    c = state.count + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                      state.nu, grads)
+    bc1 = 1 - b1 ** c.astype(jnp.float32)
+    bc2 = 1 - b2 ** c.astype(jnp.float32)
+    new = jax.tree.map(
+        lambda p, m, v: p - (lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)).astype(p.dtype),
+        params, mu, nu)
+    return new, AdamState(mu, nu, c)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr_at(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr_at

@@ -1,0 +1,98 @@
+"""Property tests for the compression operators (paper Assumption 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_compressor, tree_apply, tree_wire_bits, joint_omega
+
+UNBIASED = ["identity", "qsgd", "natural", "terngrad", "bernoulli", "randk"]
+ALL = UNBIASED + ["topk"]
+
+
+def _mc_apply(comp, x, n_samples, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_samples)
+    return jax.vmap(lambda k: comp.apply(k, x))(keys)
+
+
+@pytest.mark.parametrize("name", UNBIASED)
+def test_unbiased(name):
+    """E[C(x)] = x within Monte-Carlo tolerance."""
+    comp = make_compressor(name)
+    x = jax.random.normal(jax.random.PRNGKey(1), (512,))
+    ys = _mc_apply(comp, x, 4000)
+    err = jnp.abs(jnp.mean(ys, 0) - x)
+    # tolerance ~ 4 sigma of the MC mean: std <= sqrt(omega) |x| / sqrt(S)
+    tol = 4.0 * np.sqrt(max(comp.omega(x.shape), 1e-6)) \
+        * float(jnp.max(jnp.abs(x))) / np.sqrt(4000) + 1e-5
+    assert float(jnp.max(err)) < tol, (name, float(jnp.max(err)), tol)
+
+
+@pytest.mark.parametrize("name", UNBIASED)
+def test_variance_bound(name):
+    """E||C(x)-x||^2 <= omega ||x||^2 (Assumption 1, second bullet)."""
+    comp = make_compressor(name)
+    x = jax.random.normal(jax.random.PRNGKey(2), (512,))
+    ys = _mc_apply(comp, x, 2000)
+    var = float(jnp.mean(jnp.sum((ys - x) ** 2, -1)))
+    bound = comp.omega(x.shape) * float(jnp.sum(x ** 2))
+    assert var <= bound * 1.1 + 1e-6, (name, var, bound)
+
+
+def test_topk_is_biased_contraction():
+    comp = make_compressor("topk", fraction=0.1)
+    x = jax.random.normal(jax.random.PRNGKey(3), (500,))
+    y = comp.apply(jax.random.PRNGKey(0), x)
+    # contraction: ||C(x)-x||^2 <= (1-k/d) ||x||^2, and it IS biased
+    assert float(jnp.sum((y - x) ** 2)) <= (1 - 0.1) * float(jnp.sum(x ** 2)) + 1e-5
+    assert float(jnp.sum(jnp.abs(y))) < float(jnp.sum(jnp.abs(x)))
+    # keeps exactly the k largest
+    assert int(jnp.sum(y != 0)) == 50
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(ALL),
+       st.integers(min_value=1, max_value=4000),
+       st.sampled_from([jnp.float32, jnp.bfloat16]))
+def test_shape_dtype_preserved(name, n, dtype):
+    comp = make_compressor(name)
+    x = jnp.ones((n,), dtype)
+    y = comp.apply(jax.random.PRNGKey(0), x)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from(ALL), st.integers(min_value=1, max_value=100000))
+def test_wire_bits_sane(name, n):
+    comp = make_compressor(name)
+    bits = comp.wire_bits((n,))
+    assert bits > 0
+    if name != "identity":
+        assert bits < 32.0 * n + 64.0  # compression should not expand much
+
+
+def test_natural_powers_of_two():
+    comp = make_compressor("natural")
+    x = jax.random.normal(jax.random.PRNGKey(4), (1000,)) * 7.3
+    y = comp.apply(jax.random.PRNGKey(5), x)
+    mag = jnp.abs(y[y != 0])
+    log2 = jnp.log2(mag)
+    assert float(jnp.max(jnp.abs(log2 - jnp.round(log2)))) < 1e-6
+    # sign preserved
+    assert bool(jnp.all(jnp.sign(y) == jnp.sign(x)))
+
+
+def test_tree_apply_and_bits():
+    comp = make_compressor("qsgd")
+    tree = {"a": jnp.ones((64, 8)), "b": [jnp.zeros((5,)), jnp.ones((7, 3))]}
+    out = tree_apply(comp, jax.random.PRNGKey(0), tree)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    assert tree_wire_bits(comp, tree) > 0
+    # zeros map to zeros (norm-0 bucket guard)
+    assert float(jnp.max(jnp.abs(out["b"][0]))) == 0.0
+
+
+def test_joint_omega_lemma1():
+    assert joint_omega([0.1, 2.0, 0.5]) == 2.0

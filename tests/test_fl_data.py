@@ -1,0 +1,194 @@
+"""FL runtime + data pipeline + checkpoint tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint
+from repro.core import L2GDHyper, make_compressor
+from repro.data import (TokenStream, dirichlet_partition, make_logreg_data,
+                        logreg_loss_and_grad, shard_partition)
+from repro.fl import run_fedavg, run_fedopt, run_l2gd
+from repro.fl.ledger import BitsLedger
+
+
+def _grad_fn(p, b):
+    loss, g = logreg_loss_and_grad(p["w"], b[0], b[1], 0.01)
+    return loss, {"w": g}
+
+
+@pytest.fixture(scope="module")
+def logreg():
+    data = make_logreg_data(n_clients=5, m_per_client=200, seed=1)
+    return jnp.asarray(data.features), jnp.asarray(data.labels)
+
+
+def _mean_loss(w_stacked, X, Y):
+    return float(np.mean([logreg_loss_and_grad(w_stacked[i], X[i], Y[i])[0]
+                          for i in range(X.shape[0])]))
+
+
+def test_l2gd_driver_end_to_end(logreg):
+    X, Y = logreg
+    hp = L2GDHyper(eta=0.5, lam=1.0, p=0.3, n=5)
+    run = run_l2gd(jax.random.PRNGKey(0), {"w": jnp.zeros((5, 124))},
+                   _grad_fn, hp, lambda k: (X, Y), 400,
+                   client_comp=make_compressor("natural"),
+                   master_comp=make_compressor("natural"), seed=3)
+    assert run.n_local + run.n_agg_comm + run.n_agg_cached == 400
+    # communication count == ledger rounds == local->agg transitions
+    assert run.ledger.rounds == run.n_agg_comm > 0
+    final = _mean_loss(np.asarray(run.state.params["w"]), X, Y)
+    assert final < 0.5  # learned something (log 2 ~ 0.693 at init)
+    # protocol frequencies roughly Bernoulli(p)
+    assert 0.15 < (run.n_agg_comm + run.n_agg_cached) / 400 < 0.45
+
+
+def test_l2gd_compression_saves_bits(logreg):
+    X, Y = logreg
+    hp = L2GDHyper(eta=0.5, lam=1.0, p=0.3, n=5)
+    runs = {}
+    for name in ("identity", "natural"):
+        runs[name] = run_l2gd(jax.random.PRNGKey(0), {"w": jnp.zeros((5, 124))},
+                              _grad_fn, hp, lambda k: (X, Y), 300,
+                              client_comp=make_compressor(name),
+                              master_comp=make_compressor(name), seed=3)
+    # same protocol realization (same seed) -> same rounds, fewer bits
+    assert runs["natural"].ledger.rounds == runs["identity"].ledger.rounds
+    assert runs["natural"].ledger.bits_per_client \
+        < 0.5 * runs["identity"].ledger.bits_per_client
+    # and compression must not destroy learning
+    f_nat = _mean_loss(np.asarray(runs["natural"].state.params["w"]), X, Y)
+    assert f_nat < 0.5
+
+
+def test_personalization_beats_global_on_heterogeneous_data():
+    """The paper's core premise: with heterogeneous clients, personalized
+    L2GD models (moderate lambda) achieve lower mean local loss than the
+    single global FedAvg model."""
+    data = make_logreg_data(n_clients=5, heterogeneity=3.0, seed=7)
+    X, Y = jnp.asarray(data.features), jnp.asarray(data.labels)
+    hp = L2GDHyper(eta=0.5, lam=1.0, p=0.3, n=5)
+    run = run_l2gd(jax.random.PRNGKey(0), {"w": jnp.zeros((5, 124))},
+                   _grad_fn, hp, lambda k: (X, Y), 500, seed=5)
+    pers = _mean_loss(np.asarray(run.state.params["w"]), X, Y)
+    cb = lambda r, i: [(X[i], Y[i])] * 3
+    fa = run_fedavg(jax.random.PRNGKey(1), {"w": jnp.zeros((124,))},
+                    _grad_fn, cb, 5, 100, local_lr=0.5)
+    glob = float(np.mean([logreg_loss_and_grad(fa.params["w"], X[i], Y[i])[0]
+                          for i in range(5)]))
+    assert pers < glob, (pers, glob)
+
+
+def test_fedavg_ef_memory_tracks_delta(logreg):
+    X, Y = logreg
+    gp = {"w": jnp.zeros((124,))}
+    cb = lambda r, i: [(X[i], Y[i])] * 2
+    fa = run_fedavg(jax.random.PRNGKey(0), gp, _grad_fn, cb, 5, 60,
+                    local_lr=0.5, compressor=make_compressor("qsgd"))
+    fl = float(np.mean([logreg_loss_and_grad(fa.params["w"], X[i], Y[i])[0]
+                        for i in range(5)]))
+    assert fl < 0.55
+    assert fa.ledger.rounds == 60
+
+
+def test_fedopt_runs(logreg):
+    X, Y = logreg
+    gp = {"w": jnp.zeros((124,))}
+    cb = lambda r, i: [(X[i], Y[i])] * 2
+    fo = run_fedopt(jax.random.PRNGKey(0), gp, _grad_fn, cb, 5, 60,
+                    local_lr=0.5, server_lr=0.05)
+    fl = float(np.mean([logreg_loss_and_grad(fo.params["w"], X[i], Y[i])[0]
+                        for i in range(5)]))
+    assert fl < 0.55
+
+
+def test_ledger_accounting():
+    led = BitsLedger(4)
+    led.record_round(100.0, 25.0)
+    led.record_round(100.0, 25.0, step=7)
+    assert led.rounds == 2
+    assert led.bits_per_client == 250.0
+    assert led.history[-1]["step"] == 7
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 12), st.floats(0.05, 5.0))
+def test_dirichlet_partition_properties(n_clients, alpha):
+    labels = np.repeat(np.arange(10), 100)
+    parts = dirichlet_partition(labels, n_clients, alpha, seed=0)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)  # a true partition
+    assert min(len(p) for p in parts) >= 1
+
+
+def test_dirichlet_skew_increases_as_alpha_drops():
+    labels = np.repeat(np.arange(10), 200)
+
+    def skew(alpha):
+        parts = dirichlet_partition(labels, 8, alpha, seed=3)
+        mats = np.stack([np.bincount(labels[p], minlength=10) / len(p)
+                         for p in parts])
+        return float(np.std(mats))
+
+    assert skew(0.1) > skew(100.0)
+
+
+def test_shard_partition():
+    parts = shard_partition(100, 5)
+    assert all(len(p) == 20 for p in parts)
+
+
+def test_token_stream_deterministic_and_heterogeneous():
+    ts = TokenStream(n_clients=3, vocab=97, batch=4, seq=16, seed=0)
+    b1, b2 = ts.batch_at(5), ts.batch_at(5)
+    np.testing.assert_array_equal(b1, b2)
+    assert b1.shape == (3, 4, 16)
+    assert not np.array_equal(ts.batch_at(5), ts.batch_at(6))
+    # per-client laws differ
+    assert not np.array_equal(b1[0], b1[1])
+    assert b1.max() < 97 and b1.min() >= 0
+
+
+def test_token_stream_learnable():
+    """Next token is (mostly) an affine function of the current one."""
+    ts = TokenStream(n_clients=1, vocab=53, batch=64, seq=8, seed=1,
+                     noise=0.0)
+    b = ts.batch_at(0)[0]
+    pred = (ts.a[0] * b[:, :-1] + ts.b[0]) % 53
+    assert np.mean(pred == b[:, 1:]) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3),
+                       "b": jnp.ones((4,), jnp.bfloat16)},
+            "opt": [jnp.zeros((2,), jnp.int32), {"count": 7}],
+            "meta": {"name": "x", "lr": 0.5, "flag": True, "none": None}}
+    p = os.path.join(tmp_path, "ckpt.msgpack")
+    checkpoint.save(p, tree)
+    back = checkpoint.restore(p)
+    assert back["meta"] == tree["meta"]
+    np.testing.assert_array_equal(np.asarray(back["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    assert back["params"]["b"].dtype == jnp.bfloat16
+    assert back["opt"][1]["count"] == 7
+
+
+def test_checkpoint_state_helper(tmp_path):
+    p = os.path.join(tmp_path, "s.msgpack")
+    checkpoint.save_state(p, {"w": jnp.ones((3,))}, {"step": 11})
+    params, extra = checkpoint.restore_state(p)
+    assert extra["step"] == 11
+    np.testing.assert_array_equal(np.asarray(params["w"]), np.ones(3))

@@ -1,0 +1,95 @@
+"""Cross-checks of the paper's closed-form theory (§V, §VI) against numeric
+optimization — Theorems 3/4, Lemma 7, Remark 1."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory
+from repro.core.theory import SmoothnessConstants
+
+
+def _c(L_f=2.0, mu=0.5, lam=10.0, n=8):
+    return SmoothnessConstants(L_f=L_f, mu=mu, lam=lam, n=n)
+
+
+def test_remark1_no_compression():
+    """omega = omega_M = 0 -> alpha = beta = 0, delta = 2 E||G(x*)||^2."""
+    c = _c()
+    alpha, beta = theory.alpha_beta(c, 0.0, 0.0)
+    assert alpha == 0.0 and beta == 0.0
+    gamma, delta = theory.gamma_delta(c, 0.0, 0.0, p=0.3,
+                                      grad_var_at_opt=1.7)
+    assert delta == pytest.approx(2 * 1.7)
+    assert gamma == pytest.approx(
+        max(c.L_f / 0.7, (c.lam / c.n) * (1 + 4 * 0.7 / 0.3)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.1, 50.0), st.floats(0.5, 100.0), st.integers(2, 64))
+def test_pe_is_AB_crossing(L_f, lam, n):
+    """p_e solves A(p) = B(p) where B(p) = alpha lam^2/(2n^2 p) + 4 lam/(np)
+    - 3 lam/n (the alpha term cancels in the crossing)."""
+    c = SmoothnessConstants(L_f=L_f, mu=0.1, lam=lam, n=n)
+    pe = theory.p_e(c)
+    assert 0.0 < pe < 1.0
+    # crossing of the max-terms: L_f/(1-p) = lam/n (1 + 4(1-p)/p)
+    lhs = L_f / (1 - pe)
+    rhs = (lam / n) * (1 + 4 * (1 - pe) / pe)
+    assert lhs == pytest.approx(rhs, rel=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.05, 20.0), st.floats(0.5, 50.0), st.integers(2, 32),
+       st.floats(0.01, 10.0))
+def test_pA_minimizes_A(L_f, lam, n, alpha):
+    """Lemma 7: the closed form matches numeric minimization of A(p)."""
+    c = SmoothnessConstants(L_f=L_f, mu=0.1, lam=lam, n=n)
+    pA = theory.p_A_rate(c, alpha)
+    if not (0.0 < pA < 1.0):
+        return  # outside the open interval; Lemma applies within (0,1)
+    grid = np.linspace(1e-4, 1 - 1e-4, 20000)
+    vals = [theory.A_rate(c, alpha, p) for p in grid]
+    p_num = grid[int(np.argmin(vals))]
+    assert pA == pytest.approx(p_num, abs=2e-3)
+
+
+def test_theorem3_p_star_minimizes_gamma():
+    c = _c()
+    alpha, _ = theory.alpha_beta(c, omega=0.125, omega_m=0.125)
+    p_star = theory.p_star_rate(c, alpha)
+    grid = np.linspace(1e-3, 1 - 1e-3, 5000)
+    vals = [theory.gamma_of_p(c, alpha, p) for p in grid]
+    p_num = grid[int(np.argmin(vals))]
+    assert abs(p_star - p_num) < 5e-3 or \
+        theory.gamma_of_p(c, alpha, p_star) <= min(vals) * 1.01
+
+
+def test_limits_lambda():
+    """§VI: lambda -> 0 => p* -> 0 (no communication); lambda -> inf =>
+    p* -> 1 (communicate always)."""
+    alpha = 1.0
+    lo = theory.p_star_rate(_c(lam=1e-4), alpha)
+    hi = theory.p_star_rate(_c(lam=1e6), alpha)
+    assert lo < 0.01
+    assert hi > 0.9
+
+
+def test_theorem1_contract():
+    c = _c()
+    gamma, delta = theory.gamma_delta(c, 0.125, 0.125, p=0.3,
+                                      x_star_sq=1.0, grad_var_at_opt=1.0)
+    eta, rho, radius = theory.theorem1_rate(c, gamma, delta)
+    assert 0.0 < rho < 1.0
+    assert radius > 0.0
+    with pytest.raises(ValueError):
+        theory.theorem1_rate(c, gamma, delta, eta=10.0 / gamma)
+
+
+def test_iteration_complexity_monotone_in_eps():
+    c = _c()
+    gamma, _ = theory.gamma_delta(c, 0.1, 0.1, p=0.3)
+    k1 = theory.iteration_complexity(c, gamma, eps=1e-2)
+    k2 = theory.iteration_complexity(c, gamma, eps=1e-4)
+    assert k2 > k1 > 0
