@@ -1,36 +1,110 @@
 """Kernel microbenchmarks: us/call of each Pallas kernel (interpret mode on
 CPU — relative numbers; TPU is the deployment target) against its jnp
-oracle, plus derived bandwidth figures."""
+oracle, plus derived bandwidth figures, plus the flat-buffer engine's
+whole-pytree compression against the legacy leaf-wise ``tree_apply`` path
+on a multi-leaf model config.
+
+Every row is also written machine-readably to BENCH_kernels.json
+(name, us/call, GB/s where applicable, backend) for the perf trajectory.
+"""
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 
+from benchmarks import common
 from benchmarks.common import emit, timed
+from repro.core import make_compressor, tree_apply
+from repro.core.flatbuf import pack_tree_qsgd, seeds_of
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.natural.kernel import natural_compress_2d
+from repro.kernels.natural.kernel import natural_fused
 from repro.kernels.natural.ref import natural_compress_ref
-from repro.kernels.qsgd.kernel import qsgd_dequantized
+from repro.kernels.qsgd.kernel import qsgd_fused
 from repro.kernels.qsgd.ref import qsgd_dequantized_ref
 from repro.kernels.selective_scan.ops import selective_scan_op
 from repro.kernels.selective_scan.ref import selective_scan_ref
 
+_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_kernels.json")
+
+
+def _model_tree(n_layers: int = 24, d: int = 192):
+    """Multi-leaf model config for the flat-vs-legacy comparison: ragged
+    leaf sizes, total not a bucket multiple."""
+    keys = jax.random.split(jax.random.PRNGKey(0), n_layers)
+    tree = {"emb": jax.random.normal(keys[0], (1000, d))}
+    for i, k in enumerate(keys[1:]):
+        k1, k2, k3 = jax.random.split(k, 3)
+        tree[f"layer_{i}"] = {
+            "w_qkv": jax.random.normal(k1, (d, 3 * d)),
+            "w_o": jax.random.normal(k2, (d, d)),
+            "b": jax.random.normal(k3, (d,)),
+        }
+    return tree
+
+
+def _gbs(nbytes: int, us: float) -> str:
+    return f"GB/s={nbytes / (us * 1e-6) / 1e9:.2f}"
+
 
 def run():
+    start = len(common.RESULTS)
     k = jax.random.PRNGKey(0)
 
+    # fused in-kernel-RNG compression kernels (backend-dispatched) vs the
+    # legacy explicit-noise oracles that also read a full-size noise array
     x = jax.random.normal(k, (256, 2048))
     u = jax.random.uniform(jax.random.PRNGKey(1), x.shape)
-    for name, fn in [("qsgd_kernel", lambda: qsgd_dequantized(x, u)),
-                     ("qsgd_ref", lambda: qsgd_dequantized_ref(x, u))]:
+    seeds = seeds_of(jax.random.PRNGKey(2))
+    for name, fn, nbytes in [
+            ("qsgd_fused", lambda: qsgd_fused(x, seeds), x.nbytes),
+            ("qsgd_ref_noise", lambda: qsgd_dequantized_ref(x, u),
+             2 * x.nbytes),
+            ("natural_fused", lambda: natural_fused(x, seeds), x.nbytes),
+            ("natural_ref_noise", lambda: natural_compress_ref(x, u),
+             2 * x.nbytes)]:
         us, _ = timed(fn)
-        emit(name, us, f"GB/s={x.nbytes / (us * 1e-6) / 1e9:.2f}")
+        emit(name, us, _gbs(nbytes, us), gbps=nbytes / (us * 1e-6) / 1e9)
 
-    for name, fn in [("natural_kernel", lambda: natural_compress_2d(x, u)),
-                     ("natural_ref", lambda: natural_compress_ref(x, u))]:
-        us, _ = timed(fn)
-        emit(name, us, f"GB/s={x.nbytes / (us * 1e-6) / 1e9:.2f}")
+    # whole-pytree: flat engine (ONE fused launch) vs legacy per-leaf path
+    tree = _model_tree()
+    nbytes = sum(leaf.nbytes for leaf in jax.tree.leaves(tree))
+    comp = make_compressor("qsgd")
+    key = jax.random.PRNGKey(3)
+    flat_fn = jax.jit(lambda kk: tree_apply(comp, kk, tree, flat=True))
+    legacy_fn = jax.jit(lambda kk: tree_apply(comp, kk, tree, flat=False))
+    pack_fn = jax.jit(lambda kk: pack_tree_qsgd(kk, tree)[0])
+    us_flat, _ = timed(flat_fn, key)
+    us_legacy, _ = timed(legacy_fn, key)
+    us_pack, payload = timed(pack_fn, key)
+    n_leaves = len(jax.tree.leaves(tree))
+    emit("qsgd_tree_flat", us_flat,
+         f"{_gbs(nbytes, us_flat)},leaves={n_leaves}",
+         gbps=nbytes / (us_flat * 1e-6) / 1e9, n_leaves=n_leaves)
+    emit("qsgd_tree_legacy", us_legacy,
+         f"{_gbs(nbytes, us_legacy)},speedup_flat={us_legacy / us_flat:.2f}x",
+         gbps=nbytes / (us_legacy * 1e-6) / 1e9, n_leaves=n_leaves,
+         speedup_flat=round(us_legacy / us_flat, 2))
+    wire = payload.codes.nbytes + payload.norms.nbytes
+    emit("qsgd_tree_pack", us_pack,
+         f"{_gbs(nbytes, us_pack)},wire_bytes={wire},"
+         f"ratio={nbytes / wire:.2f}x",
+         gbps=nbytes / (us_pack * 1e-6) / 1e9, wire_bytes=wire)
+
+    comp_n = make_compressor("natural")
+    flat_n = jax.jit(lambda kk: tree_apply(comp_n, kk, tree, flat=True))
+    legacy_n = jax.jit(lambda kk: tree_apply(comp_n, kk, tree, flat=False))
+    us_flat, _ = timed(flat_n, key)
+    us_legacy, _ = timed(legacy_n, key)
+    emit("natural_tree_flat", us_flat, _gbs(nbytes, us_flat),
+         gbps=nbytes / (us_flat * 1e-6) / 1e9, n_leaves=n_leaves)
+    emit("natural_tree_legacy", us_legacy,
+         f"{_gbs(nbytes, us_legacy)},speedup_flat={us_legacy / us_flat:.2f}x",
+         gbps=nbytes / (us_legacy * 1e-6) / 1e9, n_leaves=n_leaves,
+         speedup_flat=round(us_legacy / us_flat, 2))
 
     B, L, E, N = 2, 256, 128, 16
     dt = jax.nn.softplus(jax.random.normal(k, (B, L, E))) * 0.1
@@ -50,6 +124,8 @@ def run():
     emit("flash_attention_kernel", us, "S=512,H=4,D=64")
     us, _ = timed(lambda: flash_attention_ref(q, kk, v))
     emit("flash_attention_ref", us, "S=512,H=4,D=64")
+
+    common.write_json(_JSON, common.RESULTS[start:])
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 """Shared helpers for the benchmark harness."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -8,6 +9,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data import logreg_loss_and_grad, make_logreg_data
+
+# machine-readable record of every emit() since process start; run.py
+# serializes it with --json, bench_kernels.py snapshots its own slice
+# into BENCH_kernels.json
+RESULTS: list = []
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 5):
@@ -21,8 +27,18 @@ def timed(fn, *args, warmup: int = 1, iters: int = 5):
     return (time.perf_counter() - t0) / iters * 1e6, out
 
 
-def emit(name: str, us_per_call: float, derived) -> None:
+def emit(name: str, us_per_call: float, derived, **extra) -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    RESULTS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                    "derived": str(derived),
+                    "backend": jax.default_backend(), **extra})
+
+
+def write_json(path: str, results=None) -> None:
+    with open(path, "w") as f:
+        json.dump(RESULTS if results is None else results, f, indent=1)
+    print(f"[json] wrote {len(RESULTS if results is None else results)} "
+          f"rows to {path}", flush=True)
 
 
 def logreg_setup(n_clients: int = 5, heterogeneity: float = 1.0, seed: int = 0):

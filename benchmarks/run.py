@@ -7,8 +7,10 @@
   kernels -- Pallas kernel microbench                   [system]
   roofline -- dry-run roofline table                    [deliverable g]
 
-Prints ``name,us_per_call,derived`` CSV lines.  Run:
-  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+Prints ``name,us_per_call,derived`` CSV lines; ``--json PATH``
+additionally serializes every emitted row (name, us/call, derived,
+backend, extras) as a JSON array.  Run:
+  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json PATH]
 """
 from __future__ import annotations
 
@@ -18,7 +20,7 @@ import traceback
 
 from benchmarks import (bench_fig3_sweep, bench_fig4_compressors,
                         bench_fig7_fedavg_recovery, bench_kernels,
-                        bench_roofline, bench_table2_bits)
+                        bench_roofline, bench_table2_bits, common)
 
 BENCHES = {
     "fig3": bench_fig3_sweep.run,
@@ -33,6 +35,8 @@ BENCHES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=list(BENCHES))
+    ap.add_argument("--json", metavar="PATH",
+                    help="write all emitted rows to PATH as JSON")
     args = ap.parse_args()
     names = [args.only] if args.only else list(BENCHES)
     print("name,us_per_call,derived")
@@ -43,6 +47,8 @@ def main() -> None:
         except Exception:
             failed.append(name)
             traceback.print_exc()
+    if args.json:
+        common.write_json(args.json)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

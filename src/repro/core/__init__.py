@@ -11,15 +11,24 @@ from repro.core.l2gd import (
 )
 from repro.core.aggregation import (
     compressed_average, compressed_average_wire, stochastic_round_cast,
+    make_sharded_average, make_packed_sharded_average,
 )
-from repro.core import theory
+from repro.core.flatbuf import (
+    FlatLayout, QSGDPayload, flat_tree_apply, pack_tree_qsgd,
+    unpack_tree_qsgd, packed_wire_bits, payload_wire_bits,
+)
+from repro.core import flatbuf, theory
 
 __all__ = [
     "Compressor", "Identity", "QSGD", "Natural", "TernGrad", "Bernoulli",
     "RandK", "TopK", "make_compressor", "tree_apply", "tree_wire_bits",
     "joint_omega", "L2GDHyper", "L2GDState", "init_state", "l2gd_step",
     "local_update", "aggregation_update", "draw_xi", "compressed_average",
-    "compressed_average_wire", "stochastic_round_cast", "theory",
+    "compressed_average_wire", "stochastic_round_cast",
+    "make_sharded_average", "make_packed_sharded_average", "theory",
+    "flatbuf", "FlatLayout", "QSGDPayload", "flat_tree_apply",
+    "pack_tree_qsgd", "unpack_tree_qsgd", "packed_wire_bits",
+    "payload_wire_bits",
     "EFMemory", "init_ef_memory", "ef_average", "compress_grads",
 ]
 from repro.core.extensions import EFMemory, init_ef_memory, ef_average, compress_grads

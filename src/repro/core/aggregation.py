@@ -14,14 +14,19 @@ broadcasting (Lemma 2 unbiasedness only needs E[C_M(ybar)] = xbar and is
 unaffected).  Wire bits are charged by the ledger at the compressors'
 true widths — see DESIGN.md §3.
 
-Two implementations:
+Three implementations:
   * :func:`compressed_average` — stacked-client form (leading axis = n).
     Used by the single-host simulator AND the pjit runtime (XLA turns the
     axis-0 mean of a ("clients", ...)-sharded array into the collective).
+    Client/master compression runs through the flat-buffer engine's fused
+    kernels when the compressor supports it (see repro.core.flatbuf).
   * :func:`compressed_average_wire` — beyond-paper TPU-native variant for
     shard_map: uplink = stochastic-round cast to a narrow dtype fused with
     ``jax.lax.pmean`` (natural compression composes with collectives as a
     dtype cast), downlink = shared-key C_M.  See EXPERIMENTS.md §Perf.
+  * :func:`make_packed_sharded_average` — shard_map ``average_fn`` whose
+    uplink collective carries the PACKED int8 QSGD payload (codes +
+    per-bucket norms, ~8.25 bits/element) instead of dequantized fp32.
 """
 from __future__ import annotations
 
@@ -29,25 +34,50 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compressors import Compressor, tree_apply
+from repro.core.flatbuf import pack_tree_qsgd, unbucketize, unravel
 
-__all__ = ["compressed_average", "compressed_average_wire", "stochastic_round_cast"]
+__all__ = ["compressed_average", "compressed_average_wire",
+           "stochastic_round_cast", "make_sharded_average",
+           "make_packed_sharded_average"]
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions (kwarg renames; pre-0.5 fallback
+    to jax.experimental.shard_map)."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
 
 
 def compressed_average(key: jax.Array, params_stacked, client_comp: Compressor,
-                       master_comp: Compressor):
+                       master_comp: Compressor, *, flat=None):
     """Return t = C_M( (1/n) sum_j C_j(x_j) ) for stacked client params.
 
     ``params_stacked`` is a pytree whose leaves carry a leading client axis
     of size n.  The returned pytree has NO client axis (it is the shared
     aggregation target, identical on all clients).
+
+    ``flat`` routes per-client compression through the flat-buffer engine
+    (one fused launch per client, the single-host default) or the legacy
+    leaf-wise path; pass ``flat=False`` in the pjit runtime, where
+    raveling model-axis-sharded leaves forces a rematerialization (see
+    repro.core.flatbuf's sharding note).
     """
     n = jax.tree_util.tree_leaves(params_stacked)[0].shape[0]
     k_clients, k_master = jax.random.split(key)
     client_keys = jax.random.split(k_clients, n)
-    compressed = jax.vmap(lambda k, p: tree_apply(client_comp, k, p))(
+    compressed = jax.vmap(lambda k, p: tree_apply(client_comp, k, p,
+                                                  flat=flat))(
         client_keys, params_stacked)
     ybar = jax.tree.map(lambda a: jnp.mean(a, axis=0), compressed)
-    return tree_apply(master_comp, k_master, ybar)
+    return tree_apply(master_comp, k_master, ybar, flat=flat)
 
 
 def stochastic_round_cast(key: jax.Array, x: jax.Array,
@@ -78,6 +108,43 @@ def stochastic_round_cast(key: jax.Array, x: jax.Array,
     return jnp.where(passthrough, xf, out).astype(dtype)
 
 
+def _make_shard_map_average(mesh, client_axes: tuple, param_pspecs_stacked,
+                            master_comp: Compressor, uplink):
+    """Shared scaffolding of the beyond-paper shard_map ``average_fn``s.
+
+    Per shard: split keys and decorrelate the uplink key across the
+    client axes (Assumption 1: independent C_i; the master key stays
+    shared by design), average the shard's local clients in f32, run
+    ``uplink(k_up, local_mean) -> ybar`` (whose collective IS the wire),
+    cast back to param dtypes, then apply the shared-key C_M downlink.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.tree_util import tree_map
+
+    axes = tuple(client_axes)
+    out_specs = tree_map(lambda s: P(*tuple(s)[1:]), param_pspecs_stacked,
+                         is_leaf=lambda x: isinstance(x, P))
+
+    def local_fn(key, params_local):
+        # params_local leaves: (clients_per_shard, ...) — average locally
+        # first, then let the uplink reduce over the client mesh axes.
+        k_up, k_master = jax.random.split(key)
+        for ax in axes:
+            k_up = jax.random.fold_in(k_up, jax.lax.axis_index(ax))
+        local_mean = tree_map(
+            lambda a: jnp.mean(a.astype(jnp.float32), axis=0), params_local)
+        ybar = uplink(k_up, local_mean, axes)
+        ybar = tree_map(lambda y, a: y.astype(a.dtype), ybar, params_local)
+        return tree_apply(master_comp, k_master, ybar)
+
+    def average_fn(key, params_stacked):
+        return _shard_map(
+            local_fn, mesh=mesh, in_specs=(P(), param_pspecs_stacked),
+            out_specs=out_specs)(key, params_stacked)
+
+    return average_fn
+
+
 def make_sharded_average(mesh, client_axes: tuple, param_pspecs_stacked,
                          master_comp: Compressor):
     """Beyond-paper: build an ``average_fn`` for :func:`repro.core.l2gd.
@@ -90,40 +157,56 @@ def make_sharded_average(mesh, client_axes: tuple, param_pspecs_stacked,
     C_M is applied shard-wise with a shared key (bitwise identical to a
     master broadcast, zero extra communication — Lemma 2 unaffected).
     """
-    from jax.sharding import PartitionSpec as P
-    from jax.tree_util import tree_map
 
-    axis = client_axes if len(client_axes) > 1 else client_axes[0]
-    out_specs = tree_map(lambda s: P(*tuple(s)[1:]), param_pspecs_stacked,
-                         is_leaf=lambda x: isinstance(x, P))
-
-    def local_fn(key, params_local):
-        # params_local leaves: (clients_per_shard, ...) — average locally
-        # first, then pmean over the client mesh axes.
-        k_up, k_master = jax.random.split(key)
-        # decorrelate uplink rounding across clients (Assumption 1:
-        # independent C_i); the master key stays shared by design.
-        for ax in (client_axes if isinstance(axis, tuple) else (axis,)):
-            k_up = jax.random.fold_in(k_up, jax.lax.axis_index(ax))
-        leaves, treedef = jax.tree_util.tree_flatten(params_local)
+    def uplink(k_up, local_mean, axes):
+        leaves, treedef = jax.tree_util.tree_flatten(local_mean)
         up_keys = jax.random.split(k_up, len(leaves))
         meaned = []
         for k_i, leaf in zip(up_keys, leaves):
-            local_mean = jnp.mean(leaf.astype(jnp.float32), axis=0)
-            narrow = stochastic_round_cast(k_i, local_mean)      # bf16 wire
-            m = narrow
-            for ax in (client_axes if isinstance(axis, tuple) else (axis,)):
+            m = stochastic_round_cast(k_i, leaf)        # bf16 wire
+            for ax in axes:
                 m = jax.lax.pmean(m, ax)
-            meaned.append(m.astype(leaf.dtype))
-        ybar = jax.tree_util.tree_unflatten(treedef, meaned)
-        return tree_apply(master_comp, k_master, ybar)
+            meaned.append(m)
+        return jax.tree_util.tree_unflatten(treedef, meaned)
 
-    def average_fn(key, params_stacked):
-        return jax.shard_map(
-            local_fn, mesh=mesh, in_specs=(P(), param_pspecs_stacked),
-            out_specs=out_specs, check_vma=False)(key, params_stacked)
+    return _make_shard_map_average(mesh, client_axes, param_pspecs_stacked,
+                                   master_comp, uplink)
 
-    return average_fn
+
+def make_packed_sharded_average(mesh, client_axes: tuple,
+                                param_pspecs_stacked,
+                                master_comp: Compressor, *,
+                                levels: int = 127, bucket: int = 2048):
+    """Beyond-paper: an ``average_fn`` whose UPLINK collective moves the
+    packed int8 QSGD payload — genuinely ~8.25 bits/element on the wire.
+
+    Inside a shard_map over the full mesh each client shard (1) averages
+    its local clients, (2) quantizes the mean with the flat-buffer engine
+    into (int8 codes, per-bucket fp32 norms), (3) ``all_gather``s the
+    payload over the client axes — the collective carries int8, a ~3.9x
+    byte reduction vs dequantized fp32 — and (4) dequantizes every
+    gathered payload locally and averages.  Each shard's dequantized
+    payload is an unbiased estimate of its local mean, so the gathered
+    average is unbiased for xbar (Lemma 2 unaffected).  Downlink: C_M
+    applied shard-wise with a shared key, exactly as
+    :func:`make_sharded_average`.  Wire accounting: DESIGN.md §3.
+    """
+
+    def uplink(k_up, local_mean, axes):
+        payload, layout = pack_tree_qsgd(k_up, local_mean, levels=levels,
+                                         bucket=bucket)
+        codes, norms = payload
+        for ax in axes:                       # int8 on the wire
+            codes = jax.lax.all_gather(codes, ax)
+            norms = jax.lax.all_gather(norms, ax)
+        codes = codes.reshape((-1,) + payload.codes.shape)
+        norms = norms.reshape((-1,) + payload.norms.shape)
+        deq2d = jnp.mean(codes.astype(jnp.float32) * (norms / float(levels)),
+                         axis=0)
+        return unravel(layout, unbucketize(deq2d, layout.d))
+
+    return _make_shard_map_average(mesh, client_axes, param_pspecs_stacked,
+                                   master_comp, uplink)
 
 
 def compressed_average_wire(key: jax.Array, params_local, master_comp: Compressor,

@@ -17,8 +17,10 @@ Implemented (Table I of the paper):
   and top-k (biased, proof-of-concept, exactly as the paper uses it).
 
 All randomness is explicit via jax PRNG keys. ``apply`` returns the
-*dequantized* value C(x) (same shape/dtype as x); quantized wire payloads
-for the Pallas fast path live in :mod:`repro.kernels`.
+*dequantized* value C(x) (same shape/dtype as x).  Whole-pytree
+compression (:func:`tree_apply`) routes qsgd/natural through the
+flat-buffer engine (:mod:`repro.core.flatbuf`): one fused kernel launch
+with in-kernel RNG; quantized int8 wire payloads live there too.
 """
 from __future__ import annotations
 
@@ -29,6 +31,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+import repro.core.flatbuf as flatbuf
 
 __all__ = [
     "Compressor", "Identity", "QSGD", "Natural", "TernGrad", "Bernoulli",
@@ -107,9 +111,7 @@ class QSGD(Compressor):
 
     def _apply_flat(self, key, x):
         d = x.shape[0]
-        b = self.bucket
-        pad = (-d) % b
-        xp = jnp.pad(x, (0, pad)).reshape(-1, b)
+        xp = flatbuf.bucketize(x, self.bucket)
         norm = jnp.linalg.norm(xp, axis=1, keepdims=True)
         safe = jnp.where(norm == 0.0, 1.0, norm)
         s = float(self.levels)
@@ -120,7 +122,7 @@ class QSGD(Compressor):
         q = lo + (u < prob).astype(jnp.float32)
         out = jnp.sign(xp) * q / s * norm
         out = jnp.where(norm == 0.0, 0.0, out)
-        return out.reshape(-1)[:d]
+        return flatbuf.unbucketize(out, d)
 
     def omega(self, shape) -> float:
         d = min(self.bucket, _nelem(shape))
@@ -178,16 +180,14 @@ class TernGrad(Compressor):
 
     def _apply_flat(self, key, x):
         d = x.shape[0]
-        b = self.bucket
-        pad = (-d) % b
-        xp = jnp.pad(x, (0, pad)).reshape(-1, b)
+        xp = flatbuf.bucketize(x, self.bucket)
         mx = jnp.max(jnp.abs(xp), axis=1, keepdims=True)
         safe = jnp.where(mx == 0.0, 1.0, mx)
         prob = jnp.abs(xp) / safe
         u = jax.random.uniform(key, xp.shape)
         tern = (u < prob).astype(jnp.float32) * jnp.sign(xp)
         out = tern * mx
-        return out.reshape(-1)[:d]
+        return flatbuf.unbucketize(out, d)
 
     def omega(self, shape) -> float:
         # E||C(x)-x||^2 = sum |x_i|(M - |x_i|) <= (sqrt(d) - 1) ||x||^2
@@ -301,16 +301,45 @@ def make_compressor(name: str, **kwargs) -> Compressor:
 # pytree helpers
 # --------------------------------------------------------------------------
 
-def tree_apply(comp: Compressor, key: jax.Array, tree):
-    """Apply a compressor leaf-wise with independent per-leaf keys."""
+def tree_apply(comp: Compressor, key: jax.Array, tree, *,
+               flat: Optional[bool] = None):
+    """Apply a compressor to a whole pytree.
+
+    ``flat=None`` (default) routes qsgd/natural through the flat-buffer
+    engine — ONE fused kernel launch with in-kernel RNG for the entire
+    pytree (:func:`repro.core.flatbuf.flat_tree_apply`) — and every other
+    compressor through the legacy leaf-wise path (independent per-leaf
+    keys).  Pass ``flat=False`` to pin the leaf-wise path (e.g. under
+    pjit sharding, where raveling would force an all-gather) or
+    ``flat=True`` to require the engine.
+    """
+    if flat is None:
+        flat = flatbuf.supports_flat(comp)
+    if flat:
+        return flatbuf.flat_tree_apply(comp, key, tree)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     keys = jax.random.split(key, len(leaves))
     out = [comp.apply(k, leaf) for k, leaf in zip(keys, leaves)]
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def tree_wire_bits(comp: Compressor, tree) -> float:
-    """Total wire bits to send a compressed pytree once."""
+def tree_wire_bits(comp: Compressor, tree, *,
+                   flat: Optional[bool] = None) -> float:
+    """Total wire bits to send a compressed pytree once.
+
+    Mirrors :func:`tree_apply`'s routing: the flat path charges the
+    compressor's width over the single raveled buffer (buckets span leaf
+    boundaries), the leaf-wise path sums per-leaf widths.  See
+    DESIGN.md §3 for the accounting rules and
+    :func:`repro.core.flatbuf.packed_wire_bits` for the exact packed
+    payload size.
+    """
+    if flat is None:
+        flat = flatbuf.supports_flat(comp)
+    if flat:
+        d = sum(_nelem(leaf.shape)
+                for leaf in jax.tree_util.tree_leaves(tree))
+        return comp.wire_bits((d,)) if d else 0.0
     return sum(comp.wire_bits(leaf.shape) for leaf in jax.tree_util.tree_leaves(tree))
 
 

@@ -1,0 +1,227 @@
+"""Flat-buffer compression engine — one-launch whole-pytree compression.
+
+The legacy path compressed pytrees leaf-by-leaf: per-leaf PRNG splits,
+per-leaf pad/reshape, per-leaf kernel dispatch — O(n_leaves) launches of a
+bandwidth-bound elementwise op.  This engine ravels the entire parameter
+pytree into ONE contiguous float32 buffer with precomputed static offsets
+(:class:`FlatLayout`), buckets it once, and compresses it in a single
+fused pass with in-kernel RNG (see DESIGN.md §2, repro/kernels).
+
+Public surface:
+
+  layout_of / ravel / unravel   — pytree <-> flat buffer, static offsets
+  bucketize / unbucketize       — THE pad/bucket/reshape logic (shared by
+                                  kernels/qsgd/ops.py and compressors.QSGD)
+  seeds_of                      — PRNG key -> (2,) uint32 kernel seeds
+  flat_tree_apply               — fused whole-pytree C(x); the fast path
+                                  behind compressors.tree_apply
+  pack_tree_qsgd / unpack_tree_qsgd / QSGDPayload
+                                — int8 wire payload (codes + bucket norms)
+  packed_wire_bits / payload_wire_bits
+                                — exact packed-payload bit accounting
+                                  (DESIGN.md §3)
+
+Sharding note: raveling concatenates leaves, so under SPMD a
+model-axis-sharded weight is re-laid-out before compression.  For the
+single-host simulator and the shard_map runtime (where leaves are local
+shards) this is free; for the pjit runtime with sharded stacked params the
+legacy leaf-wise path is pinned via ``tree_apply(..., flat=False)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.natural.kernel import natural_fused
+from repro.kernels.qsgd.kernel import qsgd_fused, qsgd_pack, qsgd_unpack
+
+__all__ = [
+    "FlatLayout", "QSGDPayload", "layout_of", "ravel", "unravel",
+    "bucketize", "unbucketize", "seeds_of", "supports_flat",
+    "flat_tree_apply", "pack_tree_qsgd", "unpack_tree_qsgd",
+    "payload_wire_bits", "packed_wire_bits",
+]
+
+_LANE = 128          # natural compression buckets = one VPU lane row
+
+
+def supports_flat(comp) -> bool:
+    """True for compressors with a fused flat-engine kernel."""
+    return getattr(comp, "name", None) in ("qsgd", "natural")
+
+
+# --------------------------------------------------------------------------
+# layout: pytree <-> flat buffer
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    """Static metadata of a raveled pytree: leaf shapes/dtypes and their
+    offsets into the flat float32 buffer, plus the bucket geometry."""
+
+    treedef: Any
+    shapes: tuple          # per-leaf shapes
+    dtypes: tuple          # per-leaf dtypes
+    offsets: tuple         # per-leaf start offset into the flat buffer
+    d: int                 # total element count
+    bucket: int
+
+    @property
+    def n_buckets(self) -> int:
+        return max(-(-self.d // self.bucket), 1)
+
+    @property
+    def padded(self) -> int:
+        return self.n_buckets * self.bucket
+
+    @property
+    def pad(self) -> int:
+        return self.padded - self.d
+
+
+def layout_of(tree, bucket: int = 2048) -> FlatLayout:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(tuple(leaf.shape) for leaf in leaves)
+    dtypes = tuple(leaf.dtype for leaf in leaves)
+    sizes = [int(np.prod(s)) if len(s) else 1 for s in shapes]
+    offsets = tuple(int(o) for o in np.cumsum([0] + sizes[:-1]))
+    return FlatLayout(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                      offsets=offsets, d=int(sum(sizes)), bucket=int(bucket))
+
+
+def ravel(layout: FlatLayout, tree) -> jax.Array:
+    """Concatenate all leaves into one (d,) float32 buffer."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((0,), jnp.float32)
+    return jnp.concatenate(
+        [leaf.reshape(-1).astype(jnp.float32) for leaf in leaves])
+
+
+def unravel(layout: FlatLayout, flat: jax.Array):
+    """Slice the flat buffer back into the original pytree (dtypes
+    restored per leaf)."""
+    leaves = []
+    for shape, dtype, off in zip(layout.shapes, layout.dtypes,
+                                 layout.offsets):
+        n = int(np.prod(shape)) if len(shape) else 1
+        leaves.append(flat[off:off + n].reshape(shape).astype(dtype))
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)
+
+
+def bucketize(x: jax.Array, bucket: int) -> jax.Array:
+    """Pad a flat buffer to a bucket multiple and view it (n_buckets,
+    bucket).  This is the single pad/bucket/reshape implementation shared
+    by the engine, kernels/qsgd/ops.py and compressors.QSGD."""
+    flat = x.reshape(-1)
+    d = flat.shape[0]
+    pad = (-d) % bucket
+    if d == 0:
+        return jnp.zeros((1, bucket), flat.dtype)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, bucket)
+
+
+def unbucketize(x2d: jax.Array, d: int) -> jax.Array:
+    return x2d.reshape(-1)[:d]
+
+
+def seeds_of(key: jax.Array) -> jax.Array:
+    """Fold a JAX PRNG key (typed or raw uint32) into the (2,) uint32 seed
+    pair consumed by the in-kernel counter RNG.  Pure bit movement — no
+    threefry invocation, so no noise-sized intermediate ever exists."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        data = jax.random.key_data(key)
+    else:
+        data = jnp.asarray(key)
+    data = data.reshape(-1).astype(jnp.uint32)
+    # XOR-fold ALL words down to two (threefry keys are exactly two; rbg
+    # keys are four), alternating words between the lanes so any
+    # differing word changes the stream; decorrelate the lanes when only
+    # one word is distinct.
+    words = [data[i] for i in range(data.shape[0])]
+    s0 = words[0]
+    for w in words[2::2]:
+        s0 = s0 ^ w
+    odds = words[1::2] or [words[0]]
+    s1 = odds[0]
+    for w in odds[1:]:
+        s1 = s1 ^ w
+    return jnp.stack([s0, s1 ^ jnp.uint32(0x9E3779B9)])
+
+
+# --------------------------------------------------------------------------
+# fused whole-pytree compression
+# --------------------------------------------------------------------------
+
+def _engine_bucket(comp) -> int:
+    return int(getattr(comp, "bucket", None) or _LANE)
+
+
+def flat_tree_apply(comp, key: jax.Array, tree):
+    """Compress a whole pytree in ONE fused pass: ravel -> bucketize ->
+    kernel with in-kernel RNG -> unravel.  Statistically equivalent to the
+    leaf-wise path (every bucket remains unbiased; buckets may span leaf
+    boundaries) with O(1) instead of O(n_leaves) dispatches and zero
+    full-size noise arrays."""
+    if not supports_flat(comp):
+        raise ValueError(f"no flat engine for compressor {comp!r}")
+    bucket = _engine_bucket(comp)
+    layout = layout_of(tree, bucket)
+    if layout.d == 0:
+        return tree
+    x2d = bucketize(ravel(layout, tree), bucket)
+    seeds = seeds_of(key)
+    if comp.name == "qsgd":
+        y2d = qsgd_fused(x2d, seeds, levels=comp.levels)
+    else:
+        y2d = natural_fused(x2d, seeds)
+    return unravel(layout, unbucketize(y2d, layout.d))
+
+
+# --------------------------------------------------------------------------
+# packed int8 QSGD wire payload
+# --------------------------------------------------------------------------
+
+class QSGDPayload(NamedTuple):
+    """What actually crosses the wire: int8 sign*magnitude codes plus one
+    float32 norm per bucket — ~8.25 bits/element at bucket=2048 instead of
+    the dequantized 32 (DESIGN.md §3)."""
+
+    codes: jax.Array   # int8 (n_buckets, bucket)
+    norms: jax.Array   # float32 (n_buckets, 1)
+
+
+def pack_tree_qsgd(key: jax.Array, tree, *, levels: int = 127,
+                   bucket: int = 2048):
+    """Quantize a whole pytree to its wire payload.  Returns
+    (payload, layout); feed both to :func:`unpack_tree_qsgd`."""
+    layout = layout_of(tree, bucket)
+    x2d = bucketize(ravel(layout, tree), bucket)
+    codes, norms = qsgd_pack(x2d, seeds_of(key), levels=levels)
+    return QSGDPayload(codes, norms), layout
+
+
+def unpack_tree_qsgd(payload: QSGDPayload, layout: FlatLayout, *,
+                     levels: int = 127):
+    """Dequantize a payload back to the pytree — bit-exact vs the
+    dequantized output of :func:`flat_tree_apply` under the same key."""
+    y2d = qsgd_unpack(payload.codes, payload.norms, levels=levels)
+    return unravel(layout, unbucketize(y2d, layout.d))
+
+
+def payload_wire_bits(payload: QSGDPayload) -> int:
+    """Exact bits moved by a payload: 8/code (padding included) plus a
+    32-bit norm per bucket."""
+    return int(payload.codes.size) * 8 + int(payload.norms.size) * 32
+
+
+def packed_wire_bits(tree, *, bucket: int = 2048) -> int:
+    """Exact packed-payload size for a pytree, without materializing it."""
+    layout = layout_of(tree, bucket)
+    return layout.padded * 8 + layout.n_buckets * 32

@@ -103,7 +103,7 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
               grad_fn: Callable, hp: L2GDHyper,
               client_comp: Compressor = Identity(),
               master_comp: Compressor = Identity(),
-              average_fn: Callable = None):
+              average_fn: Callable = None, flat: bool = None):
     """One step of Algorithm 1.
 
     Args:
@@ -120,6 +120,9 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
       average_fn: optional override of the compressed-average realization,
              ``(key, params_stacked) -> target`` — used by the beyond-paper
              wire-compressed shard_map aggregation (see repro.launch.steps).
+      flat:  routing for :func:`compressed_average`'s compression — None
+             (auto: flat-buffer engine where supported, the single-host
+             default) or False (leaf-wise; pinned by the pjit runtime).
 
     Returns: (new_state, metrics dict).  Metrics include the mean client
     loss (evaluated in branch 0; NaN-free zeros otherwise) and the branch id.
@@ -139,7 +142,8 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
         if average_fn is not None:
             target = average_fn(k, st.params)
         else:
-            target = compressed_average(k, st.params, client_comp, master_comp)
+            target = compressed_average(k, st.params, client_comp,
+                                        master_comp, flat=flat)
         new_params = aggregation_update(st.params, target, hp)
         return (L2GDState(new_params, target, jnp.asarray(1, jnp.int32),
                           st.step + 1),

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Compressor, Identity, L2GDHyper, init_state,
+from repro.core import (Compressor, Identity, L2GDHyper, flatbuf, init_state,
                         l2gd_step, tree_wire_bits)
 from repro.fl.ledger import BitsLedger
 
@@ -39,11 +39,20 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
              client_comp: Compressor = Identity(),
              master_comp: Compressor = Identity(),
              eval_fn: Optional[Callable] = None, eval_every: int = 50,
-             seed: int = 0, jit: bool = True) -> L2GDRun:
+             seed: int = 0, jit: bool = True,
+             packed_uplink: bool = False) -> L2GDRun:
     """Run Algorithm 1 for ``steps`` iterations.
 
     batch_fn(step) -> per-client batch pytree (leading client axis n).
     grad_fn(params_i, batch_i) -> (loss_i, grads_i).
+
+    Bits accounting mirrors the path :func:`repro.core.compressors.
+    tree_apply` actually takes (DESIGN.md §3): flat-engine compressors are
+    charged over the single raveled buffer, others leaf-wise.  With
+    ``packed_uplink=True`` (qsgd client compressor) the uplink is charged
+    at the EXACT packed int8 payload size — codes incl. bucket padding
+    plus one fp32 norm per bucket — matching what
+    :func:`repro.core.flatbuf.pack_tree_qsgd` would put on the wire.
     """
     state = init_state(params_stacked)
     ledger = BitsLedger(hp.n)
@@ -57,7 +66,14 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
 
     # wire bits for one client's model / one broadcast (shape-static)
     one_client = jax.tree.map(lambda a: a[0], params_stacked)
-    up_bits = tree_wire_bits(client_comp, one_client)
+    if packed_uplink:
+        if client_comp.name != "qsgd":
+            raise ValueError("packed_uplink requires a qsgd client "
+                             f"compressor, got {client_comp.name!r}")
+        up_bits = float(flatbuf.packed_wire_bits(
+            one_client, bucket=client_comp.bucket))
+    else:
+        up_bits = tree_wire_bits(client_comp, one_client)
     down_bits = tree_wire_bits(master_comp, one_client)
 
     xi_prev = 1  # Algorithm 1 input: xi_{-1} = 1

@@ -1,12 +1,22 @@
 """Pallas TPU kernels for the perf-critical hot spots, each as
 <name>/{kernel,ops,ref}.py and validated in interpret mode on CPU:
 
-  qsgd            — fused QSGD quantize-dequantize (communication path)
-  natural         — natural compression bit-twiddle (communication path)
+  qsgd            — fused QSGD quantize-dequantize + int8 pack/unpack
+                    (communication path; in-kernel RNG)
+  natural         — natural compression bit-twiddle (communication path;
+                    in-kernel RNG)
   selective_scan  — Mamba S6 scan with VMEM-resident state
   flash_attention — streaming-softmax causal/windowed attention
+
+Shared infrastructure: :mod:`repro.kernels.dispatch` (compiled-vs-
+interpret routing from ``jax.default_backend()`` + VMEM rows autotune)
+and :mod:`repro.kernels.rng` (counter-based in-kernel RNG, bit-compatible
+across compiled/interpret/jnp evaluations).
 """
+from repro.kernels.dispatch import autotune_rows, default_interpret, on_tpu
 from repro.kernels.qsgd.ops import qsgd_compress
+from repro.kernels.qsgd.kernel import (qsgd_fused, qsgd_pack, qsgd_unpack)
 from repro.kernels.natural.ops import natural_compress
+from repro.kernels.natural.kernel import natural_fused
 from repro.kernels.selective_scan.ops import selective_scan_op
 from repro.kernels.flash_attention.ops import flash_attention_op

@@ -1,0 +1,50 @@
+"""Backend dispatch for the compression kernels (see DESIGN.md §5).
+
+The kernels serve three execution modes:
+
+  * compiled Pallas on TPU      — the deployment target; hardware PRNG.
+  * interpret-mode Pallas       — kernel validation on CPU (tests only;
+                                  the interpreter is far too slow for the
+                                  hot path).
+  * pure-jnp fallback           — the CPU hot path: identical math to the
+                                  kernels, one fused XLA elementwise pass,
+                                  bit-compatible with interpret mode.
+
+``default_interpret()`` retires the old hardcoded ``interpret=True``
+defaults: kernels compile whenever the backend is TPU and fall back to
+the interpreter elsewhere.  The flat-buffer engine goes one step further
+and routes CPU traffic to the jnp fallback (``on_tpu()``).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["on_tpu", "default_interpret", "autotune_rows"]
+
+# Working VMEM budget for one pipeline stage.  Cores have ~16 MiB of VMEM;
+# we target a quarter of it so double buffering (x2) plus compiler scratch
+# still fit comfortably.
+_VMEM_BUDGET_BYTES = 4 * 1024 * 1024
+_ROW_ALIGN = 8  # float32 sublane count
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    """Pallas mode for the current backend: compiled on TPU, interpret
+    elsewhere (CPU/GPU run the kernels through the interpreter)."""
+    return not on_tpu()
+
+
+def autotune_rows(n_buckets: int, bucket: int, *, n_buffers: int = 3,
+                  itemsize: int = 4,
+                  vmem_budget: int = _VMEM_BUDGET_BYTES) -> int:
+    """Rows (buckets) per grid step so ``n_buffers`` live (rows, bucket)
+    tiles fit in the VMEM budget, sublane-aligned and clamped to the grid.
+    """
+    bytes_per_row = max(n_buffers * bucket * itemsize, 1)
+    rows = vmem_budget // bytes_per_row
+    rows = (rows // _ROW_ALIGN) * _ROW_ALIGN
+    return int(min(max(rows, 1), max(n_buckets, 1)))

@@ -1,4 +1,4 @@
-"""Natural compression — Pallas TPU kernel.
+"""Natural compression — Pallas TPU kernels.
 
 Stochastic rounding of the float32 magnitude to a power of two via uint32
 bit manipulation (probability of bumping the exponent = mantissa / 2^23,
@@ -6,7 +6,12 @@ which is exactly unbiased).  Elementwise -> trivially tileable; the win on
 TPU is fusing bitcast + mask + select in VMEM on the communication path
 instead of five separate HBM-bound elementwise HLO ops.
 
-Tiles are (rows, 128): lane-aligned for the VPU.
+Tiles are (rows, 128): lane-aligned for the VPU, ``rows`` autotuned to a
+VMEM budget.  As with the QSGD kernels, dither noise is generated inside
+the kernel (hardware PRNG when compiled on TPU, the counter RNG from
+:mod:`repro.kernels.rng` in interpret mode / the jnp CPU fallback), so no
+full-size noise operand is read from HBM.  The legacy explicit-noise
+entry point (:func:`natural_compress_2d`) remains the oracle surface.
 """
 from __future__ import annotations
 
@@ -15,13 +20,16 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["natural_compress_2d"]
+from repro.kernels.dispatch import autotune_rows, default_interpret, on_tpu
+from repro.kernels.natural.ref import natural_compress_ref, natural_fused_ref
+from repro.kernels.rng import bits_to_uniform, counter_bits
+
+__all__ = ["natural_compress_2d", "natural_fused", "natural_fused_pallas"]
 
 
-def _natural_kernel(x_ref, u_ref, o_ref):
-    x = x_ref[...].astype(jnp.float32)
-    u = u_ref[...]
+def _round_to_pow2(x, u):
     bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
     mantissa = bits & jnp.uint32(0x7FFFFF)
     prob = mantissa.astype(jnp.float32) * (1.0 / float(1 << 23))
@@ -29,13 +37,22 @@ def _natural_kernel(x_ref, u_ref, o_ref):
     rounded = (bits & jnp.uint32(0xFF800000)) + (up << 23)
     out = jax.lax.bitcast_convert_type(rounded, jnp.float32)
     passthrough = (x == 0.0) | ~jnp.isfinite(x)
-    o_ref[...] = jnp.where(passthrough, x, out).astype(o_ref.dtype)
+    return jnp.where(passthrough, x, out)
+
+
+def _natural_kernel(x_ref, u_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = _round_to_pow2(x, u_ref[...]).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("rows", "interpret"))
-def natural_compress_2d(x2d: jax.Array, noise: jax.Array, *, rows: int = 256,
-                        interpret: bool = True) -> jax.Array:
+def natural_compress_2d(x2d: jax.Array, noise: jax.Array, *, rows: int = None,
+                        interpret: bool = None) -> jax.Array:
     n, b = x2d.shape
+    if interpret is None:
+        interpret = default_interpret()
+    if rows is None:
+        rows = autotune_rows(n, b, n_buffers=3)
     rows = min(rows, n)
     return pl.pallas_call(
         _natural_kernel,
@@ -46,3 +63,59 @@ def natural_compress_2d(x2d: jax.Array, noise: jax.Array, *, rows: int = 256,
         out_shape=jax.ShapeDtypeStruct((n, b), x2d.dtype),
         interpret=interpret,
     )(x2d, noise)
+
+
+def _natural_fused_kernel(seeds_ref, x_ref, o_ref, *, hw_rng: bool):
+    x = x_ref[...].astype(jnp.float32)
+    if hw_rng:
+        pltpu.prng_seed(seeds_ref[0], seeds_ref[1], pl.program_id(0))
+        bits = pltpu.prng_random_bits(x.shape)
+        if bits.dtype != jnp.uint32:
+            bits = jax.lax.bitcast_convert_type(bits, jnp.uint32)
+        u = bits_to_uniform(bits)
+    else:
+        row0 = (pl.program_id(0) * x.shape[0]).astype(jnp.uint32)
+        r = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 0)
+        c = jax.lax.broadcasted_iota(jnp.uint32, x.shape, 1)
+        idx = (row0 + r) * jnp.uint32(x.shape[1]) + c
+        u = bits_to_uniform(counter_bits(idx, seeds_ref[0], seeds_ref[1]))
+    o_ref[...] = _round_to_pow2(x, u).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "interpret", "hw_rng"))
+def natural_fused_pallas(x2d: jax.Array, seeds: jax.Array, *,
+                         rows: int = None, interpret: bool = None,
+                         hw_rng: bool = None) -> jax.Array:
+    """One-launch natural compression with in-kernel noise; ``seeds`` is a
+    (2,) uint32 array (see :func:`repro.core.flatbuf.seeds_of`)."""
+    n, b = x2d.shape
+    if interpret is None:
+        interpret = default_interpret()
+    if hw_rng is None:
+        hw_rng = not interpret
+    if rows is None:
+        rows = autotune_rows(n, b, n_buffers=2)
+    rows = min(rows, n)
+    seed_spec = (pl.BlockSpec(seeds.shape, lambda i: (0,)) if interpret
+                 else pl.BlockSpec(memory_space=pltpu.SMEM))
+    return pl.pallas_call(
+        functools.partial(_natural_fused_kernel, hw_rng=hw_rng),
+        grid=(pl.cdiv(n, rows),),
+        in_specs=[seed_spec, pl.BlockSpec((rows, b), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b), x2d.dtype),
+        interpret=interpret,
+    )(seeds, x2d)
+
+
+_natural_fused_jnp = jax.jit(natural_fused_ref)
+
+
+def natural_fused(x2d: jax.Array, seeds: jax.Array, *,
+                  rows: int = None) -> jax.Array:
+    """Backend-dispatched fused natural compression: compiled Pallas +
+    hardware PRNG on TPU, single fused jnp pass elsewhere."""
+    if on_tpu():
+        return natural_fused_pallas(x2d, seeds, rows=rows, interpret=False,
+                                    hw_rng=True)
+    return _natural_fused_jnp(x2d, seeds)

@@ -1,21 +1,26 @@
-"""jit'd wrapper: natural compression of arbitrary arrays via the kernel."""
+"""Public wrapper: single-array natural compression via the fused kernels.
+
+Lane-padding is routed through the flat-buffer engine's bucketizer and
+noise is generated in-kernel; backend dispatch is automatic (compiled
+Pallas on TPU, fused jnp elsewhere).  Pass ``interpret`` explicitly to
+pin the interpret-mode Pallas kernel (tests)."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.kernels.natural.kernel import natural_compress_2d
+from repro.kernels.natural.kernel import natural_fused, natural_fused_pallas
 
 __all__ = ["natural_compress"]
 
 _LANE = 128
 
 
-def natural_compress(key, x, *, interpret: bool = True):
-    flat = x.reshape(-1).astype(jnp.float32)
+def natural_compress(key, x, *, interpret: bool = None):
+    from repro.core.flatbuf import bucketize, seeds_of, unbucketize
+    flat = x.reshape(-1)
     d = flat.shape[0]
-    pad = (-d) % _LANE
-    x2d = jnp.pad(flat, (0, pad)).reshape(-1, _LANE)
-    noise = jax.random.uniform(key, x2d.shape)
-    out = natural_compress_2d(x2d, noise, interpret=interpret)
-    return out.reshape(-1)[:d].reshape(x.shape).astype(x.dtype)
+    x2d = bucketize(flat.astype("float32"), _LANE)
+    seeds = seeds_of(key)
+    if interpret is None:
+        out = natural_fused(x2d, seeds)
+    else:
+        out = natural_fused_pallas(x2d, seeds, interpret=interpret)
+    return unbucketize(out, d).reshape(x.shape).astype(x.dtype)

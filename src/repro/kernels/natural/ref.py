@@ -1,9 +1,13 @@
-"""Pure-jnp oracle for natural compression (bit-exact: same noise input).
-Identical math to repro.core.compressors.Natural."""
+"""Pure-jnp oracles for natural compression (bit-exact: same noise stream).
+Identical math to repro.core.compressors.Natural; ``natural_fused_ref``
+evaluates the counter-RNG stream and doubles as the CPU fallback behind
+the backend dispatch in kernel.py."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.rng import counter_uniform_2d
 
 
 def natural_compress_ref(x2d, noise):
@@ -16,3 +20,8 @@ def natural_compress_ref(x2d, noise):
     out = jax.lax.bitcast_convert_type(rounded, jnp.float32)
     passthrough = (x == 0.0) | ~jnp.isfinite(x)
     return jnp.where(passthrough, x, out).astype(x2d.dtype)
+
+
+def natural_fused_ref(x2d, seeds):
+    """In-kernel-RNG oracle: counter noise + power-of-two rounding."""
+    return natural_compress_ref(x2d, counter_uniform_2d(seeds, x2d.shape))

@@ -1,22 +1,29 @@
-"""jit'd public wrapper: flat-pytree-leaf QSGD compression via the Pallas
-kernel, with padding/bucketing handled here."""
+"""Public wrapper: single-array QSGD compression via the fused kernels.
+
+Padding/bucketing is routed through the flat-buffer engine's bucketizer
+(:func:`repro.core.flatbuf.bucketize`) — the one implementation shared
+with ``compressors.QSGD`` — and noise is generated in-kernel, so there is
+no full-size noise operand.  Backend dispatch (compiled Pallas on TPU,
+fused jnp elsewhere) is automatic; pass ``interpret`` explicitly to pin
+the interpret-mode Pallas kernel (tests)."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.kernels.qsgd.kernel import qsgd_dequantized
+from repro.kernels.qsgd.kernel import qsgd_fused, qsgd_fused_pallas
 
 __all__ = ["qsgd_compress"]
 
 
 def qsgd_compress(key, x, *, levels: int = 127, bucket: int = 2048,
-                  interpret: bool = True):
+                  interpret: bool = None):
     """Quantize-dequantize an arbitrary-shape array (compressor semantics)."""
-    flat = x.reshape(-1).astype(jnp.float32)
+    from repro.core.flatbuf import bucketize, seeds_of, unbucketize
+    flat = x.reshape(-1)
     d = flat.shape[0]
-    pad = (-d) % bucket
-    x2d = jnp.pad(flat, (0, pad)).reshape(-1, bucket)
-    noise = jax.random.uniform(key, x2d.shape)
-    out = qsgd_dequantized(x2d, noise, levels=levels, interpret=interpret)
-    return out.reshape(-1)[:d].reshape(x.shape).astype(x.dtype)
+    x2d = bucketize(flat.astype("float32"), bucket)
+    seeds = seeds_of(key)
+    if interpret is None:
+        out = qsgd_fused(x2d, seeds, levels=levels)
+    else:
+        out = qsgd_fused_pallas(x2d, seeds, levels=levels,
+                                interpret=interpret)
+    return unbucketize(out, d).reshape(x.shape).astype(x.dtype)

@@ -1,10 +1,17 @@
-"""Pure-jnp oracle for the QSGD kernel (bit-exact: same noise input)."""
+"""Pure-jnp oracles for the QSGD kernels (bit-exact: same noise stream).
+
+``qsgd_dequantized_ref`` takes explicit noise (the legacy oracle);
+``qsgd_fused_ref`` / ``qsgd_pack_ref`` / ``qsgd_unpack_ref`` evaluate the
+counter-RNG stream over the whole buffer and double as the CPU fallback
+behind the backend dispatch in kernel.py (DESIGN.md §5-§6)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels.rng import counter_uniform_2d
 
-def qsgd_dequantized_ref(x2d, noise, *, levels: int = 127):
+
+def _quantize_ref(x2d, noise, levels: int):
     x = x2d.astype(jnp.float32)
     norm = jnp.sqrt(jnp.sum(x * x, axis=1, keepdims=True))
     safe = jnp.where(norm == 0.0, 1.0, norm)
@@ -12,5 +19,27 @@ def qsgd_dequantized_ref(x2d, noise, *, levels: int = 127):
     scaled = jnp.abs(x) / safe * s
     lo = jnp.floor(scaled)
     q = lo + (noise < (scaled - lo)).astype(jnp.float32)
-    out = jnp.sign(x) * q * (norm / s)
+    return jnp.sign(x) * q, norm
+
+
+def qsgd_dequantized_ref(x2d, noise, *, levels: int = 127):
+    codes, norm = _quantize_ref(x2d, noise, levels)
+    out = codes * (norm / float(levels))
     return jnp.where(norm == 0.0, 0.0, out).astype(x2d.dtype)
+
+
+def qsgd_fused_ref(x2d, seeds, *, levels: int = 127):
+    """In-kernel-RNG oracle: counter noise + quantize-dequantize."""
+    return qsgd_dequantized_ref(
+        x2d, counter_uniform_2d(seeds, x2d.shape), levels=levels)
+
+
+def qsgd_pack_ref(x2d, seeds, *, levels: int = 127):
+    """Oracle for the packed payload: (codes int8, norms f32 (n, 1))."""
+    codes, norm = _quantize_ref(x2d, counter_uniform_2d(seeds, x2d.shape),
+                                levels)
+    return codes.astype(jnp.int8), norm
+
+
+def qsgd_unpack_ref(codes, norms, *, levels: int = 127):
+    return codes.astype(jnp.float32) * (norms / float(levels))

@@ -131,9 +131,13 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
             pspec = param_pspecs(state_sds.params, model_size, cax)
             average_fn = None
             if variant == "wire_agg":
-                from repro.core.aggregation import make_sharded_average
-                average_fn = make_sharded_average(
-                    mesh, cax, pspec, make_compressor("natural"))
+                from repro.launch.steps import build_average_fn
+                average_fn = build_average_fn(
+                    "wire", mesh, cax, pspec, make_compressor("natural"))
+            elif variant == "packed_agg":
+                from repro.launch.steps import build_average_fn
+                average_fn = build_average_fn(
+                    "packed", mesh, cax, pspec, make_compressor("natural"))
             step = build_train_step(cfg, hp, make_compressor("natural"),
                                     make_compressor("natural"),
                                     average_fn=average_fn)

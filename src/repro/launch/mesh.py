@@ -12,9 +12,26 @@ inter-pod links — exactly the regime the paper's compression targets.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
 
-__all__ = ["make_production_mesh", "client_axes", "n_clients_of"]
+try:
+    from jax.sharding import AxisType
+except ImportError:  # older jax: no explicit-sharding axis types
+    AxisType = None
+
+__all__ = ["make_compat_mesh", "make_production_mesh", "client_axes",
+           "n_clients_of"]
+
+
+def make_compat_mesh(shape, axes, devices):
+    """jax.make_mesh across jax versions: newer jax wants explicit
+    AxisType.Auto axis types, older jax has neither the kwarg nor the
+    enum.  The single compat implementation — tests use it too."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, devices=devices,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices).reshape(shape), axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,9 +40,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     n = 1
     for s in shape:
         n *= s
-    devices = jax.devices()[:n]
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_compat_mesh(shape, axes, jax.devices()[:n])
 
 
 def client_axes(mesh) -> tuple:

@@ -1,0 +1,59 @@
+"""Deterministic fallback for the slice of the hypothesis API this suite
+uses, so `pytest -x -q` runs green without the optional dependency
+(requirements.txt lists it; install it for real shrinking/edge-case
+search).  ``@given`` draws ``max_examples`` pseudo-random samples from
+each strategy with a fixed seed — no shrinking, no database."""
+from __future__ import annotations
+
+import random as _random
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample  # (random.Random) -> value
+
+
+class strategies:
+    @staticmethod
+    def sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value, **kwargs):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def settings(**kwargs):
+    max_examples = kwargs.get("max_examples", _DEFAULT_EXAMPLES)
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # NB: no functools.wraps — copying fn's signature would make
+        # pytest resolve the strategy parameters as fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", _DEFAULT_EXAMPLES))
+            rng = _random.Random(0)
+            for _ in range(n):
+                fn(*(s.sample(rng) for s in strats))
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep — deterministic stub fallback
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import make_compressor, tree_apply, tree_wire_bits, joint_omega
 

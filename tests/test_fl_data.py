@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep — deterministic stub fallback
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro import checkpoint
 from repro.core import L2GDHyper, make_compressor

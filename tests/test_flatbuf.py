@@ -1,0 +1,252 @@
+"""Flat-buffer engine tests: layout round-trips, statistical equivalence
+of flat vs leaf-wise tree_apply, bit-exactness of the in-kernel counter
+RNG across pallas-interpret / jnp-fallback / ref oracles, the packed int8
+payload round-trip, the no-noise-array property, and the packed wire-bits
+accounting (ISSUE acceptance criteria)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flatbuf, make_compressor, tree_apply, tree_wire_bits
+from repro.kernels.natural.kernel import natural_fused, natural_fused_pallas
+from repro.kernels.natural.ref import natural_fused_ref
+from repro.kernels.qsgd.kernel import (qsgd_fused, qsgd_fused_pallas,
+                                       qsgd_pack, qsgd_pack_pallas,
+                                       qsgd_unpack)
+from repro.kernels.qsgd.ref import qsgd_fused_ref, qsgd_pack_ref
+from repro.kernels.rng import counter_uniform_2d
+
+
+def _tree(seed=0):
+    """Multi-leaf, mixed-shape/dtype pytree; total size NOT a bucket
+    multiple (exercises the d % bucket != 0 tail)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return {
+        "emb": jax.random.normal(ks[0], (17, 8)),
+        "layers": [
+            {"w": jax.random.normal(ks[1], (64, 33)),
+             "b": jax.random.normal(ks[2], (64,)).astype(jnp.bfloat16)},
+        ],
+        "head": jax.random.normal(ks[3], (5,)),
+    }
+
+
+# --------------------------------------------------------------------------
+# layout / bucketizer
+# --------------------------------------------------------------------------
+
+def test_ravel_unravel_roundtrip():
+    tree = _tree()
+    layout = flatbuf.layout_of(tree, bucket=2048)
+    flat = flatbuf.ravel(layout, tree)
+    assert flat.shape == (layout.d,) and flat.dtype == jnp.float32
+    back = jax.tree.map(lambda a, b: (a.shape, a.dtype) == (b.shape, b.dtype)
+                        and bool(jnp.all(a == b)),
+                        flatbuf.unravel(layout, flat), tree)
+    assert all(jax.tree.leaves(back))
+
+
+@pytest.mark.parametrize("d,bucket", [(1, 128), (128, 128), (129, 128),
+                                      (5000, 2048)])
+def test_bucketize_pads_tail_with_zeros(d, bucket):
+    x = jnp.arange(d, dtype=jnp.float32) + 1.0
+    x2d = flatbuf.bucketize(x, bucket)
+    assert x2d.shape == (-(-d // bucket), bucket)
+    flat = x2d.reshape(-1)
+    assert bool(jnp.all(flat[d:] == 0.0))
+    np.testing.assert_array_equal(np.asarray(flatbuf.unbucketize(x2d, d)),
+                                  np.asarray(x))
+
+
+def test_layout_offsets_and_padding():
+    tree = _tree()
+    layout = flatbuf.layout_of(tree, bucket=2048)
+    sizes = [int(np.prod(s)) if len(s) else 1 for s in layout.shapes]
+    assert layout.d == sum(sizes)
+    assert layout.offsets == tuple(np.cumsum([0] + sizes[:-1]))
+    assert layout.padded == layout.n_buckets * 2048
+    assert 0 < layout.d % 2048 == layout.d - (layout.n_buckets - 1) * 2048
+
+
+# --------------------------------------------------------------------------
+# statistical equivalence: flat engine vs leaf-wise path
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["qsgd", "natural"])
+def test_flat_tree_apply_unbiased_like_leafwise(name):
+    """Both paths are unbiased estimators of the same tree (Assumption 1);
+    flat buckets may span leaf boundaries but each bucket stays unbiased."""
+    comp = make_compressor(name)
+    x = jax.random.normal(jax.random.PRNGKey(1), (700,))
+    tree = {"a": x[:300].reshape(30, 10), "b": x[300:]}
+    keys = jax.random.split(jax.random.PRNGKey(2), 3000)
+
+    def mc(flat):
+        ys = jax.vmap(lambda k: tree_apply(comp, k, tree, flat=flat))(keys)
+        mean = jax.tree.map(lambda a: jnp.mean(a, 0), ys)
+        return jnp.concatenate([mean["a"].reshape(-1), mean["b"]])
+
+    tol = 4.0 * np.sqrt(max(comp.omega((700,)), 0.13)) \
+        * float(jnp.max(jnp.abs(x))) / np.sqrt(3000) + 1e-5
+    assert float(jnp.max(jnp.abs(mc(True) - x))) < tol
+    assert float(jnp.max(jnp.abs(mc(False) - x))) < tol
+
+
+def test_flat_tree_apply_preserves_structure_dtype_zeros():
+    comp = make_compressor("qsgd")
+    tree = {"a": jnp.ones((64, 8)), "b": [jnp.zeros((5,)),
+                                          jnp.ones((7, 3), jnp.bfloat16)]}
+    out = tree_apply(comp, jax.random.PRNGKey(0), tree, flat=True)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    assert out["b"][1].dtype == jnp.bfloat16
+    assert float(jnp.max(jnp.abs(out["b"][0]))) == 0.0  # zeros stay zero
+
+
+# --------------------------------------------------------------------------
+# in-kernel RNG bit-exactness: pallas-interpret == jnp fallback == oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 128), (8, 256), (33, 512)])
+def test_qsgd_in_kernel_rng_matches_ref(shape):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape) * 3.0
+    seeds = flatbuf.seeds_of(jax.random.PRNGKey(42))
+    got = qsgd_fused_pallas(x, seeds, interpret=True, hw_rng=False, rows=8)
+    want = qsgd_fused_ref(x, seeds)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # the backend-dispatched path (jnp fallback on CPU) is bit-identical
+    np.testing.assert_array_equal(np.asarray(qsgd_fused(x, seeds)),
+                                  np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", [(1, 128), (16, 128), (64, 384)])
+def test_natural_in_kernel_rng_matches_ref(shape):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape) * 2.7
+    seeds = flatbuf.seeds_of(jax.random.PRNGKey(43))
+    got = natural_fused_pallas(x, seeds, interpret=True, hw_rng=False, rows=8)
+    want = natural_fused_ref(x, seeds)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(natural_fused(x, seeds)),
+                                  np.asarray(want))
+
+
+def test_counter_rng_tiling_invariant():
+    """The stream depends only on the flat index: any rows tiling of the
+    same buffer sees identical noise."""
+    seeds = flatbuf.seeds_of(jax.random.PRNGKey(3))
+    u = counter_uniform_2d(seeds, (32, 128))
+    u_rows = jnp.concatenate(
+        [counter_uniform_2d(seeds, (8, 128), row_offset=r)
+         for r in range(0, 32, 8)])
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(u_rows))
+    assert float(u.min()) >= 0.0 and float(u.max()) < 1.0
+
+
+# --------------------------------------------------------------------------
+# packed int8 payload
+# --------------------------------------------------------------------------
+
+def test_pack_unpack_bit_exact_vs_fused():
+    x = jax.random.normal(jax.random.PRNGKey(5), (9, 256)) * 4.0
+    seeds = flatbuf.seeds_of(jax.random.PRNGKey(6))
+    codes, norms = qsgd_pack(x, seeds)
+    assert codes.dtype == jnp.int8 and norms.shape == (9, 1)
+    assert int(jnp.max(jnp.abs(codes.astype(jnp.int32)))) <= 127
+    deq = qsgd_unpack(codes, norms)
+    fused = qsgd_fused(x, seeds)
+    np.testing.assert_array_equal(np.asarray(deq), np.asarray(fused))
+    # pallas-interpret pack kernel produces the same payload
+    cp, np_ = qsgd_pack_pallas(x, seeds, interpret=True, hw_rng=False, rows=4)
+    np.testing.assert_array_equal(np.asarray(cp), np.asarray(codes))
+    np.testing.assert_array_equal(np.asarray(np_), np.asarray(norms))
+    # and matches its ref oracle
+    cr, nr = qsgd_pack_ref(x, seeds)
+    np.testing.assert_array_equal(np.asarray(cr), np.asarray(codes))
+    np.testing.assert_array_equal(np.asarray(nr), np.asarray(norms))
+
+
+def test_pack_tree_roundtrip_with_ragged_tail():
+    """Whole-pytree pack -> unpack is bit-exact vs flat_tree_apply,
+    including the d % bucket != 0 tail."""
+    tree = _tree(seed=9)
+    key = jax.random.PRNGKey(10)
+    payload, layout = flatbuf.pack_tree_qsgd(key, tree, bucket=2048)
+    assert layout.d % 2048 != 0
+    unpacked = flatbuf.unpack_tree_qsgd(payload, layout)
+    fused = flatbuf.flat_tree_apply(make_compressor("qsgd"), key, tree)
+    for a, b in zip(jax.tree.leaves(unpacked), jax.tree.leaves(fused)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # zero-norm buckets survive the round trip as exact zeros
+    zt = {"z": jnp.zeros((300,))}
+    pz, lz = flatbuf.pack_tree_qsgd(key, zt)
+    assert float(jnp.max(jnp.abs(flatbuf.unpack_tree_qsgd(pz, lz)["z"]))) == 0.0
+
+
+def test_packed_wire_bits_accounting():
+    """tree_wire_bits (flat) matches the actual packed payload within the
+    per-bucket-norm overhead + padding + the log2(255)-vs-8 rounding."""
+    comp = make_compressor("qsgd")
+    tree = _tree(seed=11)
+    payload, layout = flatbuf.pack_tree_qsgd(jax.random.PRNGKey(0), tree,
+                                             bucket=comp.bucket)
+    actual = flatbuf.payload_wire_bits(payload)
+    assert actual == flatbuf.packed_wire_bits(tree, bucket=comp.bucket)
+    accounted = tree_wire_bits(comp, tree, flat=True)
+    slack = 32 * layout.n_buckets + 8 * layout.pad + 0.01 * layout.d
+    assert abs(actual - accounted) <= slack, (actual, accounted, slack)
+
+
+# --------------------------------------------------------------------------
+# no full-size noise arrays (acceptance criterion)
+# --------------------------------------------------------------------------
+
+def test_flat_path_materializes_no_noise_array():
+    """The flat engine generates dither noise in-kernel from a (2,) seed:
+    its jaxpr contains NO PRNG bit-generation, while the legacy leaf-wise
+    path draws a uniform array per leaf."""
+    comp = make_compressor("qsgd")
+    tree = _tree(seed=12)
+    flat_jaxpr = str(jax.make_jaxpr(
+        lambda k: tree_apply(comp, k, tree, flat=True))(jax.random.PRNGKey(0)))
+    legacy_jaxpr = str(jax.make_jaxpr(
+        lambda k: tree_apply(comp, k, tree, flat=False))(jax.random.PRNGKey(0)))
+    for prim in ("random_bits", "threefry"):
+        assert prim not in flat_jaxpr, prim
+    assert ("random_bits" in legacy_jaxpr) or ("threefry" in legacy_jaxpr)
+    # same holds through the packed path
+    pack_jaxpr = str(jax.make_jaxpr(
+        lambda k: flatbuf.pack_tree_qsgd(k, tree)[0])(jax.random.PRNGKey(0)))
+    for prim in ("random_bits", "threefry"):
+        assert prim not in pack_jaxpr, prim
+    # and in the optimized HLO: no XLA rng instructions at all
+    hlo = jax.jit(lambda k: tree_apply(comp, k, tree, flat=True)) \
+        .lower(jax.random.PRNGKey(0)).compile().as_text()
+    assert "rng-bit-generator" not in hlo
+    assert "rng-get-and-update-state" not in hlo
+
+
+# --------------------------------------------------------------------------
+# packed shard_map aggregation
+# --------------------------------------------------------------------------
+
+def test_packed_sharded_average_unbiased_single_device():
+    """make_packed_sharded_average on a 1x1 mesh == plain mean in
+    expectation (int8 payload on the wire, Lemma 2 intact)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core import make_compressor
+    from repro.core.aggregation import make_packed_sharded_average
+    from test_layouts import _mesh_1x1
+
+    mesh = _mesh_1x1()
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 32))}
+    pspecs = {"w": P("data", None)}
+    avg_fn = make_packed_sharded_average(mesh, ("data",), pspecs,
+                                         make_compressor("natural"),
+                                         bucket=128)
+    with mesh:
+        keys = jax.random.split(jax.random.PRNGKey(1), 1500)
+        outs = jax.vmap(lambda k: avg_fn(k, params)["w"])(keys)
+    xbar = jnp.mean(params["w"], 0)
+    err = float(jnp.max(jnp.abs(jnp.mean(outs, 0) - xbar)))
+    assert err < 0.05, err

@@ -49,15 +49,18 @@ def test_mlp_fused_equivalent_family():
     assert bool(jnp.all(jnp.isfinite(logits)))
 
 
+def _mesh_1x1():
+    from repro.launch.mesh import make_compat_mesh
+    return make_compat_mesh((1, 1), ("data", "model"), jax.devices()[:1])
+
+
 def test_sharded_average_unbiased_single_device():
     """make_sharded_average on a 1x1 mesh == plain mean in expectation."""
-    from jax.sharding import PartitionSpec as P, AxisType
+    from jax.sharding import PartitionSpec as P
     from repro.core import make_compressor
     from repro.core.aggregation import make_sharded_average
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         devices=jax.devices()[:1],
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = _mesh_1x1()
     params = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 32))}
     pspecs = {"w": P("data", None)}
     avg_fn = make_sharded_average(mesh, ("data",), pspecs,

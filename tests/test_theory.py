@@ -4,7 +4,10 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep — deterministic stub fallback
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import theory
 from repro.core.theory import SmoothnessConstants
