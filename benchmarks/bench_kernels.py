@@ -1,8 +1,9 @@
 """Kernel microbenchmarks: us/call of each Pallas kernel (interpret mode on
 CPU — relative numbers; TPU is the deployment target) against its jnp
-oracle, plus derived bandwidth figures, plus the flat-buffer engine's
-whole-pytree compression against the legacy leaf-wise ``tree_apply`` path
-on a multi-leaf model config.
+oracle, plus derived bandwidth figures, plus whole-pytree compression on a
+multi-leaf model config through the CompressionPlan API: flat transport
+(ONE fused launch) vs leafwise, and the packed qsgd/natural wire payloads
+(each asserted equal to the ledger's ``plan.round_bits()``).
 
 Every row is also written machine-readably to BENCH_kernels.json
 (name, us/call, GB/s where applicable, backend) for the perf trajectory.
@@ -16,8 +17,8 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from benchmarks.common import emit, timed
-from repro.core import make_compressor, tree_apply
-from repro.core.flatbuf import pack_tree_qsgd, seeds_of
+from repro.core import make_compressor, make_plan
+from repro.core.flatbuf import seeds_of
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.natural.kernel import natural_fused
@@ -69,14 +70,18 @@ def run():
         us, _ = timed(fn)
         emit(name, us, _gbs(nbytes, us), gbps=nbytes / (us * 1e-6) / 1e9)
 
-    # whole-pytree: flat engine (ONE fused launch) vs legacy per-leaf path
+    # whole-pytree: flat engine (ONE fused launch) vs legacy per-leaf path,
+    # all through the CompressionPlan API (transport pins the path)
     tree = _model_tree()
     nbytes = sum(leaf.nbytes for leaf in jax.tree.leaves(tree))
     comp = make_compressor("qsgd")
     key = jax.random.PRNGKey(3)
-    flat_fn = jax.jit(lambda kk: tree_apply(comp, kk, tree, flat=True))
-    legacy_fn = jax.jit(lambda kk: tree_apply(comp, kk, tree, flat=False))
-    pack_fn = jax.jit(lambda kk: pack_tree_qsgd(kk, tree)[0])
+    plan_flat = make_plan(comp, tree, transport="flat")
+    plan_leaf = make_plan(comp, tree, transport="leafwise")
+    plan_packed = make_plan(comp, tree, transport="packed")
+    flat_fn = jax.jit(lambda kk: plan_flat.apply(kk, tree))
+    legacy_fn = jax.jit(lambda kk: plan_leaf.apply(kk, tree))
+    pack_fn = jax.jit(lambda kk: plan_packed.encode(kk, tree))
     us_flat, _ = timed(flat_fn, key)
     us_legacy, _ = timed(legacy_fn, key)
     us_pack, payload = timed(pack_fn, key)
@@ -89,22 +94,34 @@ def run():
          gbps=nbytes / (us_legacy * 1e-6) / 1e9, n_leaves=n_leaves,
          speedup_flat=round(us_legacy / us_flat, 2))
     wire = payload.codes.nbytes + payload.norms.nbytes
+    assert wire * 8 == int(plan_packed.round_bits())  # ledger == payload
     emit("qsgd_tree_pack", us_pack,
          f"{_gbs(nbytes, us_pack)},wire_bytes={wire},"
          f"ratio={nbytes / wire:.2f}x",
          gbps=nbytes / (us_pack * 1e-6) / 1e9, wire_bytes=wire)
 
     comp_n = make_compressor("natural")
-    flat_n = jax.jit(lambda kk: tree_apply(comp_n, kk, tree, flat=True))
-    legacy_n = jax.jit(lambda kk: tree_apply(comp_n, kk, tree, flat=False))
+    plan_n_flat = make_plan(comp_n, tree, transport="flat")
+    plan_n_leaf = make_plan(comp_n, tree, transport="leafwise")
+    plan_n_packed = make_plan(comp_n, tree, transport="packed")
+    flat_n = jax.jit(lambda kk: plan_n_flat.apply(kk, tree))
+    legacy_n = jax.jit(lambda kk: plan_n_leaf.apply(kk, tree))
+    pack_n = jax.jit(lambda kk: plan_n_packed.encode(kk, tree))
     us_flat, _ = timed(flat_n, key)
     us_legacy, _ = timed(legacy_n, key)
+    us_pack, payload_n = timed(pack_n, key)
     emit("natural_tree_flat", us_flat, _gbs(nbytes, us_flat),
          gbps=nbytes / (us_flat * 1e-6) / 1e9, n_leaves=n_leaves)
     emit("natural_tree_legacy", us_legacy,
          f"{_gbs(nbytes, us_legacy)},speedup_flat={us_legacy / us_flat:.2f}x",
          gbps=nbytes / (us_legacy * 1e-6) / 1e9, n_leaves=n_leaves,
          speedup_flat=round(us_legacy / us_flat, 2))
+    wire_n = payload_n.exps.nbytes + payload_n.signs.nbytes
+    assert wire_n * 8 == int(plan_n_packed.round_bits())
+    emit("natural_tree_pack", us_pack,
+         f"{_gbs(nbytes, us_pack)},wire_bytes={wire_n},"
+         f"ratio={nbytes / wire_n:.2f}x",
+         gbps=nbytes / (us_pack * 1e-6) / 1e9, wire_bytes=wire_n)
 
     B, L, E, N = 2, 256, 128, 16
     dt = jax.nn.softplus(jax.random.normal(k, (B, L, E))) * 0.1

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, logreg_setup
-from repro.core import L2GDHyper, make_compressor, tree_wire_bits, Identity
+from repro.core import L2GDHyper, make_compressor
 from repro.data import logreg_loss_and_grad
 from repro.fl import run_fedavg, run_l2gd
 

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.core import L2GDHyper, make_compressor
+from repro.core import L2GDHyper, make_compressor, make_plan
 from repro.data import TokenStream
 from repro.fl import run_l2gd
 from repro.models import init_params, loss_fn
@@ -36,23 +36,29 @@ def grad_fn(p, b):
 
 
 hp = L2GDHyper(eta=0.1, lam=0.5, p=0.2, n=n)
-print(f"{'compressor':12s} {'final loss':>10s} {'bits/n':>12s} "
-      f"{'vs identity':>12s} {'unbiased':>9s}")
+one_client = jax.tree.map(lambda a: a[0], params0)
+print(f"{'compressor':12s} {'transport':>9s} {'final loss':>10s} "
+      f"{'bits/n':>12s} {'vs identity':>12s} {'unbiased':>9s}")
 rows = []
 for name in ("identity", "natural", "qsgd", "terngrad", "bernoulli", "randk",
              "topk"):
     comp = make_compressor(name)
+    # one plan per model: the ledger charges plan.round_bits() — the exact
+    # payload spec the wire would carry (auto transport: flat engine for
+    # qsgd/natural, leafwise otherwise)
+    plan = make_plan(comp, one_client)
     r = run_l2gd(jax.random.PRNGKey(1), params0, grad_fn, hp,
                  lambda k: {"tokens": jnp.asarray(ts.batch_at(k))},
-                 args.steps, client_comp=comp, master_comp=comp, seed=2)
+                 args.steps, client_comp=comp, master_comp=comp,
+                 plan=(plan, plan), seed=2)
     final = float(np.mean([l for _, l in r.losses][-5:]))
-    rows.append((name, final, r.ledger.bits_per_client))
+    rows.append((name, plan.transport, final, r.ledger.bits_per_client))
 
-id_bits = rows[0][2]
-for name, final, bits in rows:
+id_bits = rows[0][3]
+for name, transport, final, bits in rows:
     unb = "yes" if name not in ("topk",) else "NO"
-    print(f"{name:12s} {final:10.3f} {bits:12.3e} {id_bits / bits:11.1f}x "
-          f"{unb:>9s}")
+    print(f"{name:12s} {transport:>9s} {final:10.3f} {bits:12.3e} "
+          f"{id_bits / bits:11.1f}x {unb:>9s}")
 
 print("\nPaper claim check: natural compression keeps loss closest to the "
       "uncompressed run at ~3.6x fewer bits (its variance omega = 1/8 is the "

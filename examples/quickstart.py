@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import L2GDHyper, make_compressor
+from repro.core import L2GDHyper, make_compressor, make_plan
 from repro.data import logreg_loss_and_grad, make_logreg_data
 from repro.fl import run_fedavg, run_fedopt, run_l2gd
 
@@ -46,6 +46,18 @@ for comp_name in ("identity", "natural", "qsgd"):
     print(f"L2GD + {comp_name:26s} "
           f"{personalized_loss(np.asarray(r.state.params['w'])):16.4f} "
           f"{r.ledger.bits_per_client:12.3e} {r.ledger.rounds:7d}")
+
+# wire-first plan API: the uplink moves (and the ledger charges) the
+# EXACT packed int8 payload the all_gather collective would carry
+comp = make_compressor("qsgd")
+plan = make_plan(comp, {"w": jnp.zeros((124,))}, transport="packed")
+hp = L2GDHyper(eta=0.5, lam=1.0, p=0.3, n=N)
+r = run_l2gd(jax.random.PRNGKey(0), {"w": jnp.zeros((N, 124))}, grad_fn,
+             hp, lambda k: (X, Y), 500, client_comp=comp, master_comp=comp,
+             plan=plan, seed=1)
+print(f"L2GD + {'qsgd (packed wire)':26s} "
+      f"{personalized_loss(np.asarray(r.state.params['w'])):16.4f} "
+      f"{r.ledger.bits_per_client:12.3e} {r.ledger.rounds:7d}")
 
 cb = lambda rd, i: [(X[i], Y[i])] * 3
 fa = run_fedavg(jax.random.PRNGKey(1), {"w": jnp.zeros((124,))}, grad_fn, cb,

@@ -1,6 +1,12 @@
 """Core library: the paper's contribution (compressed L2GD) as composable
-JAX modules — compressors, the probabilistic-protocol step, the compressed
-aggregation layer, and the convergence-theory calculators."""
+JAX modules — the wire-first codec layer (payloads + CompressionPlan),
+compressors, the probabilistic-protocol step, the compressed aggregation
+layer, and the convergence-theory calculators."""
+from repro.core.codec import (
+    CompressionPlan, make_plan, as_plan, DensePayload, QSGDPayload,
+    NaturalPayload, TernPayload, SparsePayload, BernoulliPayload,
+    TreePayload, index_bits,
+)
 from repro.core.compressors import (
     Compressor, Identity, QSGD, Natural, TernGrad, Bernoulli, RandK, TopK,
     make_compressor, tree_apply, tree_wire_bits, joint_omega,
@@ -11,24 +17,30 @@ from repro.core.l2gd import (
 )
 from repro.core.aggregation import (
     compressed_average, compressed_average_wire, stochastic_round_cast,
-    make_sharded_average, make_packed_sharded_average,
+    make_sharded_average, make_payload_sharded_average,
+    make_packed_sharded_average,
 )
 from repro.core.flatbuf import (
-    FlatLayout, QSGDPayload, flat_tree_apply, pack_tree_qsgd,
-    unpack_tree_qsgd, packed_wire_bits, payload_wire_bits,
+    FlatLayout, flat_tree_apply, pack_tree, unpack_tree, pack_tree_qsgd,
+    pack_tree_natural, unpack_tree_qsgd, packed_wire_bits,
+    payload_wire_bits,
 )
-from repro.core import flatbuf, theory
+from repro.core import codec, flatbuf, theory
 
 __all__ = [
+    "CompressionPlan", "make_plan", "as_plan", "DensePayload",
+    "QSGDPayload", "NaturalPayload", "TernPayload", "SparsePayload",
+    "BernoulliPayload", "TreePayload", "index_bits",
     "Compressor", "Identity", "QSGD", "Natural", "TernGrad", "Bernoulli",
     "RandK", "TopK", "make_compressor", "tree_apply", "tree_wire_bits",
     "joint_omega", "L2GDHyper", "L2GDState", "init_state", "l2gd_step",
     "local_update", "aggregation_update", "draw_xi", "compressed_average",
     "compressed_average_wire", "stochastic_round_cast",
-    "make_sharded_average", "make_packed_sharded_average", "theory",
-    "flatbuf", "FlatLayout", "QSGDPayload", "flat_tree_apply",
-    "pack_tree_qsgd", "unpack_tree_qsgd", "packed_wire_bits",
-    "payload_wire_bits",
+    "make_sharded_average", "make_payload_sharded_average",
+    "make_packed_sharded_average", "theory", "codec",
+    "flatbuf", "FlatLayout", "flat_tree_apply", "pack_tree", "unpack_tree",
+    "pack_tree_qsgd", "pack_tree_natural", "unpack_tree_qsgd",
+    "packed_wire_bits", "payload_wire_bits",
     "EFMemory", "init_ef_memory", "ef_average", "compress_grads",
 ]
 from repro.core.extensions import EFMemory, init_ef_memory, ef_average, compress_grads

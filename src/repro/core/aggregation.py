@@ -11,34 +11,37 @@ On a TPU mesh there is no physical master: step 2 is an all-reduce over
 the client axis and step 3 is computed *redundantly on every client with a
 shared PRNG key*, which is bitwise identical to a master compressing and
 broadcasting (Lemma 2 unbiasedness only needs E[C_M(ybar)] = xbar and is
-unaffected).  Wire bits are charged by the ledger at the compressors'
-true widths — see DESIGN.md §3.
+unaffected).  Wire bits are charged by the ledger from the payload spec —
+``CompressionPlan.round_bits()`` — see DESIGN.md §3.
 
-Three implementations:
+Every entry point takes a :class:`repro.core.codec.CompressionPlan` (or a
+plain Compressor, coerced via auto transport):
+
   * :func:`compressed_average` — stacked-client form (leading axis = n).
     Used by the single-host simulator AND the pjit runtime (XLA turns the
     axis-0 mean of a ("clients", ...)-sharded array into the collective).
-    Client/master compression runs through the flat-buffer engine's fused
-    kernels when the compressor supports it (see repro.core.flatbuf).
   * :func:`compressed_average_wire` — beyond-paper TPU-native variant for
     shard_map: uplink = stochastic-round cast to a narrow dtype fused with
     ``jax.lax.pmean`` (natural compression composes with collectives as a
     dtype cast), downlink = shared-key C_M.  See EXPERIMENTS.md §Perf.
-  * :func:`make_packed_sharded_average` — shard_map ``average_fn`` whose
-    uplink collective carries the PACKED int8 QSGD payload (codes +
-    per-bucket norms, ~8.25 bits/element) instead of dequantized fp32.
+  * :func:`make_payload_sharded_average` — shard_map ``average_fn`` whose
+    uplink collective carries a plan's PACKED wire payload (any codec:
+    int8 QSGD codes, uint8 natural sign+exponent codes, ...) instead of
+    dequantized fp32.  :func:`make_packed_sharded_average` is the kept
+    QSGD-specific entry point (now a thin wrapper).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.compressors import Compressor, tree_apply
-from repro.core.flatbuf import pack_tree_qsgd, unbucketize, unravel
+from repro.core.codec import (CompressionPlan, _UNSET, _legacy_transport,
+                              as_plan)
+from repro.core.compressors import QSGD
 
 __all__ = ["compressed_average", "compressed_average_wire",
            "stochastic_round_cast", "make_sharded_average",
-           "make_packed_sharded_average"]
+           "make_payload_sharded_average", "make_packed_sharded_average"]
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs):
@@ -56,28 +59,33 @@ def _shard_map(f, *, mesh, in_specs, out_specs):
                      check_rep=False)
 
 
-def compressed_average(key: jax.Array, params_stacked, client_comp: Compressor,
-                       master_comp: Compressor, *, flat=None):
+def compressed_average(key: jax.Array, params_stacked,
+                       client_comp, master_comp, *, flat=_UNSET):
     """Return t = C_M( (1/n) sum_j C_j(x_j) ) for stacked client params.
 
     ``params_stacked`` is a pytree whose leaves carry a leading client axis
     of size n.  The returned pytree has NO client axis (it is the shared
     aggregation target, identical on all clients).
 
-    ``flat`` routes per-client compression through the flat-buffer engine
-    (one fused launch per client, the single-host default) or the legacy
-    leaf-wise path; pass ``flat=False`` in the pjit runtime, where
-    raveling model-axis-sharded leaves forces a rematerialization (see
-    repro.core.flatbuf's sharding note).
+    ``client_comp`` / ``master_comp`` are :class:`CompressionPlan`s (or
+    plain Compressors, coerced with auto transport: flat-buffer engine
+    where supported — one fused launch per client — leafwise otherwise).
+    The ``flat=`` keyword is a deprecated shim; in the pjit runtime pass
+    leafwise plans instead (raveling model-axis-sharded leaves forces a
+    rematerialization, repro.core.flatbuf's sharding note).
     """
+    transport = None
+    if flat is not _UNSET:
+        transport = _legacy_transport(flat, "compressed_average(..., flat=)")
+    up_plan = as_plan(client_comp, transport)
+    down_plan = as_plan(master_comp, transport)
     n = jax.tree_util.tree_leaves(params_stacked)[0].shape[0]
     k_clients, k_master = jax.random.split(key)
     client_keys = jax.random.split(k_clients, n)
-    compressed = jax.vmap(lambda k, p: tree_apply(client_comp, k, p,
-                                                  flat=flat))(
+    compressed = jax.vmap(lambda k, p: up_plan.apply(k, p))(
         client_keys, params_stacked)
     ybar = jax.tree.map(lambda a: jnp.mean(a, axis=0), compressed)
-    return tree_apply(master_comp, k_master, ybar, flat=flat)
+    return down_plan.apply(k_master, ybar)
 
 
 def stochastic_round_cast(key: jax.Array, x: jax.Array,
@@ -109,7 +117,7 @@ def stochastic_round_cast(key: jax.Array, x: jax.Array,
 
 
 def _make_shard_map_average(mesh, client_axes: tuple, param_pspecs_stacked,
-                            master_comp: Compressor, uplink):
+                            master_comp, uplink):
     """Shared scaffolding of the beyond-paper shard_map ``average_fn``s.
 
     Per shard: split keys and decorrelate the uplink key across the
@@ -122,6 +130,7 @@ def _make_shard_map_average(mesh, client_axes: tuple, param_pspecs_stacked,
     from jax.tree_util import tree_map
 
     axes = tuple(client_axes)
+    down_plan = as_plan(master_comp)
     out_specs = tree_map(lambda s: P(*tuple(s)[1:]), param_pspecs_stacked,
                          is_leaf=lambda x: isinstance(x, P))
 
@@ -135,7 +144,7 @@ def _make_shard_map_average(mesh, client_axes: tuple, param_pspecs_stacked,
             lambda a: jnp.mean(a.astype(jnp.float32), axis=0), params_local)
         ybar = uplink(k_up, local_mean, axes)
         ybar = tree_map(lambda y, a: y.astype(a.dtype), ybar, params_local)
-        return tree_apply(master_comp, k_master, ybar)
+        return down_plan.apply(k_master, ybar)
 
     def average_fn(key, params_stacked):
         return _shard_map(
@@ -146,7 +155,7 @@ def _make_shard_map_average(mesh, client_axes: tuple, param_pspecs_stacked,
 
 
 def make_sharded_average(mesh, client_axes: tuple, param_pspecs_stacked,
-                         master_comp: Compressor):
+                         master_comp):
     """Beyond-paper: build an ``average_fn`` for :func:`repro.core.l2gd.
     l2gd_step` whose UPLINK is a genuinely narrow collective.
 
@@ -173,43 +182,62 @@ def make_sharded_average(mesh, client_axes: tuple, param_pspecs_stacked,
                                    master_comp, uplink)
 
 
-def make_packed_sharded_average(mesh, client_axes: tuple,
-                                param_pspecs_stacked,
-                                master_comp: Compressor, *,
-                                levels: int = 127, bucket: int = 2048):
+def make_payload_sharded_average(mesh, client_axes: tuple,
+                                 param_pspecs_stacked, master_comp,
+                                 uplink_plan: CompressionPlan):
     """Beyond-paper: an ``average_fn`` whose UPLINK collective moves the
-    packed int8 QSGD payload — genuinely ~8.25 bits/element on the wire.
+    plan's WIRE PAYLOAD — the same arrays ``uplink_plan.encode`` builds
+    and ``round_bits()`` charges (DESIGN.md §3/§7).
 
     Inside a shard_map over the full mesh each client shard (1) averages
-    its local clients, (2) quantizes the mean with the flat-buffer engine
-    into (int8 codes, per-bucket fp32 norms), (3) ``all_gather``s the
-    payload over the client axes — the collective carries int8, a ~3.9x
-    byte reduction vs dequantized fp32 — and (4) dequantizes every
-    gathered payload locally and averages.  Each shard's dequantized
-    payload is an unbiased estimate of its local mean, so the gathered
-    average is unbiased for xbar (Lemma 2 unaffected).  Downlink: C_M
-    applied shard-wise with a shared key, exactly as
-    :func:`make_sharded_average`.  Wire accounting: DESIGN.md §3.
+    its local clients, (2) encodes the mean to its payload (int8 QSGD
+    codes + bucket norms, uint8 natural sign+exponent codes, ...),
+    (3) ``all_gather``s every payload array over the client axes — the
+    collective carries the quantized codes, e.g. ~3.9x fewer bytes than
+    dequantized fp32 for int8 QSGD — and (4) decodes every gathered
+    payload locally and averages.  Each shard's decoded payload is an
+    unbiased estimate of its local mean, so the gathered average is
+    unbiased for xbar (Lemma 2 unaffected).  Downlink: C_M applied
+    shard-wise with a shared key, exactly as :func:`make_sharded_average`.
+
+    The plan's layout is recomputed from the shard-LOCAL tree at trace
+    time, so the same plan object serves global accounting and per-shard
+    encoding.
     """
 
     def uplink(k_up, local_mean, axes):
-        payload, layout = pack_tree_qsgd(k_up, local_mean, levels=levels,
-                                         bucket=bucket)
-        codes, norms = payload
-        for ax in axes:                       # int8 on the wire
-            codes = jax.lax.all_gather(codes, ax)
-            norms = jax.lax.all_gather(norms, ax)
-        codes = codes.reshape((-1,) + payload.codes.shape)
-        norms = norms.reshape((-1,) + payload.norms.shape)
-        deq2d = jnp.mean(codes.astype(jnp.float32) * (norms / float(levels)),
-                         axis=0)
-        return unravel(layout, unbucketize(deq2d, layout.d))
+        payload = uplink_plan.encode(k_up, local_mean)
+        gathered = payload
+        for ax in axes:                       # wire arrays on the wire
+            gathered = jax.tree_util.tree_map(
+                lambda a: jax.lax.all_gather(a, ax), gathered)
+        # collapse the gathered client axes to one leading shard axis
+        gathered = jax.tree_util.tree_map(
+            lambda orig, g: g.reshape((-1,) + orig.shape), payload, gathered)
+        deq = jax.vmap(uplink_plan.decode)(gathered)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.mean(a.astype(jnp.float32), axis=0), deq)
 
     return _make_shard_map_average(mesh, client_axes, param_pspecs_stacked,
                                    master_comp, uplink)
 
 
-def compressed_average_wire(key: jax.Array, params_local, master_comp: Compressor,
+def make_packed_sharded_average(mesh, client_axes: tuple,
+                                param_pspecs_stacked,
+                                master_comp, *,
+                                levels: int = 127, bucket: int = 2048):
+    """Kept QSGD-specific entry point: an ``average_fn`` whose uplink
+    all_gather moves the packed int8 QSGD payload (~8.25 bits/element at
+    bucket=2048).  Thin wrapper over :func:`make_payload_sharded_average`
+    with a packed QSGD plan."""
+    from repro.core.codec import make_plan
+    plan = make_plan(QSGD(levels=levels, bucket=bucket), transport="packed")
+    return make_payload_sharded_average(mesh, client_axes,
+                                        param_pspecs_stacked, master_comp,
+                                        plan)
+
+
+def compressed_average_wire(key: jax.Array, params_local, master_comp,
                             axis_name: str, *, wire_dtype=jnp.bfloat16):
     """Beyond-paper TPU-native compressed aggregation (inside shard_map).
 
@@ -227,4 +255,4 @@ def compressed_average_wire(key: jax.Array, params_local, master_comp: Compresso
               for k, leaf in zip(up_keys, leaves)]
     meaned = [jax.lax.pmean(x, axis_name).astype(jnp.float32) for x in narrow]
     ybar = jax.tree_util.tree_unflatten(treedef, meaned)
-    return tree_apply(master_comp, k_master, ybar)
+    return as_plan(master_comp).apply(k_master, ybar)

@@ -1,26 +1,39 @@
 """Unbiased (and one biased) communication compressors — the paper's §IV-A.
 
-Every compressor is a pure, jit-able operator ``C: R^d -> R^d`` applied
-leaf-wise to parameter pytrees. We follow the paper's Assumption 1:
+Every compressor is a pure, jit-able operator ``C: R^d -> R^d`` that now
+implements the wire-first **Codec protocol** (DESIGN.md §7):
+
+  * ``encode(key, x) -> Payload`` — quantize an array to the wire
+    message (repro.core.codec payload classes, exact ``nbits``)
+  * ``decode(Payload) -> x``      — dequantize
+  * ``apply(key, x) = decode(encode(key, x))`` — the derived default;
+    elementwise codecs (identity, natural, bernoulli) keep a bit-exact
+    fast path that skips payload materialization AND the flatten (under
+    SPMD a reshape(-1) of a model-axis-sharded weight forces an
+    all-gather; observed in the baseline dry-run HLO, §Perf it.1).
+
+We follow the paper's Assumption 1:
 
   * unbiased:      E[C(x)] = x
   * bounded var:   E||C(x) - x||^2 <= omega * ||x||^2
 
 Each operator also reports ``omega(shape)`` (its variance factor, used by
-:mod:`repro.core.theory`) and ``wire_bits(shape)`` (bits actually sent on
-the wire for an array of that shape, used by the bits/n ledger that
-reproduces the paper's Table II accounting).
+:mod:`repro.core.theory`) and ``wire_bits(shape)`` (the
+information-theoretic width — a lower bound kept for theory tables; the
+ledger charges the ACTUAL payload via ``CompressionPlan.round_bits()``,
+see DESIGN.md §3).
 
 Implemented (Table I of the paper):
   identity, qsgd (random dithering), natural, terngrad, bernoulli, rand-k
   — all unbiased —
   and top-k (biased, proof-of-concept, exactly as the paper uses it).
 
-All randomness is explicit via jax PRNG keys. ``apply`` returns the
-*dequantized* value C(x) (same shape/dtype as x).  Whole-pytree
-compression (:func:`tree_apply`) routes qsgd/natural through the
-flat-buffer engine (:mod:`repro.core.flatbuf`): one fused kernel launch
-with in-kernel RNG; quantized int8 wire payloads live there too.
+All randomness is explicit via jax PRNG keys.  Whole-pytree compression
+goes through :class:`repro.core.codec.CompressionPlan`
+(``make_plan(comp, params)``): the flat transport is ONE fused kernel
+launch with in-kernel RNG (:mod:`repro.core.flatbuf`); ``tree_apply`` /
+``tree_wire_bits`` remain as thin wrappers (their ``flat=`` keyword is a
+deprecated shim).
 """
 from __future__ import annotations
 
@@ -33,6 +46,11 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core.flatbuf as flatbuf
+from repro.core.codec import (_UNSET, _legacy_transport, BernoulliPayload,
+                              DensePayload, NaturalPayload, QSGDPayload,
+                              SparsePayload, TernPayload, index_bits,
+                              make_plan, natural_merge, natural_split,
+                              pack_bits, unpack_bits)
 
 __all__ = [
     "Compressor", "Identity", "QSGD", "Natural", "TernGrad", "Bernoulli",
@@ -47,47 +65,77 @@ def _nelem(shape) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class Compressor:
-    """Base class. Subclasses implement _apply_flat on float32 arrays
-    (1-D unless ``elementwise``, in which case any shape)."""
+    """Base class / Codec protocol.  Subclasses implement
+    ``_encode_flat(key, x1d) -> Payload`` and ``_decode_flat(payload) ->
+    x1d`` on float32 buffers; elementwise codecs may additionally
+    override ``_apply_flat`` with a fast path (kept bit-exact to
+    decode(encode(...)) — guard-tested in tests/test_codec.py)."""
 
     name: str = dataclasses.field(default="base", init=False)
-    # elementwise operators skip the reshape(-1): under SPMD a flatten of a
-    # model-axis-sharded weight forces an all-gather of the full matrix
-    # before compression (observed in the baseline dry-run HLO, §Perf it.1)
+    # elementwise operators skip the reshape(-1) in ``apply``: under SPMD
+    # a flatten of a model-axis-sharded weight forces an all-gather of
+    # the full matrix before compression
     elementwise: bool = dataclasses.field(default=False, init=False)
 
     # -- public API ---------------------------------------------------------
-    def apply(self, key: jax.Array, x: jax.Array) -> jax.Array:
-        """Return C(x) with x of any shape; dtype preserved."""
-        orig_dtype = x.dtype
-        if self.elementwise:
-            return self._apply_flat(key, x.astype(jnp.float32)).astype(orig_dtype)
+    def encode(self, key: jax.Array, x: jax.Array):
+        """Quantize ``x`` (any shape) to its wire Payload.  The payload
+        records the original shape/dtype, so ``decode`` is standalone."""
         flat = x.reshape(-1).astype(jnp.float32)
-        out = self._apply_flat(key, flat)
-        return out.reshape(x.shape).astype(orig_dtype)
+        p = self._encode_flat(key, flat)
+        return dataclasses.replace(p, shape=tuple(x.shape), dtype=x.dtype)
+
+    def decode(self, payload) -> jax.Array:
+        """Dequantize a Payload back to an array of its original
+        shape/dtype."""
+        return self._decode_flat(payload).reshape(payload.shape) \
+            .astype(payload.dtype)
+
+    def apply(self, key: jax.Array, x: jax.Array) -> jax.Array:
+        """Return C(x) == decode(encode(key, x)); dtype preserved."""
+        if self.elementwise:
+            orig_dtype = x.dtype
+            return self._apply_flat(key, x.astype(jnp.float32)) \
+                .astype(orig_dtype)
+        return self.decode(self.encode(key, x))
 
     def omega(self, shape) -> float:
         """Variance factor omega for an array of this shape (Assumption 1)."""
         raise NotImplementedError
 
     def wire_bits(self, shape) -> float:
-        """Bits sent on the wire for an array of this shape."""
+        """Information-theoretic wire width for an array of this shape —
+        a lower bound used by theory tables.  The ledger charges the
+        actual transported payload (``CompressionPlan.round_bits()``)."""
         raise NotImplementedError
 
-    # -- subclass hook -------------------------------------------------------
+    # -- subclass hooks ------------------------------------------------------
+    def _encode_flat(self, key: jax.Array, x: jax.Array):
+        raise NotImplementedError
+
+    def _decode_flat(self, payload) -> jax.Array:
+        raise NotImplementedError
+
     def _apply_flat(self, key: jax.Array, x: jax.Array) -> jax.Array:
+        # elementwise fast path; only codecs with elementwise=True need it
         raise NotImplementedError
 
 
 @dataclasses.dataclass(frozen=True)
 class Identity(Compressor):
-    """No compression: omega = 0, 32 bits/element."""
+    """No compression: omega = 0, 32 bits/element (DensePayload)."""
 
     name: str = dataclasses.field(default="identity", init=False)
     elementwise: bool = dataclasses.field(default=True, init=False)
 
     def _apply_flat(self, key, x):
         return x
+
+    def _encode_flat(self, key, x):
+        return DensePayload(values=x)
+
+    def _decode_flat(self, p):
+        return p.values
 
     def omega(self, shape) -> float:
         return 0.0
@@ -103,26 +151,46 @@ class QSGD(Compressor):
     Per bucket of size ``bucket``:  C(x) = ||x||_2 * sign(x) * xi / s where
     xi randomly rounds s|x|/||x|| up or down to an integer.  Unbiased with
     omega = min(d/s^2, sqrt(d)/s) for bucket dimension d.
+
+    Wire message: :class:`repro.core.codec.QSGDPayload` — sign*magnitude
+    integer codes (int8 while ``levels <= 127``, int16 beyond) plus one
+    float32 norm per bucket.
     """
 
     levels: int = 127          # s; 127 -> payload fits int8 magnitudes
     bucket: int = 2048
     name: str = dataclasses.field(default="qsgd", init=False)
 
-    def _apply_flat(self, key, x):
+    def _code_dtype(self):
+        return jnp.int8 if self.levels <= 127 else jnp.int16
+
+    def _encode_flat(self, key, x):
         d = x.shape[0]
+        if d == 0:
+            return QSGDPayload(jnp.zeros((0,), self._code_dtype()),
+                               jnp.zeros((0, 1), jnp.float32),
+                               levels=self.levels)
         xp = flatbuf.bucketize(x, self.bucket)
         norm = jnp.linalg.norm(xp, axis=1, keepdims=True)
         safe = jnp.where(norm == 0.0, 1.0, norm)
         s = float(self.levels)
         scaled = jnp.abs(xp) / safe * s
         lo = jnp.floor(scaled)
-        prob = scaled - lo
         u = jax.random.uniform(key, xp.shape)
-        q = lo + (u < prob).astype(jnp.float32)
-        out = jnp.sign(xp) * q / s * norm
-        out = jnp.where(norm == 0.0, 0.0, out)
-        return flatbuf.unbucketize(out, d)
+        q = lo + (u < (scaled - lo)).astype(jnp.float32)
+        codes = (jnp.sign(xp) * q).astype(self._code_dtype())
+        return QSGDPayload(flatbuf.unbucketize(codes, d), norm,
+                           levels=self.levels)
+
+    def _decode_flat(self, p):
+        d = p.codes.shape[0]
+        if d == 0:
+            return jnp.zeros((0,), jnp.float32)
+        codes2d = flatbuf.bucketize(p.codes.astype(jnp.float32), self.bucket)
+        # same float expression as the fused kernel's dequantize; a
+        # zero-norm bucket multiplies its (all-zero) codes by 0
+        y2d = codes2d * (p.norms / float(p.levels))
+        return flatbuf.unbucketize(y2d, d)
 
     def omega(self, shape) -> float:
         d = min(self.bucket, _nelem(shape))
@@ -131,6 +199,8 @@ class QSGD(Compressor):
 
     def wire_bits(self, shape) -> float:
         n = _nelem(shape)
+        if n == 0:
+            return 0.0
         n_buckets = math.ceil(n / self.bucket)
         bits_per_el = math.log2(2 * self.levels + 1)
         return n * bits_per_el + 32.0 * n_buckets  # payload + per-bucket norm
@@ -143,6 +213,11 @@ class Natural(Compressor):
 
     Implemented with float32 bit manipulation: probability of rounding the
     exponent up equals mantissa / 2^23, which makes it exactly unbiased.
+
+    Wire message: :class:`repro.core.codec.NaturalPayload` — one uint8
+    biased-exponent code per element plus the packed sign bitmap; decode
+    is bit-exact against ``apply`` for finite inputs (NaN/Inf exceed the
+    9-bit message and pass through only on the ``apply`` fast path).
     """
 
     name: str = dataclasses.field(default="natural", init=False)
@@ -161,6 +236,21 @@ class Natural(Compressor):
         passthrough = (x == 0.0) | ~jnp.isfinite(x)
         return jnp.where(passthrough, x, out)
 
+    def _encode_flat(self, key, x):
+        # same noise stream as the fast path (uniform draws are
+        # row-major, so flattening does not change them) -> bit-exact
+        y = self._apply_flat(key, x)
+        exps, signs = natural_split(y)
+        pad = (-x.shape[0]) % 8
+        if pad:
+            signs = jnp.pad(signs, (0, pad))
+        return NaturalPayload(exps, pack_bits(signs, 1))
+
+    def _decode_flat(self, p):
+        d = p.exps.shape[0]
+        signs = unpack_bits(p.signs, 1)[:d]
+        return natural_merge(p.exps, signs)
+
     def omega(self, shape) -> float:
         return 0.125
 
@@ -173,21 +263,41 @@ class TernGrad(Compressor):
     """TernGrad [Wen et al. 2017]: C(x) = ||x||_inf * sign(x) * b, with
     b ~ Bernoulli(|x| / ||x||_inf) per coordinate (per bucket).
     Unbiased; omega <= max_i ||x||_inf * d / ||x||_2^2 - 1 (worst case d-1;
-    we report the standard bound sqrt(d))."""
+    we report the standard bound sqrt(d)).
+
+    Wire message: :class:`repro.core.codec.TernPayload` — packed 2-bit
+    ternary fields (4 elements/byte) plus one float32 scale per bucket.
+    """
 
     bucket: int = 2048
     name: str = dataclasses.field(default="terngrad", init=False)
 
-    def _apply_flat(self, key, x):
+    def _encode_flat(self, key, x):
         d = x.shape[0]
+        if d == 0:
+            return TernPayload(jnp.zeros((0,), jnp.uint8),
+                               jnp.zeros((0, 1), jnp.float32),
+                               bucket=self.bucket)
         xp = flatbuf.bucketize(x, self.bucket)
         mx = jnp.max(jnp.abs(xp), axis=1, keepdims=True)
         safe = jnp.where(mx == 0.0, 1.0, mx)
-        prob = jnp.abs(xp) / safe
         u = jax.random.uniform(key, xp.shape)
-        tern = (u < prob).astype(jnp.float32) * jnp.sign(xp)
-        out = tern * mx
-        return flatbuf.unbucketize(out, d)
+        tern = (u < jnp.abs(xp) / safe).astype(jnp.float32) * jnp.sign(xp)
+        enc = flatbuf.unbucketize(jnp.where(tern < 0, 2.0, tern), d) \
+            .astype(jnp.uint8)
+        pad = (-d) % 4
+        if pad:
+            enc = jnp.pad(enc, (0, pad))
+        return TernPayload(pack_bits(enc, 2), mx, bucket=self.bucket)
+
+    def _decode_flat(self, p):
+        d = _nelem(p.shape)
+        if d == 0:
+            return jnp.zeros((0,), jnp.float32)
+        enc = unpack_bits(p.codes, 2)[:d].astype(jnp.float32)
+        tern = jnp.where(enc == 2.0, -1.0, enc)
+        y2d = flatbuf.bucketize(tern, p.bucket) * p.scales
+        return flatbuf.unbucketize(y2d, d)
 
     def omega(self, shape) -> float:
         # E||C(x)-x||^2 = sum |x_i|(M - |x_i|) <= (sqrt(d) - 1) ||x||^2
@@ -196,6 +306,8 @@ class TernGrad(Compressor):
 
     def wire_bits(self, shape) -> float:
         n = _nelem(shape)
+        if n == 0:
+            return 0.0
         n_buckets = math.ceil(n / self.bucket)
         return n * math.log2(3.0) + 32.0 * n_buckets
 
@@ -203,7 +315,12 @@ class TernGrad(Compressor):
 @dataclasses.dataclass(frozen=True)
 class Bernoulli(Compressor):
     """Bernoulli sparsifier [Khirirat et al. 2018]: C(x)_j = x_j b_j / q,
-    b_j ~ Bern(q).  Unbiased with omega = (1 - q)/q."""
+    b_j ~ Bern(q).  Unbiased with omega = (1 - q)/q.
+
+    Wire message: :class:`repro.core.codec.BernoulliPayload` — the exact
+    survivor bitmap plus the scaled values (``nbits`` charges bitmap +
+    expected compacted values; the one stochastic-size codec).
+    """
 
     q: float = 0.25
     name: str = dataclasses.field(default="bernoulli", init=False)
@@ -213,30 +330,55 @@ class Bernoulli(Compressor):
         b = jax.random.bernoulli(key, self.q, x.shape)
         return jnp.where(b, x / self.q, 0.0)
 
+    def _encode_flat(self, key, x):
+        d = x.shape[0]
+        # same draw as the fast path (shape-invariant stream) -> bit-exact
+        b = jax.random.bernoulli(key, self.q, x.shape)
+        vals = jnp.where(b, x / self.q, 0.0)
+        bits = b.astype(jnp.uint8)
+        pad = (-d) % 8
+        if pad:
+            bits = jnp.pad(bits, (0, pad))
+        return BernoulliPayload(pack_bits(bits, 1), vals, q=self.q)
+
+    def _decode_flat(self, p):
+        return p.values
+
     def omega(self, shape) -> float:
         return (1.0 - self.q) / self.q
 
     def wire_bits(self, shape) -> float:
         n = _nelem(shape)
+        if n == 0:
+            return 0.0
         # expected q*n surviving (value + index) entries
-        idx_bits = max(math.log2(max(n, 2)), 1.0)
-        return self.q * n * (32.0 + idx_bits)
+        return self.q * n * (32.0 + index_bits(n))
 
 
 @dataclasses.dataclass(frozen=True)
 class RandK(Compressor):
     """rand-k sparsifier: keep a uniformly random k-subset, scaled by d/k.
-    Unbiased with omega = d/k - 1.  ``fraction`` = k/d."""
+    Unbiased with omega = d/k - 1.  ``fraction`` = k/d.
+
+    Wire message: :class:`repro.core.codec.SparsePayload` — the k
+    (index, value) pairs.
+    """
 
     fraction: float = 0.1
     name: str = dataclasses.field(default="randk", init=False)
 
-    def _apply_flat(self, key, x):
+    def _encode_flat(self, key, x):
         d = x.shape[0]
+        if d == 0:
+            return SparsePayload(jnp.zeros((0,), jnp.int32),
+                                 jnp.zeros((0,), jnp.float32))
         k = max(int(round(self.fraction * d)), 1)
-        perm = jax.random.permutation(key, d)
-        mask = jnp.zeros((d,), jnp.bool_).at[perm[:k]].set(True)
-        return jnp.where(mask, x * (d / k), 0.0)
+        idx = jax.random.permutation(key, d)[:k].astype(jnp.int32)
+        return SparsePayload(idx, x[idx] * (d / k))
+
+    def _decode_flat(self, p):
+        d = _nelem(p.shape)
+        return jnp.zeros((d,), jnp.float32).at[p.indices].set(p.values)
 
     def omega(self, shape) -> float:
         d = _nelem(shape)
@@ -245,26 +387,38 @@ class RandK(Compressor):
 
     def wire_bits(self, shape) -> float:
         d = _nelem(shape)
+        if d == 0:
+            return 0.0
         k = max(int(round(self.fraction * d)), 1)
-        idx_bits = max(math.log2(max(d, 2)), 1.0)
-        return k * (32.0 + idx_bits)
+        return k * (32.0 + index_bits(d))
 
 
 @dataclasses.dataclass(frozen=True)
 class TopK(Compressor):
     """Top-k sparsifier [Aji & Heafield 2017] — BIASED.  The paper uses it
     as an empirical proof-of-concept only; no omega guarantee (we report the
-    deterministic contraction bound (1 - k/d) for reference)."""
+    deterministic contraction bound (1 - k/d) for reference).
+
+    Wire message: :class:`repro.core.codec.SparsePayload`.
+    """
 
     fraction: float = 0.1
     name: str = dataclasses.field(default="topk", init=False)
 
-    def _apply_flat(self, key, x):
+    def _encode_flat(self, key, x):
         del key  # deterministic
         d = x.shape[0]
+        if d == 0:
+            return SparsePayload(jnp.zeros((0,), jnp.int32),
+                                 jnp.zeros((0,), jnp.float32))
         k = max(int(round(self.fraction * d)), 1)
-        thresh = jax.lax.top_k(jnp.abs(x), k)[0][-1]
-        return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+        _, idx = jax.lax.top_k(jnp.abs(x), k)
+        idx = idx.astype(jnp.int32)
+        return SparsePayload(idx, x[idx])
+
+    def _decode_flat(self, p):
+        d = _nelem(p.shape)
+        return jnp.zeros((d,), jnp.float32).at[p.indices].set(p.values)
 
     def omega(self, shape) -> float:
         # NOT an unbiasedness-variance factor; contraction parameter only.
@@ -274,9 +428,10 @@ class TopK(Compressor):
 
     def wire_bits(self, shape) -> float:
         d = _nelem(shape)
+        if d == 0:
+            return 0.0
         k = max(int(round(self.fraction * d)), 1)
-        idx_bits = max(math.log2(max(d, 2)), 1.0)
-        return k * (32.0 + idx_bits)
+        return k * (32.0 + index_bits(d))
 
 
 _REGISTRY = {
@@ -298,49 +453,34 @@ def make_compressor(name: str, **kwargs) -> Compressor:
 
 
 # --------------------------------------------------------------------------
-# pytree helpers
+# pytree wrappers (thin shims over CompressionPlan)
 # --------------------------------------------------------------------------
 
-def tree_apply(comp: Compressor, key: jax.Array, tree, *,
-               flat: Optional[bool] = None):
+def tree_apply(comp: Compressor, key: jax.Array, tree, *, flat=_UNSET):
     """Apply a compressor to a whole pytree.
 
-    ``flat=None`` (default) routes qsgd/natural through the flat-buffer
-    engine — ONE fused kernel launch with in-kernel RNG for the entire
-    pytree (:func:`repro.core.flatbuf.flat_tree_apply`) — and every other
-    compressor through the legacy leaf-wise path (independent per-leaf
-    keys).  Pass ``flat=False`` to pin the leaf-wise path (e.g. under
-    pjit sharding, where raveling would force an all-gather) or
-    ``flat=True`` to require the engine.
+    Thin wrapper over ``make_plan(comp).apply(key, tree)`` — auto
+    transport: the flat-buffer engine (ONE fused launch with in-kernel
+    RNG) for qsgd/natural, leafwise otherwise.  The ``flat=`` keyword is
+    a deprecated shim; pin transports on a plan instead.
     """
-    if flat is None:
-        flat = flatbuf.supports_flat(comp)
-    if flat:
-        return flatbuf.flat_tree_apply(comp, key, tree)
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    keys = jax.random.split(key, len(leaves))
-    out = [comp.apply(k, leaf) for k, leaf in zip(keys, leaves)]
-    return jax.tree_util.tree_unflatten(treedef, out)
+    transport = None
+    if flat is not _UNSET:
+        transport = _legacy_transport(flat, "tree_apply(..., flat=)")
+    return make_plan(comp, transport=transport).apply(key, tree)
 
 
-def tree_wire_bits(comp: Compressor, tree, *,
-                   flat: Optional[bool] = None) -> float:
-    """Total wire bits to send a compressed pytree once.
-
-    Mirrors :func:`tree_apply`'s routing: the flat path charges the
-    compressor's width over the single raveled buffer (buckets span leaf
-    boundaries), the leaf-wise path sums per-leaf widths.  See
-    DESIGN.md §3 for the accounting rules and
-    :func:`repro.core.flatbuf.packed_wire_bits` for the exact packed
-    payload size.
+def tree_wire_bits(comp: Compressor, tree, *, flat=_UNSET,
+                   transport: Optional[str] = None) -> float:
+    """Exact wire bits to send a compressed pytree once — reads the
+    payload spec via ``CompressionPlan.round_bits()`` (the same number
+    ``plan.encode(...).nbits`` reports; DESIGN.md §3).  The ``flat=``
+    keyword is a deprecated shim for ``transport=``.
     """
-    if flat is None:
-        flat = flatbuf.supports_flat(comp)
-    if flat:
-        d = sum(_nelem(leaf.shape)
-                for leaf in jax.tree_util.tree_leaves(tree))
-        return comp.wire_bits((d,)) if d else 0.0
-    return sum(comp.wire_bits(leaf.shape) for leaf in jax.tree_util.tree_leaves(tree))
+    if flat is not _UNSET:
+        legacy = _legacy_transport(flat, "tree_wire_bits(..., flat=)")
+        transport = transport if transport is not None else legacy
+    return make_plan(comp, tree, transport=transport).round_bits()
 
 
 def joint_omega(omegas) -> float:

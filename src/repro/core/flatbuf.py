@@ -14,36 +14,45 @@ Public surface:
                                   kernels/qsgd/ops.py and compressors.QSGD)
   seeds_of                      — PRNG key -> (2,) uint32 kernel seeds
   flat_tree_apply               — fused whole-pytree C(x); the fast path
-                                  behind compressors.tree_apply
-  pack_tree_qsgd / unpack_tree_qsgd / QSGDPayload
-                                — int8 wire payload (codes + bucket norms)
+                                  behind CompressionPlan(transport="flat")
+  pack_tree / unpack_tree       — whole-pytree wire payloads for every
+                                  flat-engine codec (QSGDPayload,
+                                  NaturalPayload — repro.core.codec);
+                                  bit-exact decode vs the fused kernels
+  pack_tree_qsgd / pack_tree_natural / unpack_tree_qsgd
+                                — codec-specific entry points
   packed_wire_bits / payload_wire_bits
-                                — exact packed-payload bit accounting
+                                — exact packed-payload bit accounting;
+                                  both read ``Payload.nbits``
                                   (DESIGN.md §3)
 
 Sharding note: raveling concatenates leaves, so under SPMD a
 model-axis-sharded weight is re-laid-out before compression.  For the
 single-host simulator and the shard_map runtime (where leaves are local
-shards) this is free; for the pjit runtime with sharded stacked params the
-legacy leaf-wise path is pinned via ``tree_apply(..., flat=False)``.
+shards) this is free; for the pjit runtime with sharded stacked params
+the leafwise transport is pinned (``make_plan(..., transport=
+"leafwise")`` in launch/steps.build_train_step).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.codec import (NaturalPayload, QSGDPayload, natural_merge,
+                              natural_split, pack_bits, unpack_bits)
 from repro.kernels.natural.kernel import natural_fused
 from repro.kernels.qsgd.kernel import qsgd_fused, qsgd_pack, qsgd_unpack
 
 __all__ = [
-    "FlatLayout", "QSGDPayload", "layout_of", "ravel", "unravel",
-    "bucketize", "unbucketize", "seeds_of", "supports_flat",
-    "flat_tree_apply", "pack_tree_qsgd", "unpack_tree_qsgd",
-    "payload_wire_bits", "packed_wire_bits",
+    "FlatLayout", "QSGDPayload", "NaturalPayload", "layout_of", "ravel",
+    "unravel", "bucketize", "unbucketize", "seeds_of", "supports_flat",
+    "flat_tree_apply", "pack_tree", "unpack_tree", "pack_tree_qsgd",
+    "pack_tree_natural", "unpack_tree_qsgd", "payload_wire_bits",
+    "packed_wire_bits",
 ]
 
 _LANE = 128          # natural compression buckets = one VPU lane row
@@ -163,18 +172,32 @@ def _engine_bucket(comp) -> int:
     return int(getattr(comp, "bucket", None) or _LANE)
 
 
-def flat_tree_apply(comp, key: jax.Array, tree):
+def _clamp_bucket(bucket: int, d: int) -> int:
+    """A model smaller than one bucket is a single bucket at ANY bucket
+    size (one norm over all d values; trailing zeros do not change it),
+    so pad only to the next lane multiple instead of the full bucket —
+    identical statistics, minimal wire padding (a 124-element model costs
+    128 codes, not 2048)."""
+    if d and d < bucket:
+        return max(-(-d // _LANE) * _LANE, _LANE)
+    return bucket
+
+
+def flat_tree_apply(comp, key: jax.Array, tree, *, bucket: int = None):
     """Compress a whole pytree in ONE fused pass: ravel -> bucketize ->
     kernel with in-kernel RNG -> unravel.  Statistically equivalent to the
     leaf-wise path (every bucket remains unbiased; buckets may span leaf
     boundaries) with O(1) instead of O(n_leaves) dispatches and zero
-    full-size noise arrays."""
+    full-size noise arrays.  Bit-exact vs ``unpack_tree(pack_tree(...))``
+    under the same key (kernel invariant, test-enforced)."""
     if not supports_flat(comp):
         raise ValueError(f"no flat engine for compressor {comp!r}")
-    bucket = _engine_bucket(comp)
+    bucket = int(bucket or _engine_bucket(comp))
     layout = layout_of(tree, bucket)
     if layout.d == 0:
         return tree
+    bucket = _clamp_bucket(bucket, layout.d)
+    layout = layout_of(tree, bucket)
     x2d = bucketize(ravel(layout, tree), bucket)
     seeds = seeds_of(key)
     if comp.name == "qsgd":
@@ -185,43 +208,109 @@ def flat_tree_apply(comp, key: jax.Array, tree):
 
 
 # --------------------------------------------------------------------------
-# packed int8 QSGD wire payload
+# whole-pytree wire payloads (QSGDPayload / NaturalPayload live in
+# repro.core.codec; this is where they are produced and consumed)
 # --------------------------------------------------------------------------
 
-class QSGDPayload(NamedTuple):
-    """What actually crosses the wire: int8 sign*magnitude codes plus one
-    float32 norm per bucket — ~8.25 bits/element at bucket=2048 instead of
-    the dequantized 32 (DESIGN.md §3)."""
+def pack_tree(comp, key: jax.Array, tree, *, bucket: int = None):
+    """Quantize a whole pytree to its wire Payload with the flat-buffer
+    engine — the encode path of ``CompressionPlan(transport="flat"|
+    "packed")``.  The returned payload carries its :class:`FlatLayout`
+    (static), so :func:`unpack_tree` needs nothing else."""
+    if not supports_flat(comp):
+        raise ValueError(f"no flat engine for compressor {comp!r}")
+    bucket = int(bucket or _engine_bucket(comp))
+    if comp.name == "qsgd":
+        return pack_tree_qsgd(key, tree, levels=comp.levels,
+                              bucket=bucket)[0]
+    return pack_tree_natural(key, tree, bucket=bucket)[0]
 
-    codes: jax.Array   # int8 (n_buckets, bucket)
-    norms: jax.Array   # float32 (n_buckets, 1)
+
+def unpack_tree(payload):
+    """Dequantize a flat-engine Payload back to its pytree — bit-exact
+    vs :func:`flat_tree_apply` under the same key."""
+    layout = payload.layout
+    if layout is None:
+        raise ValueError("payload carries no FlatLayout; it was not "
+                         "produced by the flat engine (pack_tree)")
+    if layout.d == 0:
+        return unravel(layout, jnp.zeros((0,), jnp.float32))
+    if isinstance(payload, QSGDPayload):
+        y2d = qsgd_unpack(payload.codes, payload.norms,
+                          levels=payload.levels)
+    else:
+        signs = unpack_bits(payload.signs, 1)
+        y2d = natural_merge(payload.exps, signs)
+    return unravel(layout, unbucketize(y2d, layout.d))
 
 
 def pack_tree_qsgd(key: jax.Array, tree, *, levels: int = 127,
                    bucket: int = 2048):
-    """Quantize a whole pytree to its wire payload.  Returns
-    (payload, layout); feed both to :func:`unpack_tree_qsgd`."""
+    """Quantize a whole pytree to its QSGD wire payload (int8 codes +
+    per-bucket norms).  Returns (payload, layout); the payload also
+    carries the layout, so :func:`unpack_tree` alone suffices."""
+    if levels > 127:
+        # the engine's wire format is int8; the leafwise transport widens
+        # to int16 instead (compressors.QSGD._code_dtype)
+        raise ValueError(f"levels={levels} does not fit the int8 flat "
+                         "payload; use transport='leafwise' (int16 codes) "
+                         "or levels <= 127")
+    layout = layout_of(tree, bucket)
+    if layout.d == 0:
+        payload = QSGDPayload(jnp.zeros((0, bucket), jnp.int8),
+                              jnp.zeros((0, 1), jnp.float32),
+                              levels=levels, layout=layout)
+        return payload, layout
+    bucket = _clamp_bucket(bucket, layout.d)
     layout = layout_of(tree, bucket)
     x2d = bucketize(ravel(layout, tree), bucket)
     codes, norms = qsgd_pack(x2d, seeds_of(key), levels=levels)
-    return QSGDPayload(codes, norms), layout
+    return QSGDPayload(codes, norms, levels=levels, layout=layout), layout
 
 
-def unpack_tree_qsgd(payload: QSGDPayload, layout: FlatLayout, *,
+def pack_tree_natural(key: jax.Array, tree, *, bucket: int = _LANE):
+    """Quantize a whole pytree to its natural-compression wire payload
+    (uint8 exponent codes + packed sign bitmap, 9 bits/element): run the
+    fused kernel, then bit-split its output — decode is bit-exact against
+    :func:`flat_tree_apply` by construction (finite inputs)."""
+    layout = layout_of(tree, bucket)
+    if layout.d == 0:
+        payload = NaturalPayload(jnp.zeros((0, bucket), jnp.uint8),
+                                 jnp.zeros((0, bucket // 8), jnp.uint8),
+                                 layout=layout)
+        return payload, layout
+    bucket = _clamp_bucket(bucket, layout.d)
+    layout = layout_of(tree, bucket)
+    x2d = bucketize(ravel(layout, tree), bucket)
+    y2d = natural_fused(x2d, seeds_of(key))
+    exps, signs = natural_split(y2d)
+    return NaturalPayload(exps, pack_bits(signs, 1), layout=layout), layout
+
+
+def unpack_tree_qsgd(payload: QSGDPayload, layout: FlatLayout = None, *,
                      levels: int = 127):
-    """Dequantize a payload back to the pytree — bit-exact vs the
-    dequantized output of :func:`flat_tree_apply` under the same key."""
+    """Dequantize a QSGD payload back to the pytree — bit-exact vs the
+    dequantized output of :func:`flat_tree_apply` under the same key.
+    ``layout``/``levels`` are only read for hand-built payloads; engine
+    payloads carry their own."""
+    if getattr(payload, "layout", None) is not None:
+        return unpack_tree(payload)
     y2d = qsgd_unpack(payload.codes, payload.norms, levels=levels)
     return unravel(layout, unbucketize(y2d, layout.d))
 
 
-def payload_wire_bits(payload: QSGDPayload) -> int:
-    """Exact bits moved by a payload: 8/code (padding included) plus a
-    32-bit norm per bucket."""
-    return int(payload.codes.size) * 8 + int(payload.norms.size) * 32
+def payload_wire_bits(payload) -> int:
+    """Exact bits moved by a payload — reads ``Payload.nbits``."""
+    return int(payload.nbits)
 
 
 def packed_wire_bits(tree, *, bucket: int = 2048) -> int:
-    """Exact packed-payload size for a pytree, without materializing it."""
+    """Exact packed QSGD payload size for a pytree, without materializing
+    it: 8/code (padding included; sub-bucket models clamp to the next
+    lane multiple) plus a 32-bit norm per bucket.  An empty pytree costs
+    0 (consistent with the leafwise sum)."""
     layout = layout_of(tree, bucket)
+    if layout.d == 0:
+        return 0
+    layout = layout_of(tree, _clamp_bucket(bucket, layout.d))
     return layout.padded * 8 + layout.n_buckets * 32

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import compressed_average
+from repro.core.codec import _UNSET, _legacy_transport, as_plan
 from repro.core.compressors import Compressor, Identity
 
 __all__ = ["L2GDHyper", "L2GDState", "init_state", "l2gd_step",
@@ -103,7 +104,7 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
               grad_fn: Callable, hp: L2GDHyper,
               client_comp: Compressor = Identity(),
               master_comp: Compressor = Identity(),
-              average_fn: Callable = None, flat: bool = None):
+              average_fn: Callable = None, flat=_UNSET):
     """One step of Algorithm 1.
 
     Args:
@@ -115,18 +116,25 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
       key:   PRNG key for compressor randomness.
       grad_fn: per-client ``(params_i, batch_i) -> (loss_i, grads_i)``.
       hp:    hyper-parameters.
-      client_comp / master_comp: C_i (identical across i, as in the paper's
-             experiments) and C_M.
+      client_comp / master_comp: the uplink C_i (identical across i, as in
+             the paper's experiments) and downlink C_M — each either a
+             :class:`repro.core.codec.CompressionPlan` or a plain
+             Compressor (coerced with auto transport: flat-buffer engine
+             where supported, the single-host default).
       average_fn: optional override of the compressed-average realization,
              ``(key, params_stacked) -> target`` — used by the beyond-paper
              wire-compressed shard_map aggregation (see repro.launch.steps).
-      flat:  routing for :func:`compressed_average`'s compression — None
-             (auto: flat-buffer engine where supported, the single-host
-             default) or False (leaf-wise; pinned by the pjit runtime).
+      flat:  DEPRECATED shim — pass CompressionPlans instead (the pjit
+             runtime pins ``transport="leafwise"`` on its plans).
 
     Returns: (new_state, metrics dict).  Metrics include the mean client
     loss (evaluated in branch 0; NaN-free zeros otherwise) and the branch id.
     """
+    transport = None
+    if flat is not _UNSET:
+        transport = _legacy_transport(flat, "l2gd_step(..., flat=)")
+    up_plan = as_plan(client_comp, transport)
+    down_plan = as_plan(master_comp, transport)
     branch = jnp.where(xi_k == 0, 0, jnp.where(state.xi_prev == 0, 1, 2))
 
     def branch_local(op):
@@ -142,8 +150,7 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
         if average_fn is not None:
             target = average_fn(k, st.params)
         else:
-            target = compressed_average(k, st.params, client_comp,
-                                        master_comp, flat=flat)
+            target = compressed_average(k, st.params, up_plan, down_plan)
         new_params = aggregation_update(st.params, target, hp)
         return (L2GDState(new_params, target, jnp.asarray(1, jnp.int32),
                           st.step + 1),

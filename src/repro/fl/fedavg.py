@@ -22,7 +22,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import Compressor, Identity, tree_apply, tree_wire_bits
+from repro.core import Compressor, Identity
+from repro.core.codec import make_plan
 from repro.fl.ledger import BitsLedger
 from repro.optim import adam_init, adam_update
 
@@ -67,9 +68,13 @@ def run_fedavg(key, global_params, grad_fn: Callable,
     opt_state = adam_init(global_params) if server == "adam" else None
 
     step = jax.jit(lambda p, b: grad_fn(p, b)) if local_steps_jit else grad_fn
-    up_bits = (tree_wire_bits(comp, global_params) if comp is not None
-               else tree_wire_bits(Identity(), global_params))
-    down_bits = tree_wire_bits(Identity(), global_params)  # uncompressed bcast
+    # plans built once over the global model; the ledger reads the
+    # payload spec (plan.round_bits(), DESIGN.md §3)
+    up_plan = make_plan(comp if comp is not None else Identity(),
+                        global_params)
+    down_plan = make_plan(Identity(), global_params)  # uncompressed bcast
+    up_bits = up_plan.round_bits()
+    down_bits = down_plan.round_bits()
 
     for r in range(rounds):
         deltas, losses = [], []
@@ -83,7 +88,7 @@ def run_fedavg(key, global_params, grad_fn: Callable,
             else:
                 key, sub = jax.random.split(key)
                 innov = jax.tree.map(lambda d, m: d - m, delta, memory[i])
-                c_innov = tree_apply(comp, sub, innov)
+                c_innov = up_plan.apply(sub, innov)
                 memory[i] = jax.tree.map(lambda m, c: m + c, memory[i], c_innov)
                 deltas.append(memory[i])
         avg_delta = jax.tree.map(lambda *xs: sum(xs) / n_clients, *deltas)

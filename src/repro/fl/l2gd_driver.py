@@ -6,18 +6,27 @@ transition triggers communication), feeds the draw into the single jitted
 :func:`repro.core.l2gd.l2gd_step`, and records bits/n per the paper's
 accounting.  The jitted step itself is branch-static (lax.switch), so there
 is exactly one compilation regardless of the protocol realization.
+
+Every wire-bits number the ledger records is read from the payload spec —
+``CompressionPlan.round_bits()``, i.e. ``jax.eval_shape(plan.encode,
+...).nbits`` — never re-derived here (DESIGN.md §3).  Pass ``plan=`` (an
+uplink :class:`~repro.core.codec.CompressionPlan`, or an
+(uplink, downlink) pair: downlink master compression is first-class, not
+accounting-only); plans default to auto transport over the compressors.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Compressor, Identity, L2GDHyper, flatbuf, init_state,
-                        l2gd_step, tree_wire_bits)
+from repro.core import (Compressor, Identity, L2GDHyper, init_state,
+                        l2gd_step)
+from repro.core.codec import _UNSET, CompressionPlan, make_plan
 from repro.fl.ledger import BitsLedger
 
 __all__ = ["L2GDRun", "run_l2gd"]
@@ -38,43 +47,68 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
              batch_fn: Callable[[int], object], steps: int,
              client_comp: Compressor = Identity(),
              master_comp: Compressor = Identity(),
+             plan=None,
              eval_fn: Optional[Callable] = None, eval_every: int = 50,
              seed: int = 0, jit: bool = True,
-             packed_uplink: bool = False) -> L2GDRun:
+             packed_uplink=_UNSET) -> L2GDRun:
     """Run Algorithm 1 for ``steps`` iterations.
 
     batch_fn(step) -> per-client batch pytree (leading client axis n).
     grad_fn(params_i, batch_i) -> (loss_i, grads_i).
 
-    Bits accounting mirrors the path :func:`repro.core.compressors.
-    tree_apply` actually takes (DESIGN.md §3): flat-engine compressors are
-    charged over the single raveled buffer, others leaf-wise.  With
-    ``packed_uplink=True`` (qsgd client compressor) the uplink is charged
-    at the EXACT packed int8 payload size — codes incl. bucket padding
-    plus one fp32 norm per bucket — matching what
-    :func:`repro.core.flatbuf.pack_tree_qsgd` would put on the wire.
+    ``plan`` selects the wire representation: a single uplink
+    :class:`CompressionPlan` (downlink defaults to ``master_comp``'s auto
+    plan) or an ``(uplink, downlink)`` pair; ``None`` builds auto plans
+    from ``client_comp`` / ``master_comp``.  The step compresses through
+    the SAME plans the ledger charges: per round the uplink costs
+    ``uplink_plan.round_bits()`` per client and the downlink
+    ``downlink_plan.round_bits()`` — both read from the payload spec
+    (DESIGN.md §3), e.g. ``transport="packed"`` charges the exact int8
+    codes + bucket norms the all_gather uplink would move.
+
+    ``packed_uplink=`` is a deprecated shim for
+    ``plan=make_plan(client_comp, one_client, transport="packed")`` and
+    now accepts ANY flat-engine codec (qsgd, natural).
     """
     state = init_state(params_stacked)
     ledger = BitsLedger(hp.n)
     run = L2GDRun(state, ledger, [], [])
     rng = np.random.default_rng(seed)
 
+    # one client's model (no client axis) — what each plan measures
+    one_client = jax.tree.map(lambda a: a[0], params_stacked)
+    if packed_uplink is not _UNSET:
+        warnings.warn(
+            "run_l2gd(packed_uplink=) is deprecated; pass plan="
+            "make_plan(client_comp, one_client_params, transport='packed') "
+            "(repro.core.codec.make_plan)", DeprecationWarning, stacklevel=2)
+        if packed_uplink and plan is None:
+            plan = make_plan(client_comp, one_client, transport="packed")
+    if plan is None:
+        up_plan = make_plan(client_comp, one_client)
+        down_plan = make_plan(master_comp, one_client)
+    elif isinstance(plan, (tuple, list)):
+        up_plan, down_plan = plan
+    else:
+        up_plan, down_plan = plan, make_plan(master_comp, one_client)
+    if not isinstance(up_plan, CompressionPlan) \
+            or not isinstance(down_plan, CompressionPlan):
+        raise TypeError("plan must be a CompressionPlan or an "
+                        "(uplink, downlink) pair of CompressionPlans")
+    if up_plan.specs is None:
+        up_plan = up_plan.bind(one_client)
+    if down_plan.specs is None:
+        down_plan = down_plan.bind(one_client)
+
     step_fn = lambda st, b, xi, k: l2gd_step(st, b, xi, k, grad_fn, hp,
-                                             client_comp, master_comp)
+                                             up_plan, down_plan)
     if jit:
         step_fn = jax.jit(step_fn)
 
-    # wire bits for one client's model / one broadcast (shape-static)
-    one_client = jax.tree.map(lambda a: a[0], params_stacked)
-    if packed_uplink:
-        if client_comp.name != "qsgd":
-            raise ValueError("packed_uplink requires a qsgd client "
-                             f"compressor, got {client_comp.name!r}")
-        up_bits = float(flatbuf.packed_wire_bits(
-            one_client, bucket=client_comp.bucket))
-    else:
-        up_bits = tree_wire_bits(client_comp, one_client)
-    down_bits = tree_wire_bits(master_comp, one_client)
+    # wire bits for one client's message / one broadcast: the payload
+    # spec is the single source of truth (no re-derivation here)
+    up_bits = up_plan.round_bits()
+    down_bits = down_plan.round_bits()
 
     xi_prev = 1  # Algorithm 1 input: xi_{-1} = 1
     for k in range(steps):

@@ -4,13 +4,18 @@ The paper measures 'communicated bits normalized by the number of local
 devices (#bits/n)' to reach a target quality.  We charge:
 
   * uplink:   each client sends its compressed payload to the master
-              -> sum_i wire_bits(C_i, model) / n = wire_bits per client
+              -> sum_i nbits(uplink payload) / n = payload bits per client
   * downlink: the master broadcasts the compressed average to all n clients
-              -> n * wire_bits(C_M, model) / n = wire_bits(C_M, model)
+              -> n * nbits(downlink payload) / n = downlink payload bits
 
-Communication only happens on local->aggregation transitions (xi_k = 1,
-xi_{k-1} = 0); the ledger is driven by the host protocol loop, which is the
-single source of truth for when a round happened.
+Every number recorded here is read from a payload spec —
+``CompressionPlan.round_bits()``, i.e. ``Payload.nbits`` evaluated on
+the model's shapes (DESIGN.md §3) — by the protocol drivers
+(fl/l2gd_driver.py, fl/fedavg.py); the ledger itself never derives a
+wire cost.  Communication only happens on local->aggregation
+transitions (xi_k = 1, xi_{k-1} = 0); the ledger is driven by the host
+protocol loop, which is the single source of truth for when a round
+happened.
 """
 from __future__ import annotations
 

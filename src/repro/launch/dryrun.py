@@ -92,6 +92,10 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
                   shared-key C_M)
       wire_agg  — beyond-paper shard_map aggregation: stochastic-bf16
                   uplink pmean (narrow wire) + shared-key C_M downlink
+      packed_agg / packed_natural_agg
+                — shard_map aggregation whose all_gather uplink carries
+                  the packed wire payload of a qsgd / natural
+                  CompressionPlan (repro.core.codec)
     cfg_overrides — dataclasses.replace kwargs on the arch config (used by
                   §Perf iterations, e.g. {"moe_impl": "einsum"}).
     """
@@ -133,11 +137,20 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
             if variant == "wire_agg":
                 from repro.launch.steps import build_average_fn
                 average_fn = build_average_fn(
-                    "wire", mesh, cax, pspec, make_compressor("natural"))
-            elif variant == "packed_agg":
+                    mesh, cax, pspec, make_compressor("natural"),
+                    uplink="wire")
+            elif variant in ("packed_agg", "packed_natural_agg"):
+                from repro.core.codec import make_plan
                 from repro.launch.steps import build_average_fn
+                up_name = ("qsgd" if variant == "packed_agg" else "natural")
+                one_client = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+                    state_sds.params)
+                up_plan = make_plan(make_compressor(up_name), one_client,
+                                    transport="packed")
                 average_fn = build_average_fn(
-                    "packed", mesh, cax, pspec, make_compressor("natural"))
+                    mesh, cax, pspec, make_compressor("natural"),
+                    uplink=up_plan)
             step = build_train_step(cfg, hp, make_compressor("natural"),
                                     make_compressor("natural"),
                                     average_fn=average_fn)
@@ -234,6 +247,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax>=0.4.30: one dict per device
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -22,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, InputShape
 from repro.core import Compressor, Identity, L2GDHyper, L2GDState, l2gd_step
+from repro.core.codec import CompressionPlan, make_plan
 from repro.models import (decode_step, forward, init_caches, init_params,
                           loss_fn)
 
@@ -106,45 +108,82 @@ def cache_specs(cfg: ArchConfig, batch: int, capacity: int):
 # step builders
 # ---------------------------------------------------------------------------
 
-def build_average_fn(kind: str, mesh, client_axes: tuple,
-                     param_pspecs_stacked, master_comp: Compressor,
-                     **kwargs):
+def build_average_fn(*args, uplink="wire", kind: str = None, **kwargs):
     """Aggregation realization for :func:`build_train_step`'s
     ``average_fn`` hook.
 
-    kind:
-      "wire"    — stochastic-bf16 uplink fused with pmean
-                  (:func:`repro.core.aggregation.make_sharded_average`)
-      "packed"  — int8 QSGD payload all_gather, ~8.25 bits/element on the
-                  uplink collective (:func:`repro.core.aggregation.
-                  make_packed_sharded_average`; kwargs: levels, bucket)
+    ``build_average_fn(mesh, client_axes, param_pspecs_stacked,
+    master_comp, uplink=...)`` with:
+
+      uplink="wire"            — stochastic-bf16 uplink fused with pmean
+                                 (:func:`repro.core.aggregation.
+                                 make_sharded_average`)
+      uplink=<CompressionPlan> — the plan's wire payload rides the
+                                 all_gather collective (any flat-engine
+                                 codec: int8 QSGD codes, uint8 natural
+                                 sign+exponent codes, ...;
+                                 :func:`repro.core.aggregation.
+                                 make_payload_sharded_average`)
+
+    The legacy string dispatch — ``build_average_fn(kind, mesh, ...)``
+    with kind in {"wire", "packed"} — is a deprecated shim ("packed"
+    maps to a packed QSGD plan; kwargs: levels, bucket).
     """
-    from repro.core.aggregation import (make_packed_sharded_average,
+    from repro.core.aggregation import (make_payload_sharded_average,
                                         make_sharded_average)
-    if kind == "wire":
+    if args and isinstance(args[0], str):
+        kind, args = args[0], args[1:]
+    if kind is not None:
+        warnings.warn(
+            "build_average_fn(kind=...) is deprecated; pass uplink='wire' "
+            "or uplink=<CompressionPlan> (repro.core.codec.make_plan(comp, "
+            "params, transport='packed'))", DeprecationWarning, stacklevel=2)
+        if kind == "wire":
+            uplink = "wire"
+        elif kind == "packed":
+            from repro.core import QSGD
+            uplink = make_plan(
+                QSGD(levels=kwargs.pop("levels", 127),
+                     bucket=kwargs.pop("bucket", 2048)), transport="packed")
+        else:
+            raise ValueError(f"unknown average_fn kind {kind!r}")
+    if kwargs:
+        raise TypeError(f"build_average_fn got unexpected keyword "
+                        f"arguments {sorted(kwargs)} (levels/bucket belong "
+                        "on the uplink plan's codec)")
+    mesh, client_axes, param_pspecs_stacked, master_comp = args
+    if uplink == "wire":
         return make_sharded_average(mesh, client_axes, param_pspecs_stacked,
                                     master_comp)
-    if kind == "packed":
-        return make_packed_sharded_average(
-            mesh, client_axes, param_pspecs_stacked, master_comp, **kwargs)
-    raise ValueError(f"unknown average_fn kind {kind!r}")
+    if isinstance(uplink, CompressionPlan):
+        return make_payload_sharded_average(
+            mesh, client_axes, param_pspecs_stacked, master_comp, uplink)
+    raise ValueError(f"uplink must be 'wire' or a CompressionPlan, "
+                     f"got {uplink!r}")
 
 
 def build_train_step(cfg: ArchConfig, hp: L2GDHyper,
                      client_comp: Compressor = Identity(),
                      master_comp: Compressor = Identity(),
-                     average_fn=None):
+                     average_fn=None, plans=None):
     """Compressed-L2GD step over client-stacked model params.
 
     ``average_fn`` (optional) overrides the aggregation realization — see
     :func:`build_average_fn` for the beyond-paper shard_map variants
-    (stochastic-bf16 wire / packed int8 payload, §Perf).
+    (stochastic-bf16 wire / packed payload, §Perf).
 
-    Compression is pinned to the leaf-wise path (``flat=False``): this
-    step lowers under pjit with model-axis-sharded params, where the
-    flat-buffer engine's ravel would force a cross-shard
-    rematerialization (repro.core.flatbuf's sharding note); the fused
-    engine rides the shard_map ``average_fn`` variants instead."""
+    ``plans`` (optional) is an (uplink, downlink) pair of
+    :class:`CompressionPlan`s; by default both compressors get
+    ``transport="leafwise"`` plans: this step lowers under pjit with
+    model-axis-sharded params, where the flat-buffer engine's ravel would
+    force a cross-shard rematerialization (DESIGN.md §7 sharding table);
+    the fused engine rides the shard_map ``average_fn`` variants
+    instead."""
+    if plans is None:
+        shapes = param_shapes(cfg)
+        plans = (make_plan(client_comp, shapes, transport="leafwise"),
+                 make_plan(master_comp, shapes, transport="leafwise"))
+    up_plan, down_plan = plans
 
     def grad_fn(params_i, batch_i):
         (loss, _), grads = jax.value_and_grad(
@@ -155,8 +194,8 @@ def build_train_step(cfg: ArchConfig, hp: L2GDHyper,
                    key_data: jax.Array):
         key = jax.random.wrap_key_data(key_data)
         new_state, metrics = l2gd_step(state, batch, xi, key, grad_fn, hp,
-                                       client_comp, master_comp,
-                                       average_fn=average_fn, flat=False)
+                                       up_plan, down_plan,
+                                       average_fn=average_fn)
         return new_state, metrics
 
     return train_step

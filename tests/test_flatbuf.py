@@ -1,5 +1,5 @@
 """Flat-buffer engine tests: layout round-trips, statistical equivalence
-of flat vs leaf-wise tree_apply, bit-exactness of the in-kernel counter
+of flat vs leaf-wise transports, bit-exactness of the in-kernel counter
 RNG across pallas-interpret / jnp-fallback / ref oracles, the packed int8
 payload round-trip, the no-noise-array property, and the packed wire-bits
 accounting (ISSUE acceptance criteria)."""
@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import flatbuf, make_compressor, tree_apply, tree_wire_bits
+from repro.core import flatbuf, make_compressor, make_plan, tree_wire_bits
 from repro.kernels.natural.kernel import natural_fused, natural_fused_pallas
 from repro.kernels.natural.ref import natural_fused_ref
 from repro.kernels.qsgd.kernel import (qsgd_fused, qsgd_fused_pallas,
@@ -82,22 +82,23 @@ def test_flat_tree_apply_unbiased_like_leafwise(name):
     tree = {"a": x[:300].reshape(30, 10), "b": x[300:]}
     keys = jax.random.split(jax.random.PRNGKey(2), 3000)
 
-    def mc(flat):
-        ys = jax.vmap(lambda k: tree_apply(comp, k, tree, flat=flat))(keys)
+    def mc(transport):
+        plan = make_plan(comp, tree, transport=transport)
+        ys = jax.vmap(lambda k: plan.apply(k, tree))(keys)
         mean = jax.tree.map(lambda a: jnp.mean(a, 0), ys)
         return jnp.concatenate([mean["a"].reshape(-1), mean["b"]])
 
     tol = 4.0 * np.sqrt(max(comp.omega((700,)), 0.13)) \
         * float(jnp.max(jnp.abs(x))) / np.sqrt(3000) + 1e-5
-    assert float(jnp.max(jnp.abs(mc(True) - x))) < tol
-    assert float(jnp.max(jnp.abs(mc(False) - x))) < tol
+    assert float(jnp.max(jnp.abs(mc("flat") - x))) < tol
+    assert float(jnp.max(jnp.abs(mc("leafwise") - x))) < tol
 
 
 def test_flat_tree_apply_preserves_structure_dtype_zeros():
     comp = make_compressor("qsgd")
     tree = {"a": jnp.ones((64, 8)), "b": [jnp.zeros((5,)),
                                           jnp.ones((7, 3), jnp.bfloat16)]}
-    out = tree_apply(comp, jax.random.PRNGKey(0), tree, flat=True)
+    out = make_plan(comp, transport="flat").apply(jax.random.PRNGKey(0), tree)
     assert jax.tree.structure(out) == jax.tree.structure(tree)
     assert out["b"][1].dtype == jnp.bfloat16
     assert float(jnp.max(jnp.abs(out["b"][0]))) == 0.0  # zeros stay zero
@@ -184,17 +185,20 @@ def test_pack_tree_roundtrip_with_ragged_tail():
 
 
 def test_packed_wire_bits_accounting():
-    """tree_wire_bits (flat) matches the actual packed payload within the
-    per-bucket-norm overhead + padding + the log2(255)-vs-8 rounding."""
+    """tree_wire_bits reads the payload spec: the flat/packed transports
+    account the EXACT transported payload (Payload.nbits)."""
     comp = make_compressor("qsgd")
     tree = _tree(seed=11)
     payload, layout = flatbuf.pack_tree_qsgd(jax.random.PRNGKey(0), tree,
                                              bucket=comp.bucket)
     actual = flatbuf.payload_wire_bits(payload)
     assert actual == flatbuf.packed_wire_bits(tree, bucket=comp.bucket)
-    accounted = tree_wire_bits(comp, tree, flat=True)
-    slack = 32 * layout.n_buckets + 8 * layout.pad + 0.01 * layout.d
-    assert abs(actual - accounted) <= slack, (actual, accounted, slack)
+    assert actual == payload.nbits
+    assert tree_wire_bits(comp, tree, transport="flat") == actual
+    assert tree_wire_bits(comp, tree, transport="packed") == actual
+    # the info-theoretic operator width stays available as a lower bound
+    d = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+    assert comp.wire_bits((d,)) <= actual
 
 
 # --------------------------------------------------------------------------
@@ -207,10 +211,12 @@ def test_flat_path_materializes_no_noise_array():
     path draws a uniform array per leaf."""
     comp = make_compressor("qsgd")
     tree = _tree(seed=12)
+    plan_flat = make_plan(comp, tree, transport="flat")
+    plan_leaf = make_plan(comp, tree, transport="leafwise")
     flat_jaxpr = str(jax.make_jaxpr(
-        lambda k: tree_apply(comp, k, tree, flat=True))(jax.random.PRNGKey(0)))
+        lambda k: plan_flat.apply(k, tree))(jax.random.PRNGKey(0)))
     legacy_jaxpr = str(jax.make_jaxpr(
-        lambda k: tree_apply(comp, k, tree, flat=False))(jax.random.PRNGKey(0)))
+        lambda k: plan_leaf.apply(k, tree))(jax.random.PRNGKey(0)))
     for prim in ("random_bits", "threefry"):
         assert prim not in flat_jaxpr, prim
     assert ("random_bits" in legacy_jaxpr) or ("threefry" in legacy_jaxpr)
@@ -220,7 +226,7 @@ def test_flat_path_materializes_no_noise_array():
     for prim in ("random_bits", "threefry"):
         assert prim not in pack_jaxpr, prim
     # and in the optimized HLO: no XLA rng instructions at all
-    hlo = jax.jit(lambda k: tree_apply(comp, k, tree, flat=True)) \
+    hlo = jax.jit(lambda k: plan_flat.apply(k, tree)) \
         .lower(jax.random.PRNGKey(0)).compile().as_text()
     assert "rng-bit-generator" not in hlo
     assert "rng-get-and-update-state" not in hlo
