@@ -3,36 +3,91 @@ function of p and lambda after K iterations on the convex problem.
 
 Validates the paper's takeaway: an interior optimum in (p, lambda) exists;
 very small p is bad (no learning from peers), very large p is bad (no
-local progress)."""
+local progress).
+
+The sweep runs through the scanned rollout engine
+(:func:`repro.core.rollout.rollout_l2gd_grid`): the whole (p, lambda)
+grid is ONE compiled dispatch instead of |grid| x K host round-trips.
+``run_host_grid`` keeps the legacy per-cell host loop as the wall-clock
+and ledger-replay baseline (used by bench_rollout for the recorded
+scan-vs-host ratio)."""
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, logreg_setup, timed
-from repro.core import L2GDHyper
+from benchmarks.common import emit, logreg_setup
+from repro.core import L2GDHyper, hyper_grid, rollout_l2gd_grid
 from repro.fl import run_l2gd
+
+N = 5
+
+
+def _grid_axes(fast: bool):
+    # the scanned grid engine makes a DENSE fast sweep affordable (one
+    # dispatch); the legacy host loop paid |grid| compiles + |grid| x K
+    # per-step round-trips for the same axes
+    if fast:
+        ps = list(np.linspace(0.05, 0.95, 10))
+        lams = [0.01, 0.1, 0.5, 1.0, 5.0, 10.0, 25.0, 100.0]
+    else:
+        ps = list(np.linspace(0.05, 0.95, 19))
+        lams = [0.01, 0.05, 0.1, 0.5, 1, 2.5, 5, 10, 25, 50, 100]
+    # stability rule: aggregation contraction eta*lam/(np) <= 1
+    # (the paper observes divergence/variance for values in (0.5, 1))
+    eta_rule = lambda P, L: np.minimum(0.4, N * P / L)
+    return ps, lams, eta_rule
+
+
+def run_grid(K: int = 100, fast: bool = True):
+    """The scan path: one vmapped lax.scan over the whole grid.
+
+    Returns (grid losses dict, wall-clock us, per-cell xi traces)."""
+    X, Y, grad_fn, mean_loss, _ = logreg_setup(heterogeneity=1.0)
+    ps, lams, eta_rule = _grid_axes(fast)
+    hp_grid, gshape = hyper_grid(ps, lams, eta_rule, N)
+    t0 = time.perf_counter()
+    finals, trace = rollout_l2gd_grid(
+        jax.random.PRNGKey(0), {"w": jnp.zeros((N, 124))}, hp_grid, (X, Y),
+        batch_axis=None, steps=K, grad_fn=grad_fn)
+    jax.block_until_ready(finals)
+    t_us = (time.perf_counter() - t0) * 1e6
+    w = np.asarray(finals.params["w"])        # (G, N, d)
+    xis = np.asarray(trace.xis)               # (G, K)
+    grid, cell_xis = {}, {}
+    for g, (i, j) in enumerate(np.ndindex(gshape)):
+        grid[(ps[i], lams[j])] = mean_loss(w[g])
+        cell_xis[(ps[i], lams[j])] = xis[g]
+    return grid, t_us, cell_xis
+
+
+def run_host_grid(K: int = 100, fast: bool = True):
+    """The legacy path: a Python double loop of per-step host-loop runs.
+
+    Returns (grid losses dict, wall-clock us, per-cell L2GDRun)."""
+    X, Y, grad_fn, mean_loss, _ = logreg_setup(heterogeneity=1.0)
+    ps, lams, eta_rule = _grid_axes(fast)
+    grid, runs = {}, {}
+    t0 = time.perf_counter()
+    for p in ps:
+        for lam in lams:
+            hp = L2GDHyper(eta=float(eta_rule(np.float32(p),
+                                              np.float32(lam))),
+                           lam=lam, p=p, n=N)
+            r = run_l2gd(jax.random.PRNGKey(0), {"w": jnp.zeros((N, 124))},
+                         grad_fn, hp, lambda k: (X, Y), K, mode="host")
+            grid[(p, lam)] = mean_loss(np.asarray(r.state.params["w"]))
+            runs[(p, lam)] = r
+    t_us = (time.perf_counter() - t0) * 1e6
+    return grid, t_us, runs
 
 
 def run(K: int = 100, fast: bool = True):
-    X, Y, grad_fn, mean_loss, _ = logreg_setup(heterogeneity=1.0)
-    ps = [0.1, 0.4, 0.65, 0.9] if fast else list(np.linspace(0.05, 0.95, 10))
-    lams = [0.1, 1.0, 10.0, 100.0] if fast else [0.01, 0.1, 1, 5, 10, 25, 100]
-    grid = {}
-    t_us = 0.0
-    for p in ps:
-        for lam in lams:
-            # stability rule: aggregation contraction eta*lam/(np) <= 1
-            # (the paper observes divergence/variance for values in (0.5, 1))
-            eta = min(0.4, 5 * p / lam)
-            hp = L2GDHyper(eta=eta, lam=lam, p=p, n=5)
-            import time
-            t0 = time.perf_counter()
-            r = run_l2gd(jax.random.PRNGKey(0), {"w": jnp.zeros((5, 124))},
-                         grad_fn, hp, lambda k: (X, Y), K, seed=1)
-            t_us += (time.perf_counter() - t0) * 1e6
-            grid[(p, lam)] = mean_loss(np.asarray(r.state.params["w"]))
+    grid, t_us, _ = run_grid(K, fast)
+    ps, _, _ = _grid_axes(fast)
     best = min(grid, key=grid.get)
     worst = max(grid, key=grid.get)
     emit("fig3_p_lambda_sweep", t_us / len(grid),

@@ -43,9 +43,11 @@ def run(steps: int = 150, fast: bool = True):
     for name in names:
         comp = make_compressor(name)
         t0 = time.perf_counter()
+        # scan path: the xi stream derives from the key (independent of
+        # the codec), so every compressor sees the same realization
         r = run_l2gd(jax.random.PRNGKey(1), params0, grad_fn, hp,
                      lambda k: {"tokens": jnp.asarray(ts.batch_at(k))},
-                     steps, client_comp=comp, master_comp=comp, seed=2)
+                     steps, client_comp=comp, master_comp=comp)
         dt = (time.perf_counter() - t0) * 1e6 / steps
         final = float(np.mean([l for _, l in r.losses][-5:]))
         bits = r.ledger.bits_per_client

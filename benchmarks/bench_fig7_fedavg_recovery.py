@@ -29,7 +29,7 @@ def run():
 
     t0 = time.perf_counter()
     r = run_l2gd(jax.random.PRNGKey(0), {"w": jnp.zeros((n, 124))}, grad_fn,
-                 hp, lambda k: (X, Y), 400, seed=4)
+                 hp, lambda k: (X, Y), 400)
     us = (time.perf_counter() - t0) * 1e6 / 400
     l2gd_loss = mean_loss(np.asarray(r.state.params["w"]))
 

@@ -142,7 +142,7 @@ def run():
     us, _ = timed(lambda: flash_attention_ref(q, kk, v))
     emit("flash_attention_ref", us, "S=512,H=4,D=64")
 
-    common.write_json(_JSON, common.RESULTS[start:])
+    common.merge_json(_JSON, common.RESULTS[start:])
 
 
 if __name__ == "__main__":

@@ -1,0 +1,98 @@
+"""Rollout engine benchmark: scanned on-device protocol vs the legacy
+per-step host loop (DESIGN.md §8).
+
+Two measurements, both merged into BENCH_kernels.json for the perf
+trajectory:
+
+  * ``rollout_scan_vs_host`` — steps/sec of ``run_l2gd(mode="scan")``
+    (one lax.scan dispatch, zero per-step host syncs) vs
+    ``run_l2gd(mode="host")`` (one jitted dispatch + blocking loss fetch
+    per step) on the convex problem, identical protocol realization.
+  * ``fig3_grid_vs_host`` — wall-clock of the Fig-3 fast (p, lambda)
+    sweep as ONE ``rollout_l2gd_grid`` dispatch vs the |grid| x K host
+    loop, with the acceptance invariant checked: the ledger replayed
+    from every grid cell's device xi trace is bit-for-bit the ledger the
+    host loop recorded for that cell.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import bench_fig3_sweep, common
+from benchmarks.common import emit, logreg_setup
+from repro.core import L2GDHyper, make_plan, Identity
+from repro.fl import run_l2gd
+from repro.fl.ledger import BitsLedger
+
+_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_kernels.json")
+
+
+def run(K: int = 400):
+    start = len(common.RESULTS)
+    X, Y, grad_fn, _, _ = logreg_setup()
+    n = 5
+    hp = L2GDHyper(eta=0.5, lam=1.0, p=0.3, n=n)
+    params = {"w": jnp.zeros((n, 124))}
+    key = jax.random.PRNGKey(0)
+
+    # steps/sec, single protocol realization (same key => same xi trace).
+    # Warm each mode at the SAME K, then time a fresh call: jit caches do
+    # not persist across run_l2gd calls, so both timed runs include their
+    # own per-call compile — a symmetric cold measurement of what one
+    # driver invocation costs (the scan compiles one K-step lax.scan, the
+    # host loop one step function + K dispatches with a blocking fetch)
+    runs = {}
+    for mode in ("scan", "host"):
+        run_l2gd(key, params, grad_fn, hp, lambda k: (X, Y), K, mode=mode)
+        t0 = time.perf_counter()
+        runs[mode] = run_l2gd(key, params, grad_fn, hp, lambda k: (X, Y), K,
+                              mode=mode)
+        runs[mode + "_dt"] = time.perf_counter() - t0
+    assert np.array_equal(runs["scan"].xis, runs["host"].xis)
+    assert runs["scan"].ledger.history == runs["host"].ledger.history
+    sps_scan = K / runs["scan_dt"]
+    sps_host = K / runs["host_dt"]
+    emit("rollout_scan_vs_host", runs["scan_dt"] * 1e6 / K,
+         f"scan_steps/s={sps_scan:.0f} host_steps/s={sps_host:.0f} "
+         f"speedup={sps_scan / sps_host:.2f}x",
+         scan_steps_per_s=round(sps_scan, 1),
+         host_steps_per_s=round(sps_host, 1),
+         speedup=round(sps_scan / sps_host, 2))
+
+    # fig3 fast sweep: one grid dispatch vs |grid| x K host loop, plus the
+    # ledger-replay acceptance invariant
+    Kg = 100
+    grid, t_grid, cell_xis = bench_fig3_sweep.run_grid(K=Kg, fast=True)
+    hgrid, t_host, host_runs = bench_fig3_sweep.run_host_grid(K=Kg, fast=True)
+    plan = make_plan(Identity(), {"w": jnp.zeros((124,))})
+    bits = plan.round_bits()
+    for cell, xis in cell_xis.items():
+        replayed = BitsLedger(bench_fig3_sweep.N)
+        replayed.replay_xi_trace(xis, bits, bits)
+        host_led = host_runs[cell].ledger
+        assert np.array_equal(xis, host_runs[cell].xis), cell
+        assert replayed.history == host_led.history, cell
+        assert replayed.bits_per_client == host_led.bits_per_client, cell
+    for cell in grid:
+        assert abs(grid[cell] - hgrid[cell]) < 1e-5, \
+            (cell, grid[cell], hgrid[cell])
+    speedup = t_host / t_grid
+    emit("fig3_grid_vs_host", t_grid / len(grid),
+         f"grid_us={t_grid:.0f} host_us={t_host:.0f} "
+         f"speedup={speedup:.1f}x cells={len(grid)} K={Kg} "
+         f"ledger_replay=bit-exact",
+         grid_us=round(t_grid, 1), host_us=round(t_host, 1),
+         speedup=round(speedup, 2), cells=len(grid), steps=Kg)
+    assert speedup > 1.0, f"grid dispatch slower than host loop ({speedup})"
+
+    common.merge_json(_JSON, common.RESULTS[start:])
+
+
+if __name__ == "__main__":
+    run()

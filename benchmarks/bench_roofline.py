@@ -55,6 +55,10 @@ def run(write_md: bool = True):
     emit("roofline_summary", 0.0,
          f"ok={len(ok)} skip={len(skip)} fail={len(fail)}")
     if write_md:
+        # experiments/dryrun is produced by repro.launch.dryrun and may
+        # not exist in a fresh checkout (git keeps no empty dirs); the
+        # ".." path component needs it on disk to resolve
+        os.makedirs(DRYRUN_DIR, exist_ok=True)
         out = os.path.join(DRYRUN_DIR, "..", "roofline_table.md")
         with open(out, "w") as f:
             f.write("\n".join(lines) + "\n")

@@ -32,7 +32,7 @@ def run(fast: bool = True):
     run_steps = 500
     r = run_l2gd(jax.random.PRNGKey(0), {"w": jnp.zeros((n, 124))}, grad_fn,
                  hp, lambda k: (X, Y), run_steps, client_comp=comp,
-                 master_comp=comp, seed=1,
+                 master_comp=comp,
                  eval_fn=lambda p: jnp.mean(jnp.asarray(
                      [logreg_loss_and_grad(p["w"][i], X[i], Y[i])[0]
                       for i in range(n)])), eval_every=20)
@@ -40,7 +40,9 @@ def run(fast: bool = True):
     l2gd_bits = None
     for (k, v) in r.evals:
         if v <= TARGET:
-            rounds_before = sum(1 for h in r.ledger.history if h["step"] <= k)
+            # evals record steps COMPLETED (k), history records 0-based
+            # step indices, so the rounds seen by this eval are step < k
+            rounds_before = sum(1 for h in r.ledger.history if h["step"] < k)
             per_round = r.ledger.bits_per_client / max(r.ledger.rounds, 1)
             l2gd_bits = per_round * rounds_before
             break

@@ -41,6 +41,20 @@ def write_json(path: str, results=None) -> None:
           f"rows to {path}", flush=True)
 
 
+def merge_json(path: str, rows) -> None:
+    """Refresh ``rows`` in a shared results file by name, preserving rows
+    other benches recorded (BENCH_kernels.json carries both the kernel
+    microbench and the rollout-engine rows, whichever ran last)."""
+    import os
+    existing = []
+    if os.path.exists(path):
+        with open(path) as f:
+            existing = json.load(f)
+    names = {r["name"] for r in rows}
+    write_json(path, [r for r in existing if r["name"] not in names]
+               + list(rows))
+
+
 def logreg_setup(n_clients: int = 5, heterogeneity: float = 1.0, seed: int = 0):
     data = make_logreg_data(n_clients=n_clients, heterogeneity=heterogeneity,
                             seed=seed)

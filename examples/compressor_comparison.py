@@ -47,10 +47,13 @@ for name in ("identity", "natural", "qsgd", "terngrad", "bernoulli", "randk",
     # payload spec the wire would carry (auto transport: flat engine for
     # qsgd/natural, leafwise otherwise)
     plan = make_plan(comp, one_client)
+    # scan-mode driver: one lax.scan dispatch for the whole run; the xi
+    # stream derives from the key, so every compressor row sees the SAME
+    # protocol realization (comparable rounds/bits by construction)
     r = run_l2gd(jax.random.PRNGKey(1), params0, grad_fn, hp,
                  lambda k: {"tokens": jnp.asarray(ts.batch_at(k))},
                  args.steps, client_comp=comp, master_comp=comp,
-                 plan=(plan, plan), seed=2)
+                 plan=(plan, plan))
     final = float(np.mean([l for _, l in r.losses][-5:]))
     rows.append((name, plan.transport, final, r.ledger.bits_per_client))
 

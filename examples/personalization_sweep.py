@@ -2,6 +2,11 @@
 probability p and the personalization strength lambda (uncompressed L2GD,
 logistic regression, 5 clients) — prints an ASCII heatmap.
 
+The whole (p, lambda) grid runs as ONE compiled dispatch through the
+scanned rollout engine (repro.core.rollout.rollout_l2gd_grid): every
+cell's K protocol rounds live inside a vmapped lax.scan, so there are no
+per-step host round-trips and no Python double loop over the grid.
+
   PYTHONPATH=src python examples/personalization_sweep.py [--full]
 """
 import argparse
@@ -10,9 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import L2GDHyper
+from repro.core import hyper_grid, rollout_l2gd_grid
 from repro.data import logreg_loss_and_grad, make_logreg_data
-from repro.fl import run_l2gd
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--full", action="store_true", help="finer grid, K=300")
@@ -32,16 +36,19 @@ def grad_fn(p, b):
     return loss, {"w": g}
 
 
-grid = np.zeros((len(ps), len(lams)))
-for i, p in enumerate(ps):
-    for j, lam in enumerate(lams):
-        # stability rule: keep the aggregation contraction eta*lam/(np) <= 1
-        hp = L2GDHyper(eta=min(0.4, N * p / lam), lam=float(lam),
-                       p=float(p), n=N)
-        r = run_l2gd(jax.random.PRNGKey(0), {"w": jnp.zeros((N, 124))},
-                     grad_fn, hp, lambda k: (X, Y), K, seed=1)
+# stability rule: keep the aggregation contraction eta*lam/(np) <= 1
+hp_grid, gshape = hyper_grid(ps, lams,
+                             lambda P, L: np.minimum(0.4, N * P / L), N)
+finals, trace = rollout_l2gd_grid(
+    jax.random.PRNGKey(0), {"w": jnp.zeros((N, 124))}, hp_grid, (X, Y),
+    batch_axis=None, steps=K, grad_fn=grad_fn)
+w = np.asarray(finals.params["w"]).reshape(gshape + (N, 124))
+
+grid = np.zeros(gshape)
+for i in range(len(ps)):
+    for j in range(len(lams)):
         grid[i, j] = np.mean([
-            logreg_loss_and_grad(r.state.params["w"][c], X[c], Y[c])[0]
+            logreg_loss_and_grad(w[i, j, c], X[c], Y[c])[0]
             for c in range(N)])
 
 print(f"\nmean local loss f after K={K} iterations (lower = better)\n")

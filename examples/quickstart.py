@@ -42,7 +42,7 @@ for comp_name in ("identity", "natural", "qsgd"):
     hp = L2GDHyper(eta=0.5, lam=1.0, p=0.3, n=N)
     r = run_l2gd(jax.random.PRNGKey(0), {"w": jnp.zeros((N, 124))}, grad_fn,
                  hp, lambda k: (X, Y), 500, client_comp=comp,
-                 master_comp=comp, seed=1)
+                 master_comp=comp)
     print(f"L2GD + {comp_name:26s} "
           f"{personalized_loss(np.asarray(r.state.params['w'])):16.4f} "
           f"{r.ledger.bits_per_client:12.3e} {r.ledger.rounds:7d}")
@@ -54,7 +54,7 @@ plan = make_plan(comp, {"w": jnp.zeros((124,))}, transport="packed")
 hp = L2GDHyper(eta=0.5, lam=1.0, p=0.3, n=N)
 r = run_l2gd(jax.random.PRNGKey(0), {"w": jnp.zeros((N, 124))}, grad_fn,
              hp, lambda k: (X, Y), 500, client_comp=comp, master_comp=comp,
-             plan=plan, seed=1)
+             plan=plan)
 print(f"L2GD + {'qsgd (packed wire)':26s} "
       f"{personalized_loss(np.asarray(r.state.params['w'])):16.4f} "
       f"{r.ledger.bits_per_client:12.3e} {r.ledger.rounds:7d}")

@@ -12,8 +12,11 @@ from repro.core.compressors import (
     make_compressor, tree_apply, tree_wire_bits, joint_omega,
 )
 from repro.core.l2gd import (
-    L2GDHyper, L2GDState, init_state, l2gd_step, local_update,
+    L2GDHyper, L2GDState, init_state, make_hyper, l2gd_step, local_update,
     aggregation_update, draw_xi,
+)
+from repro.core.rollout import (
+    RolloutTrace, rollout_l2gd, rollout_l2gd_grid, hyper_grid,
 )
 from repro.core.aggregation import (
     compressed_average, compressed_average_wire, stochastic_round_cast,
@@ -33,7 +36,9 @@ __all__ = [
     "BernoulliPayload", "TreePayload", "index_bits",
     "Compressor", "Identity", "QSGD", "Natural", "TernGrad", "Bernoulli",
     "RandK", "TopK", "make_compressor", "tree_apply", "tree_wire_bits",
-    "joint_omega", "L2GDHyper", "L2GDState", "init_state", "l2gd_step",
+    "joint_omega", "L2GDHyper", "L2GDState", "init_state", "make_hyper",
+    "l2gd_step", "RolloutTrace", "rollout_l2gd", "rollout_l2gd_grid",
+    "hyper_grid",
     "local_update", "aggregation_update", "draw_xi", "compressed_average",
     "compressed_average_wire", "stochastic_round_cast",
     "make_sharded_average", "make_payload_sharded_average",

@@ -32,38 +32,69 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.aggregation import compressed_average
 from repro.core.codec import _UNSET, _legacy_transport, as_plan
 from repro.core.compressors import Compressor, Identity
 
-__all__ = ["L2GDHyper", "L2GDState", "init_state", "l2gd_step",
+__all__ = ["L2GDHyper", "L2GDState", "init_state", "make_hyper", "l2gd_step",
            "local_update", "aggregation_update", "draw_xi"]
 
 
 @dataclasses.dataclass(frozen=True)
 class L2GDHyper:
-    """Meta-parameters of Algorithm 1."""
+    """Meta-parameters of Algorithm 1.
 
-    eta: float          # stepsize
-    lam: float          # personalization penalty lambda
-    p: float            # aggregation probability
-    n: int              # number of clients
+    ``eta``/``lam``/``p`` may be Python floats OR jax arrays/tracers: the
+    class is a registered pytree (data = the three rates, meta = ``n``),
+    so a whole rollout can be ``vmap``-ed over a (p, lambda, eta) grid
+    (:func:`repro.core.rollout.rollout_l2gd_grid`) and hypers can cross a
+    ``jit`` boundary as arguments instead of burned-in constants.  Python
+    scalars still validate eagerly; array values validate in the
+    :func:`make_hyper` build helper (a tracer cannot be range-checked)."""
+
+    eta: Any            # stepsize
+    lam: Any            # personalization penalty lambda
+    p: Any              # aggregation probability
+    n: int              # number of clients (static)
 
     def __post_init__(self):
-        if not (0.0 < self.p < 1.0):
+        if isinstance(self.p, (int, float)) and not (0.0 < self.p < 1.0):
             raise ValueError(f"p must be in (0,1), got {self.p}")
-        if self.lam < 0.0:
+        if isinstance(self.lam, (int, float)) and self.lam < 0.0:
             raise ValueError("lambda must be >= 0")
 
     @property
-    def local_scale(self) -> float:
+    def local_scale(self):
         return self.eta / (self.n * (1.0 - self.p))
 
     @property
-    def agg_scale(self) -> float:
+    def agg_scale(self):
         # eta*lam/(n p); the paper observes best behaviour for values ~1 or <=0.17
         return self.eta * self.lam / (self.n * self.p)
+
+
+jax.tree_util.register_dataclass(L2GDHyper, data_fields=["eta", "lam", "p"],
+                                 meta_fields=["n"])
+
+
+def make_hyper(eta, lam, p, n: int) -> L2GDHyper:
+    """Validating build helper for (possibly array-valued) hypers.
+
+    Accepts scalars or same-shaped arrays for ``eta``/``lam``/``p`` (a
+    1-D grid axis for :func:`repro.core.rollout.rollout_l2gd_grid`);
+    concrete values are range-checked elementwise, tracers pass through
+    (validate before entering jit)."""
+    for name, v in (("eta", eta), ("lam", lam), ("p", p)):
+        if isinstance(v, jax.core.Tracer):
+            continue
+        a = np.asarray(v)
+        if name == "p" and not bool(np.all((a > 0.0) & (a < 1.0))):
+            raise ValueError(f"p must be in (0,1) elementwise, got {v}")
+        if name == "lam" and not bool(np.all(a >= 0.0)):
+            raise ValueError("lambda must be >= 0 elementwise")
+    return L2GDHyper(eta=eta, lam=lam, p=p, n=int(n))
 
 
 class L2GDState(NamedTuple):
@@ -128,7 +159,11 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
              runtime pins ``transport="leafwise"`` on its plans).
 
     Returns: (new_state, metrics dict).  Metrics include the mean client
-    loss (evaluated in branch 0; NaN-free zeros otherwise) and the branch id.
+    loss — evaluated at the PRE-update params on every branch, so the
+    loss trace has one entry per protocol step regardless of the xi
+    realization (a high-p run used to yield an empty trace) — and the
+    branch id.  The aggregation branches only use grad_fn's loss output;
+    XLA dead-code-eliminates the gradient computation there.
     """
     transport = None
     if flat is not _UNSET:
@@ -137,13 +172,17 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
     down_plan = as_plan(master_comp, transport)
     branch = jnp.where(xi_k == 0, 0, jnp.where(state.xi_prev == 0, 1, 2))
 
+    def _mean_loss(st):
+        losses, _ = jax.vmap(grad_fn)(st.params, batch)
+        return jnp.mean(losses).astype(jnp.float32)
+
     def branch_local(op):
         st, k = op
         losses, grads = jax.vmap(grad_fn)(st.params, batch)
         new_params = local_update(st.params, grads, hp)
         return (L2GDState(new_params, st.cache, jnp.asarray(0, jnp.int32),
                           st.step + 1),
-                jnp.mean(losses))
+                jnp.mean(losses).astype(jnp.float32))
 
     def branch_agg_fresh(op):
         st, k = op
@@ -154,14 +193,14 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
         new_params = aggregation_update(st.params, target, hp)
         return (L2GDState(new_params, target, jnp.asarray(1, jnp.int32),
                           st.step + 1),
-                jnp.asarray(0.0, jnp.float32))
+                _mean_loss(st))
 
     def branch_agg_cached(op):
         st, k = op
         new_params = aggregation_update(st.params, st.cache, hp)
         return (L2GDState(new_params, st.cache, jnp.asarray(1, jnp.int32),
                           st.step + 1),
-                jnp.asarray(0.0, jnp.float32))
+                _mean_loss(st))
 
     new_state, loss = jax.lax.switch(
         branch, [branch_local, branch_agg_fresh, branch_agg_cached],

@@ -1,0 +1,213 @@
+"""On-device scanned rollout engine for Algorithm 1 (DESIGN.md §8).
+
+The host driver (:mod:`repro.fl.l2gd_driver`) used to execute the
+probabilistic protocol as a Python loop: one jitted dispatch AND a
+blocking ``float(metrics["loss"])`` device sync per step, times a Python
+double loop over (p, lambda) grids in the sweep benchmarks.  This module
+puts the whole rollout on device:
+
+  * :func:`rollout_l2gd` runs K rounds inside ONE ``lax.scan``, drawing
+    xi_k ~ Bernoulli(p) via :func:`repro.core.l2gd.draw_xi` *inside* the
+    scan (the step itself stays the branch-static ``lax.switch``) and
+    accumulating device-side trace buffers: per-step loss, the xi
+    sequence, branch ids and the protocol counters.
+  * :func:`rollout_l2gd_grid` vmaps the whole rollout over array-valued
+    (eta, lambda, p) axes of a traceable :class:`~repro.core.l2gd.
+    L2GDHyper` — a Fig-3 meta-parameter sweep is ONE compiled dispatch
+    instead of |grid| x K host round-trips.
+
+Determinism contract (shared with the host-loop reference,
+``run_l2gd(mode="host")``):
+
+  ``xi_key, noise_key = jax.random.split(key)``; step k draws
+  ``xi_k = draw_xi(fold_in(xi_key, k), p)`` and feeds
+  ``fold_in(noise_key, k)`` to the step's compressor randomness, where k
+  is the GLOBAL step counter ``state.step``.  The xi stream is therefore
+  independent of the compressors (same key => same protocol realization
+  for every codec) and chunking is invisible: resuming a rollout from a
+  carried state continues the exact same streams.  Under
+  :func:`rollout_l2gd_grid` every cell shares the key — common random
+  numbers across the sweep (the per-cell xi draws threshold the SAME
+  uniforms at their own p).
+
+Wire-bits invariant: the scan never materializes a ledger.  It records
+the xi trace and the transition counters; the host reconstructs the
+:class:`~repro.fl.ledger.BitsLedger` bit-for-bit by replaying the xi
+trace against the static ``plan.round_bits()``
+(:meth:`~repro.fl.ledger.BitsLedger.replay_xi_trace`) — never by
+re-deriving wire costs from the trace buffers (DESIGN.md §3/§8).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compressors import Identity
+from repro.core.l2gd import (L2GDHyper, L2GDState, draw_xi, init_state,
+                             l2gd_step, make_hyper)
+
+__all__ = ["RolloutTrace", "rollout_l2gd", "rollout_l2gd_grid", "hyper_grid"]
+
+
+class RolloutTrace(NamedTuple):
+    """Device-side trace buffers of one scanned rollout.
+
+    ``losses``/``xis``/``branches`` have a leading steps axis (plus a
+    leading grid axis under :func:`rollout_l2gd_grid`); the counters are
+    scalars derived from the branch trace on device.  Wire bits are NOT
+    here by design: the ledger is reconstructed host-side from ``xis``
+    (see module docstring)."""
+
+    losses: jax.Array       # (K,) f32 mean client loss, pre-update params
+    xis: jax.Array          # (K,) int32 xi_k realization
+    branches: jax.Array     # (K,) int32 protocol branch (0/1/2)
+    n_local: jax.Array      # () int32  — branch-0 steps
+    n_agg_comm: jax.Array   # () int32  — branch-1 steps (fresh communication)
+    n_agg_cached: jax.Array  # () int32 — branch-2 steps (cached target)
+
+
+def _rollout_length(batches, batch_axis, xi_trace, steps) -> int:
+    lengths = {}
+    if steps is not None:
+        lengths["steps="] = int(steps)
+    if xi_trace is not None:
+        lengths["xi_trace"] = int(xi_trace.shape[0])
+    if batch_axis == 0:
+        leaves = jax.tree_util.tree_leaves(batches)
+        if leaves:
+            lengths["batches"] = int(leaves[0].shape[0])
+    if not lengths:
+        raise ValueError(
+            "rollout length is undetermined: pass steps=, a stacked "
+            "batches pytree (batch_axis=0) or an xi_trace")
+    if len(set(lengths.values())) != 1:
+        raise ValueError(f"inconsistent rollout lengths: {lengths}")
+    return next(iter(lengths.values()))
+
+
+def rollout_l2gd(key: jax.Array, state: L2GDState, hp: L2GDHyper, batches,
+                 xi_trace: Optional[jax.Array] = None, *,
+                 grad_fn: Callable, steps: Optional[int] = None,
+                 client_comp: Any = Identity(), master_comp: Any = Identity(),
+                 batch_axis: Optional[int] = 0, average_fn=None,
+                 unroll: int = 1):
+    """Run K rounds of Algorithm 1 inside one ``lax.scan``.
+
+    Args:
+      key: protocol PRNG key; split ONCE into (xi, noise) streams — see
+        the module-level determinism contract.
+      state: current :class:`L2GDState` (``init_state(params)`` for a
+        fresh run).  ``state.step`` is the global step counter that
+        indexes both RNG streams, so chunked callers just feed the
+        carried state back in with the SAME key.
+      hp: hypers; may carry array-valued ``eta``/``lam``/``p`` (built
+        via :func:`~repro.core.l2gd.make_hyper`).
+      batches: per-step batch data.  With ``batch_axis=0`` a pytree
+        whose leaves carry a leading (K, ...) steps axis, indexed inside
+        the scan; with ``batch_axis=None`` a single batch pytree reused
+        every step (no K-fold copy for constant-batch workloads).
+      xi_trace: optional (K,) int array forcing the protocol realization
+        (replaces the Bernoulli draws) — the replay/property-test hook.
+      grad_fn: per-client ``(params_i, batch_i) -> (loss_i, grads_i)``.
+      steps: rollout length; inferable from ``batches``/``xi_trace``.
+      client_comp / master_comp: uplink/downlink codecs or
+        :class:`~repro.core.codec.CompressionPlan`s (as in
+        :func:`~repro.core.l2gd.l2gd_step`).
+      average_fn: optional aggregation override, forwarded to the step.
+      unroll: ``lax.scan`` unroll factor.
+
+    Returns: ``(final_state, RolloutTrace)`` — everything stays on
+    device; a jitted rollout issues zero per-step host transfers
+    (regression-tested).
+    """
+    length = _rollout_length(batches, batch_axis, xi_trace, steps)
+    xi_key, noise_key = jax.random.split(key)
+
+    # pre-derive both streams for the whole window in two vectorized
+    # threefry passes (bit-identical to per-step fold_in: vmap of fold_in
+    # IS fold_in per element) — the scan body then carries no RNG graphs,
+    # which cuts trace/compile time and per-iteration overhead
+    ks = state.step + jnp.arange(length, dtype=jnp.int32)
+    if xi_trace is None:
+        xis_in = jax.vmap(lambda k: draw_xi(jax.random.fold_in(xi_key, k),
+                                            hp.p))(ks)
+    else:
+        xis_in = xi_trace.astype(jnp.int32)
+    subs = jax.vmap(lambda k: jax.random.fold_in(noise_key, k))(ks)
+
+    def body(st, xs):
+        i, xi, sub = xs
+        if batch_axis is None:
+            batch = batches
+        else:
+            batch = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, keepdims=False),
+                batches)
+        new_st, metrics = l2gd_step(st, batch, xi, sub, grad_fn, hp,
+                                    client_comp, master_comp,
+                                    average_fn=average_fn)
+        return new_st, (metrics["loss"], xi, metrics["branch"])
+
+    final, (losses, xis, branches) = jax.lax.scan(
+        body, state, (jnp.arange(length, dtype=jnp.int32), xis_in, subs),
+        unroll=unroll)
+    branches = branches.astype(jnp.int32)
+    trace = RolloutTrace(
+        losses=losses, xis=xis, branches=branches,
+        n_local=jnp.sum(branches == 0).astype(jnp.int32),
+        n_agg_comm=jnp.sum(branches == 1).astype(jnp.int32),
+        n_agg_cached=jnp.sum(branches == 2).astype(jnp.int32))
+    return final, trace
+
+
+def rollout_l2gd_grid(key: jax.Array, params_stacked, hp_grid: L2GDHyper,
+                      batches, xi_trace: Optional[jax.Array] = None, *,
+                      grad_fn: Callable, steps: Optional[int] = None,
+                      client_comp: Any = Identity(),
+                      master_comp: Any = Identity(),
+                      batch_axis: Optional[int] = 0, unroll: int = 1,
+                      jit: bool = True):
+    """Vmap a whole rollout over a hyper grid — ONE compiled dispatch.
+
+    ``hp_grid`` is an :class:`L2GDHyper` whose ``eta``/``lam``/``p`` are
+    same-shaped 1-D arrays of G cells (build with :func:`hyper_grid` or
+    :func:`~repro.core.l2gd.make_hyper`); every cell starts from the same
+    ``init_state(params_stacked)``, shares ``key`` (common random
+    numbers) and the same batches.  Returns ``(final_states, traces)``
+    with a leading G axis on every array.
+
+    Note ``vmap`` turns the protocol ``lax.switch`` into a select over
+    all three branches (cells disagree on the branch), so each cell pays
+    ~3 branch evaluations per step — still orders of magnitude cheaper
+    than |grid| x K host dispatches (``bench_fig3_sweep``).
+    """
+    state = init_state(params_stacked)
+    roll = functools.partial(
+        rollout_l2gd, grad_fn=grad_fn, steps=steps, client_comp=client_comp,
+        master_comp=master_comp, batch_axis=batch_axis, unroll=unroll)
+    fn = jax.vmap(lambda hp: roll(key, state, hp, batches, xi_trace))
+    if jit:
+        fn = jax.jit(fn)
+    return fn(hp_grid)
+
+
+def hyper_grid(ps, lams, eta, n: int):
+    """Flatten a cartesian (p, lambda) product into one array-valued
+    :class:`L2GDHyper` for :func:`rollout_l2gd_grid`.
+
+    ``eta`` is a scalar, an array broadcastable to the ``(|ps|, |lams|)``
+    meshgrid, or a callable ``(P, L) -> eta`` evaluated on it (e.g. the
+    Fig-3 stability rule ``lambda P, L: np.minimum(0.4, n * P / L)``).
+    Returns ``(hp_grid, grid_shape)``; reshape per-cell outputs with
+    ``out.reshape(grid_shape + out.shape[1:])``."""
+    P, L = np.meshgrid(np.asarray(ps, np.float32),
+                       np.asarray(lams, np.float32), indexing="ij")
+    E = eta(P, L) if callable(eta) else eta
+    E = np.broadcast_to(np.asarray(E, np.float32), P.shape)
+    hp = make_hyper(eta=jnp.asarray(E.ravel()), lam=jnp.asarray(L.ravel()),
+                    p=jnp.asarray(P.ravel()), n=n)
+    return hp, P.shape

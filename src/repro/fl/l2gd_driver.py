@@ -1,22 +1,36 @@
-"""Host-side protocol driver for compressed L2GD (Algorithm 1).
+"""Protocol driver for compressed L2GD (Algorithm 1) — scan-first.
 
-The driver owns the probabilistic protocol: it draws xi_k ~ Bernoulli(p) on
-the host (so the bits ledger sees exactly when a local->aggregation
-transition triggers communication), feeds the draw into the single jitted
-:func:`repro.core.l2gd.l2gd_step`, and records bits/n per the paper's
-accounting.  The jitted step itself is branch-static (lax.switch), so there
-is exactly one compilation regardless of the protocol realization.
+``run_l2gd`` is a thin chunked wrapper over the on-device scanned
+rollout engine (:func:`repro.core.rollout.rollout_l2gd`, DESIGN.md §8):
+each chunk is ONE ``lax.scan`` dispatch that draws xi_k ~ Bernoulli(p)
+on device and keeps every metric on device; the host only touches data
+at chunk boundaries, where it fetches the chunk's trace buffers, replays
+the xi trace into the :class:`~repro.fl.ledger.BitsLedger`
+(:meth:`~repro.fl.ledger.BitsLedger.replay_xi_trace`) and runs
+``eval_fn``.  The legacy per-step host loop is kept as
+``run_l2gd(mode="host")`` — the bit-exact reference the scan path is
+property-tested against (tests/test_rollout.py).
 
-Every wire-bits number the ledger records is read from the payload spec —
-``CompressionPlan.round_bits()``, i.e. ``jax.eval_shape(plan.encode,
-...).nbits`` — never re-derived here (DESIGN.md §3).  Pass ``plan=`` (an
-uplink :class:`~repro.core.codec.CompressionPlan`, or an
-(uplink, downlink) pair: downlink master compression is first-class, not
-accounting-only); plans default to auto transport over the compressors.
+Determinism contract (identical in both modes; see repro/core/rollout):
+``xi_key, noise_key = jax.random.split(key)``; step k draws
+``xi_k = draw_xi(fold_in(xi_key, k), p)`` and gives the step
+``fold_in(noise_key, k)`` for compressor randomness.  One key in, two
+derived streams — the xi realization is independent of the codecs, so
+two runs with the same key see the same protocol regardless of
+compression.  The legacy ``seed=`` kwarg (a separate
+``np.random.default_rng`` stream that left :func:`repro.core.l2gd.
+draw_xi` dead in the protocol path) is a deprecated shim that folds the
+seed into ``key``.
+
+Every wire-bits number the ledger records is read from the payload spec
+— ``CompressionPlan.round_bits()`` (DESIGN.md §3) — never re-derived
+here; the scan path reconstructs the ledger by replaying the xi trace
+against that same static number (DESIGN.md §8).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import warnings
 from typing import Callable, Optional
 
@@ -24,66 +38,35 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Compressor, Identity, L2GDHyper, init_state,
+from repro.core import (Compressor, Identity, L2GDHyper, draw_xi, init_state,
                         l2gd_step)
 from repro.core.codec import _UNSET, CompressionPlan, make_plan
+from repro.core.rollout import rollout_l2gd
 from repro.fl.ledger import BitsLedger
 
 __all__ = ["L2GDRun", "run_l2gd"]
+
+MODES = ("scan", "host")
+
+# default scan-chunk length when per-step batches must be stacked on
+# device (no eval_fn to set the boundary): bounds the stacked-batch
+# memory at O(chunk x batch) while keeping host round-trips rare
+_DEFAULT_BATCH_CHUNK = 512
 
 
 @dataclasses.dataclass
 class L2GDRun:
     state: object
     ledger: BitsLedger
-    losses: list                 # (step, mean client loss) at local steps
-    evals: list                  # (step, eval value) if eval_fn given
+    losses: list                 # (step, mean client loss) at EVERY step
+    evals: list                  # (steps completed, eval value) if eval_fn
     n_local: int = 0
     n_agg_comm: int = 0
     n_agg_cached: int = 0
+    xis: Optional[np.ndarray] = None   # realized xi trace (both modes)
 
 
-def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
-             batch_fn: Callable[[int], object], steps: int,
-             client_comp: Compressor = Identity(),
-             master_comp: Compressor = Identity(),
-             plan=None,
-             eval_fn: Optional[Callable] = None, eval_every: int = 50,
-             seed: int = 0, jit: bool = True,
-             packed_uplink=_UNSET) -> L2GDRun:
-    """Run Algorithm 1 for ``steps`` iterations.
-
-    batch_fn(step) -> per-client batch pytree (leading client axis n).
-    grad_fn(params_i, batch_i) -> (loss_i, grads_i).
-
-    ``plan`` selects the wire representation: a single uplink
-    :class:`CompressionPlan` (downlink defaults to ``master_comp``'s auto
-    plan) or an ``(uplink, downlink)`` pair; ``None`` builds auto plans
-    from ``client_comp`` / ``master_comp``.  The step compresses through
-    the SAME plans the ledger charges: per round the uplink costs
-    ``uplink_plan.round_bits()`` per client and the downlink
-    ``downlink_plan.round_bits()`` — both read from the payload spec
-    (DESIGN.md §3), e.g. ``transport="packed"`` charges the exact int8
-    codes + bucket norms the all_gather uplink would move.
-
-    ``packed_uplink=`` is a deprecated shim for
-    ``plan=make_plan(client_comp, one_client, transport="packed")`` and
-    now accepts ANY flat-engine codec (qsgd, natural).
-    """
-    state = init_state(params_stacked)
-    ledger = BitsLedger(hp.n)
-    run = L2GDRun(state, ledger, [], [])
-    rng = np.random.default_rng(seed)
-
-    # one client's model (no client axis) — what each plan measures
-    one_client = jax.tree.map(lambda a: a[0], params_stacked)
-    if packed_uplink is not _UNSET:
-        warnings.warn(
-            "run_l2gd(packed_uplink=) is deprecated; pass plan="
-            "make_plan(client_comp, one_client_params, transport='packed') "
-            "(repro.core.codec.make_plan)", DeprecationWarning, stacklevel=2)
-        if packed_uplink and plan is None:
-            plan = make_plan(client_comp, one_client, transport="packed")
+def _resolve_plans(client_comp, master_comp, plan, one_client):
     if plan is None:
         up_plan = make_plan(client_comp, one_client)
         down_plan = make_plan(master_comp, one_client)
@@ -99,33 +82,222 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
         up_plan = up_plan.bind(one_client)
     if down_plan.specs is None:
         down_plan = down_plan.bind(one_client)
+    return up_plan, down_plan
 
-    step_fn = lambda st, b, xi, k: l2gd_step(st, b, xi, k, grad_fn, hp,
-                                             up_plan, down_plan)
-    if jit:
-        step_fn = jax.jit(step_fn)
+
+def _constant_batches(batch_fn, steps):
+    """True iff batch_fn returns the SAME leaf buffers for every step
+    (the ``lambda k: (X, Y)`` idiom) — then the scan reuses one batch
+    instead of stacking chunk copies.  batch_fn must be deterministic:
+    the probe means step indices can be queried more than once."""
+    if steps < 2:
+        return True
+    l0 = jax.tree_util.tree_leaves(batch_fn(0))
+    l1 = jax.tree_util.tree_leaves(batch_fn(1))
+    return len(l0) == len(l1) and all(a is b for a, b in zip(l0, l1))
+
+
+def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
+             batch_fn: Callable[[int], object], steps: int,
+             client_comp: Compressor = Identity(),
+             master_comp: Compressor = Identity(),
+             plan=None,
+             eval_fn: Optional[Callable] = None, eval_every: int = 50,
+             seed=_UNSET, jit: bool = True,
+             packed_uplink=_UNSET, mode: str = "scan",
+             chunk: Optional[int] = None, xi_trace=None) -> L2GDRun:
+    """Run Algorithm 1 for ``steps`` iterations.
+
+    batch_fn(step) -> per-client batch pytree (leading client axis n);
+    must be deterministic per step index (the scan path may probe an
+    index twice).
+    grad_fn(params_i, batch_i) -> (loss_i, grads_i).
+
+    ``mode="scan"`` (default) executes the protocol in on-device
+    ``lax.scan`` chunks of ``chunk`` steps (default: ``eval_every`` when
+    ``eval_fn`` is given; else the whole run for a constant batch, or
+    512 when per-step batches must be stacked on device) — no per-step
+    host
+    round-trips; losses/xi are fetched per chunk and the ledger is
+    replayed from the xi trace.  ``eval_fn`` runs at chunk boundaries
+    that are multiples of ``eval_every`` (any explicit ``chunk`` should
+    divide ``eval_every`` to hit every eval point).  ``mode="host"`` is
+    the legacy per-step reference loop (one jitted dispatch + blocking
+    loss fetch per step);
+    ``jit=False`` only applies there.  ``xi_trace`` (optional int array
+    of length ``steps``) forces the protocol realization in either mode.
+
+    ``plan`` selects the wire representation: a single uplink
+    :class:`CompressionPlan` (downlink defaults to ``master_comp``'s auto
+    plan) or an ``(uplink, downlink)`` pair; ``None`` builds auto plans
+    from ``client_comp`` / ``master_comp``.  Per round the ledger charges
+    ``uplink_plan.round_bits()`` per client plus
+    ``downlink_plan.round_bits()`` — both read from the payload spec
+    (DESIGN.md §3).
+
+    Deprecated shims: ``packed_uplink=`` maps to
+    ``plan=make_plan(client_comp, one_client, transport="packed")``;
+    ``seed=`` predates the unified PRNG contract (module docstring) and
+    now folds into ``key``.
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; have {MODES}")
+    if seed is not _UNSET:
+        warnings.warn(
+            "run_l2gd(seed=) is deprecated: xi is drawn from `key` (split "
+            "once into xi/noise streams — see the determinism contract in "
+            "repro.fl.l2gd_driver); fold extra entropy into the key with "
+            "jax.random.fold_in(key, seed)", DeprecationWarning, stacklevel=2)
+        if seed is not None:
+            key = jax.random.fold_in(key, int(seed))
+
+    state = init_state(params_stacked)
+    ledger = BitsLedger(hp.n)
+    run = L2GDRun(state, ledger, [], [])
+    # normalize the hyper leaves to device arrays in BOTH modes: the step
+    # scalings (eta/(n(1-p)), eta*lam/(np)) are then computed on device in
+    # f32 on either path — a Python-float closure would constant-fold them
+    # in f64 and break scan-vs-host bit-exactness by one ulp
+    hp = jax.tree_util.tree_map(jnp.asarray, hp)
+
+    # one client's model (no client axis) — what each plan measures
+    one_client = jax.tree.map(lambda a: a[0], params_stacked)
+    if packed_uplink is not _UNSET:
+        warnings.warn(
+            "run_l2gd(packed_uplink=) is deprecated; pass plan="
+            "make_plan(client_comp, one_client_params, transport='packed') "
+            "(repro.core.codec.make_plan)", DeprecationWarning, stacklevel=2)
+        if packed_uplink and plan is None:
+            plan = make_plan(client_comp, one_client, transport="packed")
+    up_plan, down_plan = _resolve_plans(client_comp, master_comp, plan,
+                                        one_client)
 
     # wire bits for one client's message / one broadcast: the payload
     # spec is the single source of truth (no re-derivation here)
     up_bits = up_plan.round_bits()
     down_bits = down_plan.round_bits()
 
+    if xi_trace is not None:
+        xi_trace = np.asarray(xi_trace, np.int32)
+        if xi_trace.shape != (steps,):
+            raise ValueError(f"xi_trace must have shape ({steps},), "
+                             f"got {xi_trace.shape}")
+    if steps <= 0:
+        run.xis = np.zeros((0,), np.int32)
+        return run
+
+    if mode == "host":
+        _run_host(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
+                  down_plan, up_bits, down_bits, eval_fn, eval_every, jit,
+                  xi_trace)
+    else:
+        _run_scan(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
+                  down_plan, up_bits, down_bits, eval_fn, eval_every, chunk,
+                  xi_trace)
+    return run
+
+
+def _run_host(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
+              down_plan, up_bits, down_bits, eval_fn, eval_every, jit,
+              xi_trace):
+    """Legacy per-step reference loop: one dispatch + one blocking loss
+    fetch per step.  Kept bit-identical to the scan path (same RNG
+    derivation, same step function) as the property-test oracle."""
+    xi_key, noise_key = jax.random.split(key)
+    if xi_trace is None:
+        xis = np.asarray(jax.vmap(
+            lambda i: draw_xi(jax.random.fold_in(xi_key, i), hp.p))(
+                jnp.arange(steps, dtype=jnp.int32)), np.int32)
+    else:
+        xis = xi_trace
+
+    step_fn = lambda st, b, xi, k: l2gd_step(st, b, xi, k, grad_fn, hp,
+                                             up_plan, down_plan)
+    if jit:
+        step_fn = jax.jit(step_fn)
+
     xi_prev = 1  # Algorithm 1 input: xi_{-1} = 1
     for k in range(steps):
-        key, sub = jax.random.split(key)
-        xi = int(rng.random() < hp.p)
-        state, metrics = step_fn(state, batch_fn(k), jnp.asarray(xi, jnp.int32),
-                                 sub)
+        sub = jax.random.fold_in(noise_key, k)
+        xi = int(xis[k])
+        state, metrics = step_fn(state, batch_fn(k),
+                                 jnp.asarray(xi, jnp.int32), sub)
+        # the pre-update mean client loss exists on EVERY branch now —
+        # a high-p run no longer yields an empty trace
+        run.losses.append((k, float(metrics["loss"])))
         if xi == 0:
             run.n_local += 1
-            run.losses.append((k, float(metrics["loss"])))
         elif xi_prev == 0:
             run.n_agg_comm += 1
-            ledger.record_round(up_bits, down_bits, step=k)
+            run.ledger.record_round(up_bits, down_bits, step=k)
         else:
             run.n_agg_cached += 1
         xi_prev = xi
         if eval_fn is not None and (k + 1) % eval_every == 0:
-            run.evals.append((k, float(eval_fn(state.params))))
+            # k+1 steps have completed when this eval runs (the historic
+            # off-by-one recorded k)
+            run.evals.append((k + 1, float(eval_fn(state.params))))
     run.state = state
-    return run
+    run.xis = xis
+
+
+def _run_scan(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
+              down_plan, up_bits, down_bits, eval_fn, eval_every, chunk,
+              xi_trace):
+    """Chunked wrapper over the scanned rollout: the chunk boundary is
+    the only place the host touches device data (trace fetch, ledger
+    replay, eval_fn)."""
+    const = _constant_batches(batch_fn, steps)
+    if chunk is None:
+        if eval_fn is not None:
+            chunk = eval_every
+        elif const:
+            chunk = steps          # one batch reused: one dispatch total
+        else:
+            # per-step batches are STACKED on device for the chunk; bound
+            # the default so a long run stays O(chunk x batch) memory
+            chunk = min(steps, _DEFAULT_BATCH_CHUNK)
+    chunk = max(1, min(int(chunk), steps))
+
+    rolled = {}
+
+    def _roll(length):
+        if length not in rolled:
+            rolled[length] = jax.jit(functools.partial(
+                rollout_l2gd, grad_fn=grad_fn, steps=length,
+                client_comp=up_plan, master_comp=down_plan,
+                batch_axis=None if const else 0))
+        return rolled[length]
+
+    done = 0
+    xi_prev = 1  # Algorithm 1 input: xi_{-1} = 1
+    xis_all = []
+    while done < steps:
+        length = min(chunk, steps - done)
+        if const:
+            batches = batch_fn(done)
+        else:
+            batches = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[batch_fn(k) for k in range(done, done + length)])
+        forced = None if xi_trace is None else \
+            jnp.asarray(xi_trace[done:done + length])
+        state, trace = _roll(length)(key, state, hp, batches, forced)
+
+        # the chunk boundary: ONE fetch of the trace buffers
+        xis = np.asarray(trace.xis)
+        losses = np.asarray(trace.losses)
+        xis_all.append(xis)
+        run.losses.extend((done + i, float(losses[i]))
+                          for i in range(length))
+        run.n_local += int(np.sum(xis == 0))
+        prevs = np.concatenate(([xi_prev], xis[:-1]))
+        run.n_agg_comm += int(np.sum((xis == 1) & (prevs == 0)))
+        run.n_agg_cached += int(np.sum((xis == 1) & (prevs == 1)))
+        xi_prev = run.ledger.replay_xi_trace(
+            xis, up_bits, down_bits, xi_prev=xi_prev, start_step=done)
+        done += length
+        if eval_fn is not None and done % eval_every == 0:
+            run.evals.append((done, float(eval_fn(state.params))))
+    run.state = state
+    run.xis = np.concatenate(xis_all)

@@ -13,9 +13,13 @@ Every number recorded here is read from a payload spec —
 the model's shapes (DESIGN.md §3) — by the protocol drivers
 (fl/l2gd_driver.py, fl/fedavg.py); the ledger itself never derives a
 wire cost.  Communication only happens on local->aggregation
-transitions (xi_k = 1, xi_{k-1} = 0); the ledger is driven by the host
-protocol loop, which is the single source of truth for when a round
-happened.
+transitions (xi_k = 1, xi_{k-1} = 0).  The realized xi sequence is the
+single source of truth for when a round happened: the host loop records
+rounds as it draws, and the scanned rollout engine (DESIGN.md §8,
+repro/core/rollout.py) hands back its device-side xi trace, which
+:meth:`BitsLedger.replay_xi_trace` replays into the identical ledger —
+bit-for-bit, because both paths charge the same static
+``plan.round_bits()`` on the same transitions.
 """
 from __future__ import annotations
 
@@ -46,3 +50,23 @@ class BitsLedger:
             "step": step, "round": self.rounds,
             "bits_per_client": self.bits_per_client,
         })
+
+    def replay_xi_trace(self, xis, uplink_bits_one_client: float,
+                        downlink_bits: float, *, xi_prev: int = 1,
+                        start_step: int = 0) -> int:
+        """Reconstruct rounds from a realized xi trace (DESIGN.md §8).
+
+        A round is charged exactly on each local->aggregation transition
+        (xi_k = 1, xi_{k-1} = 0), with Algorithm 1's input xi_{-1} = 1
+        expressed by the default ``xi_prev``.  ``start_step`` offsets the
+        recorded step indices so chunked replays concatenate into the
+        same history a single replay (or the host loop) would produce.
+        Returns the trace's final xi — feed it back as ``xi_prev`` for
+        the next chunk.
+        """
+        for i, xi in enumerate(int(x) for x in xis):
+            if xi == 1 and xi_prev == 0:
+                self.record_round(uplink_bits_one_client, downlink_bits,
+                                  step=start_step + i)
+            xi_prev = xi
+        return xi_prev

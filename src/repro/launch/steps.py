@@ -28,8 +28,8 @@ from repro.models import (decode_step, forward, init_caches, init_params,
                           loss_fn)
 
 __all__ = ["input_specs", "state_specs", "cache_specs", "build_train_step",
-           "build_average_fn", "build_prefill_step", "build_serve_step",
-           "stacked_param_shapes"]
+           "build_rollout_fn", "build_average_fn", "build_prefill_step",
+           "build_serve_step", "stacked_param_shapes"]
 
 _I32 = jnp.int32
 
@@ -199,6 +199,42 @@ def build_train_step(cfg: ArchConfig, hp: L2GDHyper,
         return new_state, metrics
 
     return train_step
+
+
+def build_rollout_fn(cfg: ArchConfig, hp: L2GDHyper,
+                     client_comp: Compressor = Identity(),
+                     master_comp: Compressor = Identity(),
+                     average_fn=None, plans=None, length: int = 8,
+                     unroll: int = 1):
+    """Scanned multi-round train function (DESIGN.md §8): ``length``
+    rounds of Algorithm 1 inside ONE ``lax.scan``, drawing xi on device.
+
+    Same plan rules as :func:`build_train_step` (leafwise transports by
+    default — pjit-safe under model-axis sharding).  The returned
+    ``rollout(state, batches, key_data)`` takes batches with a leading
+    ``(length, ...)`` steps axis and returns ``(state, RolloutTrace)``;
+    the host replays ``trace.xis`` into the bits ledger
+    (:meth:`repro.fl.ledger.BitsLedger.replay_xi_trace`)."""
+    from repro.core.rollout import rollout_l2gd
+    if plans is None:
+        shapes = param_shapes(cfg)
+        plans = (make_plan(client_comp, shapes, transport="leafwise"),
+                 make_plan(master_comp, shapes, transport="leafwise"))
+    up_plan, down_plan = plans
+
+    def grad_fn(params_i, batch_i):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch_i), has_aux=True)(params_i)
+        return loss, grads
+
+    def rollout(state: L2GDState, batches, key_data: jax.Array):
+        key = jax.random.wrap_key_data(key_data)
+        return rollout_l2gd(key, state, hp, batches, grad_fn=grad_fn,
+                            steps=length, client_comp=up_plan,
+                            master_comp=down_plan, average_fn=average_fn,
+                            unroll=unroll)
+
+    return rollout
 
 
 def build_prefill_step(cfg: ArchConfig):

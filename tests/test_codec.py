@@ -152,7 +152,7 @@ def _run(comp, plan, steps=40):
     return run_l2gd(jax.random.PRNGKey(1), {"w": jnp.zeros((n, d))},
                     _grad_fn, hp, lambda k: batch, steps,
                     client_comp=comp, master_comp=comp,
-                    plan=(plan, plan), seed=2)
+                    plan=(plan, plan))
 
 
 def test_ledger_reads_payload_nbits_lockstep():
@@ -255,7 +255,7 @@ def test_run_l2gd_packed_uplink_shim():
     with pytest.warns(DeprecationWarning, match="make_plan"):
         r = run_l2gd(jax.random.PRNGKey(1), {"w": jnp.zeros((n, d))},
                      _grad_fn, hp, lambda k: batch, 30,
-                     client_comp=comp, master_comp=comp, seed=2,
+                     client_comp=comp, master_comp=comp,
                      packed_uplink=True)
     plan = make_plan(comp, {"w": jnp.zeros((d,))}, transport="packed")
     assert r.ledger.uplink_bits_per_client == \

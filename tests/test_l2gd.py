@@ -6,6 +6,7 @@ import pytest
 
 from repro.core import (Identity, L2GDHyper, aggregation_update, draw_xi,
                         init_state, l2gd_step, local_update, make_compressor)
+from repro.fl import run_l2gd
 
 
 def _quad_grad_fn(params, batch):
@@ -126,3 +127,58 @@ def test_draw_xi_distribution():
     keys = jax.random.split(jax.random.PRNGKey(0), 4000)
     draws = jax.vmap(lambda k: draw_xi(k, 0.3))(keys)
     assert abs(float(jnp.mean(draws)) - 0.3) < 0.03
+
+
+def test_loss_metric_on_every_branch():
+    """Bugfix pin: metrics['loss'] is the pre-update mean client loss on
+    ALL THREE branches — aggregation steps no longer report 0.0."""
+    hp = L2GDHyper(eta=0.5, lam=1.0, p=0.5, n=4)
+    st = init_state({"w": jnp.ones((4, 3))})
+    batch = jnp.zeros((4, 3))
+    expect = float(jnp.mean(jax.vmap(
+        lambda p, b: _quad_grad_fn({"w": p}, b)[0])(st.params["w"], batch)))
+    for xi, want_branch in ((1, 2), (0, 0), (1, 1)):
+        pre = float(jnp.mean(jax.vmap(
+            lambda p, b: _quad_grad_fn({"w": p}, b)[0])(st.params["w"],
+                                                        batch)))
+        st, m = l2gd_step(st, batch, jnp.asarray(xi, jnp.int32),
+                          jax.random.PRNGKey(xi), _quad_grad_fn, hp)
+        assert int(m["branch"]) == want_branch
+        assert float(m["loss"]) == pytest.approx(pre, rel=1e-6)
+    assert expect > 0.0
+
+
+def _driver_args():
+    batch = jax.random.normal(jax.random.PRNGKey(0), (4, 6))
+    return ({"w": jnp.zeros((4, 6))}, _quad_grad_fn,
+            L2GDHyper(eta=0.3, lam=1.0, p=0.9, n=4), lambda k: batch)
+
+
+@pytest.mark.parametrize("mode", ["scan", "host"])
+def test_high_p_run_has_full_loss_trace(mode):
+    """Bugfix pin: run.losses used to be populated only on xi=0 branches,
+    so a high-p run yielded a (near-)empty trace that downstream plotting
+    choked on.  Now: one entry per step, finite, in step order."""
+    params, grad_fn, hp, batch_fn = _driver_args()
+    r = run_l2gd(jax.random.PRNGKey(2), params, grad_fn, hp, batch_fn, 40,
+                 mode=mode)
+    assert [s for s, _ in r.losses] == list(range(40))
+    assert all(np.isfinite(l) for _, l in r.losses)
+    assert r.n_agg_comm + r.n_agg_cached > r.n_local  # p=0.9 realization
+
+
+@pytest.mark.parametrize("mode", ["scan", "host"])
+def test_eval_records_steps_completed(mode):
+    """Bugfix pin: the eval after step k+1 completed records k+1 (the
+    historic off-by-one appended k)."""
+    params, grad_fn, hp, batch_fn = _driver_args()
+    evald = []
+
+    def eval_fn(p):
+        evald.append(1)
+        return jnp.sum(p["w"])
+
+    r = run_l2gd(jax.random.PRNGKey(2), params, grad_fn, hp, batch_fn, 12,
+                 eval_fn=eval_fn, eval_every=5, mode=mode)
+    assert [k for k, _ in r.evals] == [5, 10]
+    assert len(evald) == 2

@@ -1,0 +1,300 @@
+"""Scanned rollout engine (DESIGN.md §8): scan-vs-host bit-exactness,
+ledger replay from the xi trace, the no-per-step-transfer regression, and
+the vmapped (p, lambda) grid."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep — deterministic stub fallback
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core import (Identity, L2GDHyper, init_state, make_compressor,
+                        make_hyper, rollout_l2gd, rollout_l2gd_grid,
+                        hyper_grid)
+from repro.fl import run_l2gd
+from repro.fl.ledger import BitsLedger
+
+N, D = 4, 12
+BATCH = jax.random.normal(jax.random.PRNGKey(7), (N, D))
+
+
+def _grad_fn(params, batch):
+    g = params["w"] - batch
+    return 0.5 * jnp.sum(g ** 2), {"w": g}
+
+
+def _params():
+    return {"w": jnp.zeros((N, D))}
+
+
+def _run(mode, steps, comp=Identity(), xi_trace=None, chunk=None, p=0.5,
+         key=jax.random.PRNGKey(1)):
+    hp = L2GDHyper(eta=0.3, lam=1.0, p=p, n=N)
+    return run_l2gd(key, _params(), _grad_fn, hp, lambda k: BATCH, steps,
+                    client_comp=comp, master_comp=comp, mode=mode,
+                    xi_trace=xi_trace, chunk=chunk)
+
+
+def _assert_runs_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.state.params["w"]),
+                                  np.asarray(b.state.params["w"]))
+    np.testing.assert_array_equal(np.asarray(a.state.cache["w"]),
+                                  np.asarray(b.state.cache["w"]))
+    assert int(a.state.xi_prev) == int(b.state.xi_prev)
+    assert (a.n_local, a.n_agg_comm, a.n_agg_cached) == \
+        (b.n_local, b.n_agg_comm, b.n_agg_cached)
+    assert a.ledger.bits_per_client == b.ledger.bits_per_client
+    assert a.ledger.history == b.ledger.history
+    np.testing.assert_array_equal(a.xis, b.xis)
+    assert [s for s, _ in a.losses] == [s for s, _ in b.losses]
+    np.testing.assert_array_equal(np.asarray([l for _, l in a.losses]),
+                                  np.asarray([l for _, l in b.losses]))
+
+
+def test_forced_xi_trace_scan_matches_host_bit_exact():
+    """The property at a handcrafted trace exercising the xi_{-1}=1 edge:
+    the run OPENS with consecutive aggregations, which must take the
+    cached branch (no round charged) before the first 0->1 transition."""
+    xi = np.array([1, 1, 0, 0, 1, 1, 0, 1, 0, 0, 1, 1, 1, 0], np.int32)
+    for name in ("identity", "natural", "qsgd"):
+        comp = make_compressor(name)
+        host = _run("host", len(xi), comp, xi_trace=xi)
+        scan = _run("scan", len(xi), comp, xi_trace=xi, chunk=5)
+        _assert_runs_equal(scan, host)
+        # the leading 1,1 is cached aggregation; first comm is step 4
+        assert host.n_agg_cached >= 2
+        assert host.ledger.history[0]["step"] == 4
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10 ** 6), st.floats(0.15, 0.85))
+def test_scan_matches_host_loop_property(seed, p):
+    """Property: for ANY forced xi realization the scanned rollout is
+    step-for-step bit-exact with the legacy host loop — params, cache,
+    counters and the replayed ledger (chunked, with a ragged tail)."""
+    rng = np.random.default_rng(seed)
+    steps = 18 + seed % 8
+    xi = (rng.random(steps) < p).astype(np.int32)
+    comp = make_compressor("natural")
+    host = _run("host", steps, comp, xi_trace=xi, p=p)
+    scan = _run("scan", steps, comp, xi_trace=xi, p=p, chunk=7)
+    _assert_runs_equal(scan, host)
+
+
+def test_scan_matches_host_random_xi():
+    """No forced trace: both modes derive the SAME xi stream from the key
+    (the unified PRNG contract — draw_xi is live in the protocol path)."""
+    for comp in (Identity(), make_compressor("natural")):
+        host = _run("host", 40, comp, p=0.3)
+        scan = _run("scan", 40, comp, p=0.3, chunk=16)
+        _assert_runs_equal(scan, host)
+        assert host.n_local + host.n_agg_comm + host.n_agg_cached == 40
+
+
+def test_xi_stream_independent_of_codec():
+    """Same key => same protocol realization for every codec (the old
+    np.default_rng(seed) side stream is gone)."""
+    runs = [_run("scan", 60, make_compressor(nm)) for nm in
+            ("identity", "natural", "qsgd")]
+    for r in runs[1:]:
+        np.testing.assert_array_equal(runs[0].xis, r.xis)
+        assert runs[0].ledger.rounds == r.ledger.rounds
+
+
+def test_seed_shim_warns_and_folds_into_key():
+    key = jax.random.PRNGKey(3)
+    with pytest.warns(DeprecationWarning, match="seed"):
+        legacy = run_l2gd(key, _params(), _grad_fn,
+                          L2GDHyper(eta=0.3, lam=1.0, p=0.5, n=N),
+                          lambda k: BATCH, 20, seed=7)
+    modern = run_l2gd(jax.random.fold_in(key, 7), _params(), _grad_fn,
+                      L2GDHyper(eta=0.3, lam=1.0, p=0.5, n=N),
+                      lambda k: BATCH, 20)
+    _assert_runs_equal(legacy, modern)
+
+
+# ---------------------------------------------------------------------------
+# no per-step host transfers (the historic float(metrics["loss"]) sync)
+# ---------------------------------------------------------------------------
+
+def _device_rollout(steps):
+    hp = make_hyper(eta=jnp.float32(0.3), lam=jnp.float32(1.0),
+                    p=jnp.float32(0.5), n=N)
+    roll = jax.jit(functools.partial(rollout_l2gd, grad_fn=_grad_fn,
+                                     steps=steps, batch_axis=None))
+    return roll, hp
+
+
+def test_scan_rollout_issues_no_per_step_transfers():
+    """Regression (ISSUE 3 satellite 1): a jitted K-step rollout runs
+    under jax.transfer_guard('disallow') — zero implicit host<->device
+    transfers for the whole scan; data is only fetched at chunk
+    boundaries (an explicit np.asarray, allowed by the guard)."""
+    roll, hp = _device_rollout(48)
+    key, st = jax.random.PRNGKey(0), init_state(_params())
+    jax.block_until_ready(roll(key, st, hp, BATCH, None))  # compile outside
+    with jax.transfer_guard("disallow"):
+        out = roll(key, st, hp, BATCH, None)
+        jax.block_until_ready(out)
+    final, trace = out
+    assert int(trace.n_local + trace.n_agg_comm + trace.n_agg_cached) == 48
+
+
+def test_host_loop_transfers_per_step():
+    """The pinned counterexample: mode='host' blocks on the loss every
+    step, so the same guard trips it."""
+    _run("host", 4)  # warm
+    with jax.transfer_guard("disallow"):
+        with pytest.raises(Exception, match="[Tt]ransfer"):
+            _run("host", 4)
+
+
+# ---------------------------------------------------------------------------
+# ledger replay from the xi trace
+# ---------------------------------------------------------------------------
+
+def test_ledger_replay_matches_incremental_recording():
+    xis = [1, 0, 1, 1, 0, 1, 0, 0, 1]
+    incr = BitsLedger(N)
+    prev = 1
+    for k, xi in enumerate(xis):
+        if xi == 1 and prev == 0:
+            incr.record_round(100.0, 25.0, step=k)
+        prev = xi
+    whole = BitsLedger(N)
+    assert whole.replay_xi_trace(xis, 100.0, 25.0) == xis[-1]
+    assert whole.history == incr.history
+    # chunked replay (carrying xi_prev across the boundary) is identical
+    chunked = BitsLedger(N)
+    mid = chunked.replay_xi_trace(xis[:4], 100.0, 25.0)
+    chunked.replay_xi_trace(xis[4:], 100.0, 25.0, xi_prev=mid, start_step=4)
+    assert chunked.history == incr.history
+    assert chunked.bits_per_client == incr.bits_per_client
+
+
+def test_device_counters_match_host_replay():
+    hp = make_hyper(eta=jnp.float32(0.3), lam=jnp.float32(1.0),
+                    p=jnp.float32(0.4), n=N)
+    roll = jax.jit(functools.partial(rollout_l2gd, grad_fn=_grad_fn,
+                                     steps=64, batch_axis=None))
+    _, trace = roll(jax.random.PRNGKey(5), init_state(_params()), hp,
+                    BATCH, None)
+    xis = np.asarray(trace.xis)
+    prevs = np.concatenate(([1], xis[:-1]))
+    assert int(trace.n_local) == int(np.sum(xis == 0))
+    assert int(trace.n_agg_comm) == int(np.sum((xis == 1) & (prevs == 0)))
+    assert int(trace.n_agg_cached) == int(np.sum((xis == 1) & (prevs == 1)))
+
+
+# ---------------------------------------------------------------------------
+# traceable hypers + the vmapped grid
+# ---------------------------------------------------------------------------
+
+def test_hyper_is_a_pytree_and_validates():
+    hp = L2GDHyper(eta=0.1, lam=1.0, p=0.3, n=5)
+    assert jax.tree_util.tree_leaves(hp) == [0.1, 1.0, 0.3]
+    with pytest.raises(ValueError, match="p must be"):
+        L2GDHyper(eta=0.1, lam=1.0, p=1.5, n=5)
+    with pytest.raises(ValueError, match="lambda"):
+        L2GDHyper(eta=0.1, lam=-1.0, p=0.5, n=5)
+    # array values skip the eager check; make_hyper validates elementwise
+    L2GDHyper(eta=0.1, lam=1.0, p=jnp.asarray(1.5), n=5)
+    with pytest.raises(ValueError, match="elementwise"):
+        make_hyper(eta=0.1, lam=1.0, p=np.array([0.3, 1.5]), n=5)
+    with pytest.raises(ValueError, match="lambda"):
+        make_hyper(eta=0.1, lam=np.array([-1.0]), p=0.5, n=5)
+    g = make_hyper(eta=np.array([0.1, 0.2]), lam=np.array([1.0, 2.0]),
+                   p=np.array([0.3, 0.6]), n=5)
+    assert g.n == 5
+
+
+def test_grid_matches_individual_rollouts():
+    """One vmapped dispatch == per-cell scans: identical xi streams
+    (common random numbers) and matching trajectories."""
+    etas, lams, ps = [0.2, 0.3, 0.4], [0.5, 1.0, 2.0], [0.3, 0.5, 0.7]
+    hp_grid = make_hyper(eta=jnp.asarray(etas), lam=jnp.asarray(lams),
+                         p=jnp.asarray(ps), n=N)
+    key = jax.random.PRNGKey(2)
+    finals, trace = rollout_l2gd_grid(key, _params(), hp_grid, BATCH,
+                                      batch_axis=None, steps=30,
+                                      grad_fn=_grad_fn)
+    assert finals.params["w"].shape == (3, N, D)
+    assert trace.xis.shape == (3, 30)
+    for g in range(3):
+        hp = L2GDHyper(eta=etas[g], lam=lams[g], p=ps[g], n=N)
+        st, tr = rollout_l2gd(key, init_state(_params()), hp, BATCH,
+                              grad_fn=_grad_fn, steps=30, batch_axis=None)
+        np.testing.assert_array_equal(np.asarray(trace.xis[g]),
+                                      np.asarray(tr.xis))
+        np.testing.assert_allclose(np.asarray(finals.params["w"][g]),
+                                   np.asarray(st.params["w"]),
+                                   rtol=1e-6, atol=1e-6)
+        assert int(trace.n_agg_comm[g]) == int(tr.n_agg_comm)
+
+
+def test_hyper_grid_helper_shapes_and_rule():
+    ps, lams = [0.1, 0.5], [1.0, 10.0, 100.0]
+    hp, shape = hyper_grid(ps, lams, lambda P, L: np.minimum(0.4, 5 * P / L),
+                           n=5)
+    assert shape == (2, 3)
+    assert hp.p.shape == hp.lam.shape == hp.eta.shape == (6,)
+    E = np.asarray(hp.eta).reshape(shape)
+    assert E[0, 2] == pytest.approx(5 * 0.1 / 100.0)
+    assert E[1, 0] == pytest.approx(0.4)
+
+
+def test_stacked_batches_rollout():
+    """batch_axis=0: per-step batches indexed inside the scan."""
+    steps = 10
+    stacked = jnp.stack([BATCH + k for k in range(steps)])
+    hp = L2GDHyper(eta=jnp.float32(0.1), lam=jnp.float32(1.0),
+                   p=jnp.float32(0.4), n=N)
+    st, tr = jax.jit(functools.partial(rollout_l2gd, grad_fn=_grad_fn))(
+        jax.random.PRNGKey(0), init_state(_params()), hp, stacked)
+    assert tr.losses.shape == (steps,)
+    # driver equivalence: batch_fn(k) returning fresh arrays -> stacked path
+    r = run_l2gd(jax.random.PRNGKey(0), _params(), _grad_fn, hp,
+                 lambda k: BATCH + k, steps)
+    np.testing.assert_array_equal(np.asarray(st.params["w"]),
+                                  np.asarray(r.state.params["w"]))
+
+
+def test_build_rollout_fn_reduced_lm():
+    """Launch-layer face of the engine: a reduced transformer runs a
+    4-round scanned rollout in one dispatch, finite losses throughout."""
+    import dataclasses
+    from repro.configs.base import get_config
+    from repro.launch.steps import build_rollout_fn
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(get_config("stablelm-1.6b").reduced(),
+                              vocab_size=32)
+    n, steps = 2, 4
+    keys = jax.random.split(jax.random.PRNGKey(0), n)
+    params = jax.vmap(lambda k: init_params(k, cfg))(keys)
+    hp = L2GDHyper(eta=0.05, lam=0.5, p=0.4, n=n)
+    roll = build_rollout_fn(cfg, hp, make_compressor("natural"),
+                            make_compressor("natural"), length=steps)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (steps, n, 2, 8), 0,
+                              cfg.vocab_size)
+    key_data = jax.random.key_data(jax.random.PRNGKey(2))
+    st, trace = jax.jit(roll)(init_state(params), {"tokens": toks}, key_data)
+    assert trace.losses.shape == (steps,)
+    assert bool(jnp.all(jnp.isfinite(trace.losses)))
+    assert int(trace.n_local + trace.n_agg_comm + trace.n_agg_cached) == steps
+    for leaf in jax.tree_util.tree_leaves(st.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_rollout_length_validation():
+    hp = L2GDHyper(eta=0.1, lam=1.0, p=0.4, n=N)
+    with pytest.raises(ValueError, match="undetermined"):
+        rollout_l2gd(jax.random.PRNGKey(0), init_state(_params()), hp, BATCH,
+                     grad_fn=_grad_fn, batch_axis=None)
+    with pytest.raises(ValueError, match="inconsistent"):
+        rollout_l2gd(jax.random.PRNGKey(0), init_state(_params()), hp,
+                     jnp.stack([BATCH, BATCH]), grad_fn=_grad_fn, steps=3)
