@@ -6,6 +6,7 @@
   fig7   -- FedAvg recovery at eta*lam/(np) = 1         [paper Figs. 7-8]
   kernels -- Pallas kernel microbench                   [system]
   rollout -- scanned rollout engine vs host loop        [system, DESIGN §8]
+  sharded -- client-sharded rollout scaling             [system, DESIGN §9]
   roofline -- dry-run roofline table                    [deliverable g]
 
 Prints ``name,us_per_call,derived`` CSV lines; ``--json PATH``
@@ -21,8 +22,8 @@ import traceback
 
 from benchmarks import (bench_fig3_sweep, bench_fig4_compressors,
                         bench_fig7_fedavg_recovery, bench_kernels,
-                        bench_roofline, bench_rollout, bench_table2_bits,
-                        common)
+                        bench_roofline, bench_rollout,
+                        bench_sharded_rollout, bench_table2_bits, common)
 
 BENCHES = {
     "fig3": bench_fig3_sweep.run,
@@ -31,6 +32,7 @@ BENCHES = {
     "fig7": bench_fig7_fedavg_recovery.run,
     "kernels": bench_kernels.run,
     "rollout": bench_rollout.run,
+    "sharded": bench_sharded_rollout.run,
     "roofline": bench_roofline.run,
 }
 

@@ -16,12 +16,15 @@ from repro.core.l2gd import (
     aggregation_update, draw_xi,
 )
 from repro.core.rollout import (
-    RolloutTrace, rollout_l2gd, rollout_l2gd_grid, hyper_grid,
+    RolloutTrace, rollout_l2gd, rollout_l2gd_grid, rollout_l2gd_sharded,
+    hyper_grid, participant_count, draw_participation_mask,
+    participation_masks, sharded_state_specs,
 )
 from repro.core.aggregation import (
     compressed_average, compressed_average_wire, stochastic_round_cast,
     make_sharded_average, make_payload_sharded_average,
-    make_packed_sharded_average,
+    make_packed_sharded_average, make_client_sharded_average,
+    masked_client_mean,
 )
 from repro.core.flatbuf import (
     FlatLayout, flat_tree_apply, pack_tree, unpack_tree, pack_tree_qsgd,
@@ -38,11 +41,13 @@ __all__ = [
     "RandK", "TopK", "make_compressor", "tree_apply", "tree_wire_bits",
     "joint_omega", "L2GDHyper", "L2GDState", "init_state", "make_hyper",
     "l2gd_step", "RolloutTrace", "rollout_l2gd", "rollout_l2gd_grid",
-    "hyper_grid",
+    "rollout_l2gd_sharded", "hyper_grid", "participant_count",
+    "draw_participation_mask", "participation_masks", "sharded_state_specs",
     "local_update", "aggregation_update", "draw_xi", "compressed_average",
     "compressed_average_wire", "stochastic_round_cast",
     "make_sharded_average", "make_payload_sharded_average",
-    "make_packed_sharded_average", "theory", "codec",
+    "make_packed_sharded_average", "make_client_sharded_average",
+    "masked_client_mean", "theory", "codec",
     "flatbuf", "FlatLayout", "flat_tree_apply", "pack_tree", "unpack_tree",
     "pack_tree_qsgd", "pack_tree_natural", "unpack_tree_qsgd",
     "packed_wire_bits", "payload_wire_bits",

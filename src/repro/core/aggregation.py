@@ -41,7 +41,8 @@ from repro.core.compressors import QSGD
 
 __all__ = ["compressed_average", "compressed_average_wire",
            "stochastic_round_cast", "make_sharded_average",
-           "make_payload_sharded_average", "make_packed_sharded_average"]
+           "make_payload_sharded_average", "make_packed_sharded_average",
+           "make_client_sharded_average", "masked_client_mean"]
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs):
@@ -59,8 +60,24 @@ def _shard_map(f, *, mesh, in_specs, out_specs):
                      check_rep=False)
 
 
+def masked_client_mean(tree_stacked, mask):
+    """Mean over the leading client axis restricted to ``mask``'s
+    participants: ``sum_i m_i x_i / sum_i m_i``.  ``mask=None`` is the
+    plain ``jnp.mean`` (full participation) — the two spellings are kept
+    distinct so the historic path stays bit-identical."""
+    if mask is None:
+        return jax.tree.map(lambda a: jnp.mean(a, axis=0), tree_stacked)
+    denom = jnp.sum(mask.astype(jnp.float32))
+
+    def one(a):
+        mb = mask.reshape((a.shape[0],) + (1,) * (a.ndim - 1)).astype(a.dtype)
+        return jnp.sum(a * mb, axis=0) / denom.astype(a.dtype)
+
+    return jax.tree.map(one, tree_stacked)
+
+
 def compressed_average(key: jax.Array, params_stacked,
-                       client_comp, master_comp, *, flat=_UNSET):
+                       client_comp, master_comp, *, mask=None, flat=_UNSET):
     """Return t = C_M( (1/n) sum_j C_j(x_j) ) for stacked client params.
 
     ``params_stacked`` is a pytree whose leaves carry a leading client axis
@@ -70,9 +87,13 @@ def compressed_average(key: jax.Array, params_stacked,
     ``client_comp`` / ``master_comp`` are :class:`CompressionPlan`s (or
     plain Compressors, coerced with auto transport: flat-buffer engine
     where supported — one fused launch per client — leafwise otherwise).
-    The ``flat=`` keyword is a deprecated shim; in the pjit runtime pass
-    leafwise plans instead (raveling model-axis-sharded leaves forces a
-    rematerialization, repro.core.flatbuf's sharding note).
+    ``mask`` (optional (n,) 0/1 array) restricts the average to a sampled
+    participant subset — the partial-participation round of DESIGN.md §9:
+    ``ybar = sum_i m_i C_i(x_i) / |S|`` (non-participants send nothing;
+    the ledger charges only sampled uplinks).  The ``flat=`` keyword is a
+    deprecated shim; in the pjit runtime pass leafwise plans instead
+    (raveling model-axis-sharded leaves forces a rematerialization,
+    repro.core.flatbuf's sharding note).
     """
     transport = None
     if flat is not _UNSET:
@@ -84,7 +105,7 @@ def compressed_average(key: jax.Array, params_stacked,
     client_keys = jax.random.split(k_clients, n)
     compressed = jax.vmap(lambda k, p: up_plan.apply(k, p))(
         client_keys, params_stacked)
-    ybar = jax.tree.map(lambda a: jnp.mean(a, axis=0), compressed)
+    ybar = masked_client_mean(compressed, mask)
     return down_plan.apply(k_master, ybar)
 
 
@@ -207,19 +228,73 @@ def make_payload_sharded_average(mesh, client_axes: tuple,
 
     def uplink(k_up, local_mean, axes):
         payload = uplink_plan.encode(k_up, local_mean)
-        gathered = payload
-        for ax in axes:                       # wire arrays on the wire
-            gathered = jax.tree_util.tree_map(
-                lambda a: jax.lax.all_gather(a, ax), gathered)
-        # collapse the gathered client axes to one leading shard axis
-        gathered = jax.tree_util.tree_map(
-            lambda orig, g: g.reshape((-1,) + orig.shape), payload, gathered)
-        deq = jax.vmap(uplink_plan.decode)(gathered)
+        deq = _gather_decode(uplink_plan, payload, axes, batched=False)
         return jax.tree_util.tree_map(
             lambda a: jnp.mean(a.astype(jnp.float32), axis=0), deq)
 
     return _make_shard_map_average(mesh, client_axes, param_pspecs_stacked,
                                    master_comp, uplink)
+
+
+def _gather_decode(plan, payload, axes, *, batched: bool):
+    """All_gather a (possibly client-batched) wire Payload over the client
+    mesh axes and decode every gathered message locally — the shared
+    collective of :func:`make_payload_sharded_average` (one payload per
+    shard, ``batched=False``) and :func:`make_client_sharded_average`
+    (one payload per local client, ``batched=True``).  The collective
+    moves the plan's packed wire arrays, never dequantized fp32."""
+    gathered = payload
+    for ax in axes:                           # wire arrays on the wire
+        gathered = jax.tree_util.tree_map(
+            lambda a: jax.lax.all_gather(a, ax), gathered)
+    # collapse the gathered mesh axes (and any local client axis) into
+    # one leading axis ordered by global client index
+    tail = (lambda o: o.shape[1:]) if batched else (lambda o: o.shape)
+    gathered = jax.tree_util.tree_map(
+        lambda orig, g: g.reshape((-1,) + tail(orig)), payload, gathered)
+    return jax.vmap(plan.decode)(gathered)
+
+
+def make_client_sharded_average(axis_name: str, n_clients: int,
+                                client_comp, master_comp):
+    """Per-shard ``average_fn`` for a protocol step that is ALREADY
+    running inside a shard_map whose leading client axis is sharded over
+    mesh axis ``axis_name`` — the aggregation collective of the
+    client-sharded rollout engine (repro.core.rollout.
+    rollout_l2gd_sharded, DESIGN.md §9).
+
+    Paper-faithful per-client semantics, distributed: every shard (1)
+    derives the SAME global per-client key schedule ``split(k_clients,
+    n)`` as :func:`compressed_average` and takes its own slice, (2)
+    encodes each LOCAL client's model to its wire payload, (3)
+    ``all_gather``s the payload arrays over ``axis_name`` — the
+    collective carries the quantized codes — and (4) decodes all n
+    messages locally and averages (optionally masked to the round's
+    sampled participant subset, ``mask``).  The downlink C_M runs
+    shard-wise with the shared ``k_master``, bitwise identical to a
+    master broadcast.
+
+    On a 1-shard mesh with full participation this is bit-exact with
+    :func:`compressed_average` (same key schedule, encode→decode ==
+    apply, identical mean reduction) — the equivalence the sharded
+    rollout's headline test pins.
+    """
+    up_plan = as_plan(client_comp)
+    down_plan = as_plan(master_comp)
+
+    def average_fn(key, params_local, mask=None):
+        m = jax.tree_util.tree_leaves(params_local)[0].shape[0]
+        k_clients, k_master = jax.random.split(key)
+        # global key schedule, replicated; this shard's slice by index
+        ckd = jax.random.key_data(jax.random.split(k_clients, n_clients))
+        local_keys = jax.random.wrap_key_data(jax.lax.dynamic_slice_in_dim(
+            ckd, jax.lax.axis_index(axis_name) * m, m))
+        payload = jax.vmap(up_plan.encode)(local_keys, params_local)
+        deq = _gather_decode(up_plan, payload, (axis_name,), batched=True)
+        ybar = masked_client_mean(deq, mask)
+        return down_plan.apply(k_master, ybar)
+
+    return average_fn
 
 
 def make_packed_sharded_average(mesh, client_axes: tuple,

@@ -119,12 +119,25 @@ def local_update(params_stacked, grads_stacked, hp: L2GDHyper):
                         grads_stacked)
 
 
-def aggregation_update(params_stacked, target, hp: L2GDHyper):
-    """x_i <- x_i - (eta lam)/(n p) (x_i - t); t broadcast over the client axis."""
+def aggregation_update(params_stacked, target, hp: L2GDHyper, mask=None):
+    """x_i <- x_i - (eta lam)/(n p) (x_i - t); t broadcast over the client axis.
+
+    ``mask`` (optional (n,) 0/1 array over the leading client axis) gates
+    the update per client: non-participants of a partial-participation
+    aggregation round keep their params (DESIGN.md §9).  ``mask=None`` is
+    full participation and bit-identical to the historic path.
+    """
     c = hp.agg_scale
-    return jax.tree.map(
-        lambda x, t: x - jnp.asarray(c, x.dtype) * (x - t[None].astype(x.dtype)),
-        params_stacked, target)
+    if mask is None:
+        return jax.tree.map(
+            lambda x, t: x - jnp.asarray(c, x.dtype) * (x - t[None].astype(x.dtype)),
+            params_stacked, target)
+
+    def one(x, t):
+        mb = mask.reshape((x.shape[0],) + (1,) * (x.ndim - 1)).astype(x.dtype)
+        return x - jnp.asarray(c, x.dtype) * mb * (x - t[None].astype(x.dtype))
+
+    return jax.tree.map(one, params_stacked, target)
 
 
 def draw_xi(key: jax.Array, p: float) -> jax.Array:
@@ -135,7 +148,8 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
               grad_fn: Callable, hp: L2GDHyper,
               client_comp: Compressor = Identity(),
               master_comp: Compressor = Identity(),
-              average_fn: Callable = None, flat=_UNSET):
+              average_fn: Callable = None, flat=_UNSET, *,
+              participation_mask=None, axis_name: str = None):
     """One step of Algorithm 1.
 
     Args:
@@ -155,8 +169,24 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
       average_fn: optional override of the compressed-average realization,
              ``(key, params_stacked) -> target`` — used by the beyond-paper
              wire-compressed shard_map aggregation (see repro.launch.steps).
+             When ``participation_mask`` is given it is called with a third
+             positional argument, the GLOBAL (n,) participation mask.
       flat:  DEPRECATED shim — pass CompressionPlans instead (the pjit
              runtime pins ``transport="leafwise"`` on its plans).
+      participation_mask: optional GLOBAL (n,) 0/1 participant mask for
+             this step's aggregation round (DESIGN.md §9): only masked-in
+             clients contribute to the average and only they move in the
+             aggregation update.  Local gradient steps are unaffected
+             (local work costs no communication).  ``None`` = full
+             participation, bit-identical to the historic step.
+      axis_name: client mesh axis when the step executes INSIDE a
+             shard_map whose leading client axis is sharded (the
+             client-sharded rollout engine, repro.core.rollout.
+             rollout_l2gd_sharded): loss means become psum reductions over
+             the axis and the participation mask is sliced to this
+             shard's clients by ``lax.axis_index``.  Requires an
+             ``average_fn`` that performs the cross-shard collective
+             (repro.core.aggregation.make_client_sharded_average).
 
     Returns: (new_state, metrics dict).  Metrics include the mean client
     loss — evaluated at the PRE-update params on every branch, so the
@@ -170,11 +200,33 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
         transport = _legacy_transport(flat, "l2gd_step(..., flat=)")
     up_plan = as_plan(client_comp, transport)
     down_plan = as_plan(master_comp, transport)
+    if axis_name is not None and average_fn is None:
+        raise ValueError(
+            "l2gd_step(axis_name=...) runs inside a client-sharded "
+            "shard_map and needs an average_fn that spans the sharded "
+            "axis (repro.core.aggregation.make_client_sharded_average); "
+            "the default compressed_average would only see this shard's "
+            "clients")
     branch = jnp.where(xi_k == 0, 0, jnp.where(state.xi_prev == 0, 1, 2))
+
+    def _reduce_losses(losses):
+        # unsharded: the historic jnp.mean (bit-exactness contract with
+        # the host loop); sharded: each shard sums its local clients and
+        # the psum'd total is divided by the GLOBAL n
+        if axis_name is None:
+            return jnp.mean(losses).astype(jnp.float32)
+        total = jax.lax.psum(jnp.sum(losses), axis_name)
+        return (total / hp.n).astype(jnp.float32)
+
+    local_mask = participation_mask
+    if participation_mask is not None and axis_name is not None:
+        m = jax.tree_util.tree_leaves(state.params)[0].shape[0]
+        local_mask = jax.lax.dynamic_slice_in_dim(
+            participation_mask, jax.lax.axis_index(axis_name) * m, m)
 
     def _mean_loss(st):
         losses, _ = jax.vmap(grad_fn)(st.params, batch)
-        return jnp.mean(losses).astype(jnp.float32)
+        return _reduce_losses(losses)
 
     def branch_local(op):
         st, k = op
@@ -182,22 +234,28 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
         new_params = local_update(st.params, grads, hp)
         return (L2GDState(new_params, st.cache, jnp.asarray(0, jnp.int32),
                           st.step + 1),
-                jnp.mean(losses).astype(jnp.float32))
+                _reduce_losses(losses))
 
     def branch_agg_fresh(op):
         st, k = op
         if average_fn is not None:
-            target = average_fn(k, st.params)
+            if participation_mask is None:
+                target = average_fn(k, st.params)
+            else:
+                target = average_fn(k, st.params, participation_mask)
         else:
-            target = compressed_average(k, st.params, up_plan, down_plan)
-        new_params = aggregation_update(st.params, target, hp)
+            target = compressed_average(k, st.params, up_plan, down_plan,
+                                        mask=participation_mask)
+        new_params = aggregation_update(st.params, target, hp,
+                                        mask=local_mask)
         return (L2GDState(new_params, target, jnp.asarray(1, jnp.int32),
                           st.step + 1),
                 _mean_loss(st))
 
     def branch_agg_cached(op):
         st, k = op
-        new_params = aggregation_update(st.params, st.cache, hp)
+        new_params = aggregation_update(st.params, st.cache, hp,
+                                        mask=local_mask)
         return (L2GDState(new_params, st.cache, jnp.asarray(1, jnp.int32),
                           st.step + 1),
                 _mean_loss(st))

@@ -41,7 +41,8 @@ import numpy as np
 from repro.core import (Compressor, Identity, L2GDHyper, draw_xi, init_state,
                         l2gd_step)
 from repro.core.codec import _UNSET, CompressionPlan, make_plan
-from repro.core.rollout import rollout_l2gd
+from repro.core.rollout import (participant_count, participation_masks,
+                                rollout_l2gd)
 from repro.fl.ledger import BitsLedger
 
 __all__ = ["L2GDRun", "run_l2gd"]
@@ -105,7 +106,8 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
              eval_fn: Optional[Callable] = None, eval_every: int = 50,
              seed=_UNSET, jit: bool = True,
              packed_uplink=_UNSET, mode: str = "scan",
-             chunk: Optional[int] = None, xi_trace=None) -> L2GDRun:
+             chunk: Optional[int] = None, xi_trace=None,
+             participation: Optional[float] = None) -> L2GDRun:
     """Run Algorithm 1 for ``steps`` iterations.
 
     batch_fn(step) -> per-client batch pytree (leading client axis n);
@@ -126,6 +128,15 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
     loss fetch per step);
     ``jit=False`` only applies there.  ``xi_trace`` (optional int array
     of length ``steps``) forces the protocol realization in either mode.
+
+    ``participation`` (optional fraction f ∈ (0, 1]) enables per-round
+    client sampling (DESIGN.md §9): every aggregation step masks the
+    average and the update to a fixed-size subset of
+    ``participant_count(n, f)`` participants drawn from the xi-derived
+    stream — identical masks in both modes — and the ledger charges each
+    communicated round at s/n of a full round
+    (:meth:`~repro.fl.ledger.BitsLedger.replay_xi_trace`'s
+    ``participation=`` rule).  ``None`` is full participation.
 
     ``plan`` selects the wire representation: a single uplink
     :class:`CompressionPlan` (downlink defaults to ``master_comp``'s auto
@@ -189,20 +200,21 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
     if mode == "host":
         _run_host(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
                   down_plan, up_bits, down_bits, eval_fn, eval_every, jit,
-                  xi_trace)
+                  xi_trace, participation)
     else:
         _run_scan(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
                   down_plan, up_bits, down_bits, eval_fn, eval_every, chunk,
-                  xi_trace)
+                  xi_trace, participation)
     return run
 
 
 def _run_host(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
               down_plan, up_bits, down_bits, eval_fn, eval_every, jit,
-              xi_trace):
+              xi_trace, participation):
     """Legacy per-step reference loop: one dispatch + one blocking loss
     fetch per step.  Kept bit-identical to the scan path (same RNG
-    derivation, same step function) as the property-test oracle."""
+    derivation, same step function, same participation masks) as the
+    property-test oracle."""
     xi_key, noise_key = jax.random.split(key)
     if xi_trace is None:
         xis = np.asarray(jax.vmap(
@@ -211,8 +223,18 @@ def _run_host(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
     else:
         xis = xi_trace
 
-    step_fn = lambda st, b, xi, k: l2gd_step(st, b, xi, k, grad_fn, hp,
-                                             up_plan, down_plan)
+    n = int(hp.n)
+    masks, scale = None, 1.0
+    if participation is not None:
+        s = participant_count(n, participation)
+        scale = s / n
+        if s < n:  # same pre-derivation as the scan path — identical masks
+            masks = participation_masks(
+                xi_key, jnp.arange(steps, dtype=jnp.int32), n, s)
+
+    step_fn = lambda st, b, xi, k, m: l2gd_step(st, b, xi, k, grad_fn, hp,
+                                                up_plan, down_plan,
+                                                participation_mask=m)
     if jit:
         step_fn = jax.jit(step_fn)
 
@@ -221,7 +243,8 @@ def _run_host(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
         sub = jax.random.fold_in(noise_key, k)
         xi = int(xis[k])
         state, metrics = step_fn(state, batch_fn(k),
-                                 jnp.asarray(xi, jnp.int32), sub)
+                                 jnp.asarray(xi, jnp.int32), sub,
+                                 None if masks is None else masks[k])
         # the pre-update mean client loss exists on EVERY branch now —
         # a high-p run no longer yields an empty trace
         run.losses.append((k, float(metrics["loss"])))
@@ -229,7 +252,8 @@ def _run_host(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
             run.n_local += 1
         elif xi_prev == 0:
             run.n_agg_comm += 1
-            run.ledger.record_round(up_bits, down_bits, step=k)
+            run.ledger.record_round(scale * up_bits, scale * down_bits,
+                                    step=k)
         else:
             run.n_agg_cached += 1
         xi_prev = xi
@@ -243,7 +267,7 @@ def _run_host(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
 
 def _run_scan(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
               down_plan, up_bits, down_bits, eval_fn, eval_every, chunk,
-              xi_trace):
+              xi_trace, participation):
     """Chunked wrapper over the scanned rollout: the chunk boundary is
     the only place the host touches device data (trace fetch, ledger
     replay, eval_fn)."""
@@ -266,7 +290,8 @@ def _run_scan(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
             rolled[length] = jax.jit(functools.partial(
                 rollout_l2gd, grad_fn=grad_fn, steps=length,
                 client_comp=up_plan, master_comp=down_plan,
-                batch_axis=None if const else 0))
+                batch_axis=None if const else 0,
+                participation=participation))
         return rolled[length]
 
     done = 0
@@ -295,7 +320,8 @@ def _run_scan(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
         run.n_agg_comm += int(np.sum((xis == 1) & (prevs == 0)))
         run.n_agg_cached += int(np.sum((xis == 1) & (prevs == 1)))
         xi_prev = run.ledger.replay_xi_trace(
-            xis, up_bits, down_bits, xi_prev=xi_prev, start_step=done)
+            xis, up_bits, down_bits, xi_prev=xi_prev, start_step=done,
+            participation=participation)
         done += length
         if eval_fn is not None and done % eval_every == 0:
             run.evals.append((done, float(eval_fn(state.params))))

@@ -20,6 +20,20 @@ repro/core/rollout.py) hands back its device-side xi trace, which
 :meth:`BitsLedger.replay_xi_trace` replays into the identical ledger —
 bit-for-bit, because both paths charge the same static
 ``plan.round_bits()`` on the same transitions.
+
+Partial participation (DESIGN.md §9): when each aggregation round
+samples a fixed-size subset S of s = ``participant_count(n, f)``
+clients, only the s sampled uplinks are sent and only the s
+participants receive the broadcast, so a round costs s/n of a full
+round per client on BOTH directions:
+
+  * uplink:   sum_{i in S} nbits / n = (s/n) * uplink payload bits
+  * downlink: s * nbits / n         = (s/n) * downlink payload bits
+
+The subset size is static (repro.core.rollout.participant_count — the
+same count the device mask sampler draws), so the replayed ledger still
+never sees the masks: the xi trace says WHEN a round happened, the
+static (s/n) * round_bits says HOW MUCH it cost.
 """
 from __future__ import annotations
 
@@ -53,7 +67,8 @@ class BitsLedger:
 
     def replay_xi_trace(self, xis, uplink_bits_one_client: float,
                         downlink_bits: float, *, xi_prev: int = 1,
-                        start_step: int = 0) -> int:
+                        start_step: int = 0,
+                        participation: float | None = None) -> int:
         """Reconstruct rounds from a realized xi trace (DESIGN.md §8).
 
         A round is charged exactly on each local->aggregation transition
@@ -61,12 +76,22 @@ class BitsLedger:
         expressed by the default ``xi_prev``.  ``start_step`` offsets the
         recorded step indices so chunked replays concatenate into the
         same history a single replay (or the host loop) would produce.
-        Returns the trace's final xi — feed it back as ``xi_prev`` for
-        the next chunk.
+        ``participation`` (optional fraction f) charges each sampled
+        round at s/n of a full round on both directions, where s =
+        ``participant_count(n_clients, f)`` is the same static subset
+        size the device mask sampler draws (module docstring, DESIGN.md
+        §9); ``None``/1.0 is full participation.  Returns the trace's
+        final xi — feed it back as ``xi_prev`` for the next chunk.
         """
+        scale = 1.0
+        if participation is not None:
+            from repro.core.rollout import participant_count
+            scale = participant_count(self.n_clients,
+                                      participation) / self.n_clients
         for i, xi in enumerate(int(x) for x in xis):
             if xi == 1 and xi_prev == 0:
-                self.record_round(uplink_bits_one_client, downlink_bits,
+                self.record_round(scale * uplink_bits_one_client,
+                                  scale * downlink_bits,
                                   step=start_step + i)
             xi_prev = xi
         return xi_prev

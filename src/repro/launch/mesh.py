@@ -8,6 +8,13 @@ Single pod: (data=16, model=16) = 256 chips (TPU v5e-256-class).
 Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the FL client axis is
 (pod, data) = 32 clients, so the aggregation collective spans the
 inter-pod links — exactly the regime the paper's compression targets.
+
+Client-sharded rollout (DESIGN.md §9): :func:`make_client_mesh` builds a
+1-D mesh over a dedicated ``clients`` axis — the layout of
+``repro.core.rollout.rollout_l2gd_sharded``, where each device holds
+n/n_devices whole personalized models (no model parallelism) and the
+aggregation branch's payload all_gather is the only cross-device
+traffic.
 """
 from __future__ import annotations
 
@@ -18,8 +25,8 @@ try:
 except ImportError:  # older jax: no explicit-sharding axis types
     AxisType = None
 
-__all__ = ["make_compat_mesh", "make_production_mesh", "client_axes",
-           "n_clients_of"]
+__all__ = ["make_compat_mesh", "make_production_mesh", "make_client_mesh",
+           "client_axes", "n_clients_of"]
 
 
 def make_compat_mesh(shape, axes, devices):
@@ -43,8 +50,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_compat_mesh(shape, axes, jax.devices()[:n])
 
 
+def make_client_mesh(n_shards: int = None):
+    """1-D mesh over the dedicated ``clients`` axis (DESIGN.md §9) for
+    the client-sharded rollout engine; defaults to every visible device.
+    Force N host devices for CPU scaling runs with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    jax import; see benchmarks/bench_sharded_rollout.py)."""
+    devices = jax.devices()
+    n = len(devices) if n_shards is None else int(n_shards)
+    return make_compat_mesh((n,), ("clients",), devices[:n])
+
+
 def client_axes(mesh) -> tuple:
     """Mesh axes that together form the FL client axis."""
+    if "clients" in mesh.axis_names:
+        return ("clients",)
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 

@@ -23,6 +23,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 __all__ = ["param_pspecs", "batch_pspec", "cache_pspecs", "tree_shardings",
+           "client_sharded_shardings", "client_sharded_batch_shardings",
            "MODEL_AXIS"]
 
 MODEL_AXIS = "model"
@@ -181,3 +182,25 @@ def cache_pspecs(caches_shapes, model_size: int, *, batch_axis: Optional[str],
 def tree_shardings(mesh, pspec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def client_sharded_shardings(mesh, state, axis: str = "clients"):
+    """NamedShardings placing an :class:`~repro.core.l2gd.L2GDState` on a
+    client mesh (DESIGN.md §9 layout): ``params`` sharded on the leading
+    client axis, ``cache`` + protocol scalars replicated.  Use with
+    ``jax.device_put`` before ``repro.core.rollout.rollout_l2gd_sharded``
+    so the whole-rollout dispatch starts from device-resident shards."""
+    from repro.core.rollout import sharded_state_specs
+    return tree_shardings(mesh, sharded_state_specs(state, axis))
+
+
+def client_sharded_batch_shardings(mesh, batches, axis: str = "clients",
+                                   batch_axis=0):
+    """NamedShardings for a rollout's batch pytree on a client mesh: the
+    client axis (axis 0, or axis 1 after the leading steps axis when
+    ``batch_axis=0``) sharded, everything else replicated."""
+    if batch_axis is None:
+        spec = jax.tree.map(lambda a: P(axis), batches)
+    else:
+        spec = jax.tree.map(lambda a: P(None, axis), batches)
+    return tree_shardings(mesh, spec)

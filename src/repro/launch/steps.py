@@ -28,8 +28,8 @@ from repro.models import (decode_step, forward, init_caches, init_params,
                           loss_fn)
 
 __all__ = ["input_specs", "state_specs", "cache_specs", "build_train_step",
-           "build_rollout_fn", "build_average_fn", "build_prefill_step",
-           "build_serve_step", "stacked_param_shapes"]
+           "build_rollout_fn", "build_sharded_rollout_fn", "build_average_fn",
+           "build_prefill_step", "build_serve_step", "stacked_param_shapes"]
 
 _I32 = jnp.int32
 
@@ -233,6 +233,52 @@ def build_rollout_fn(cfg: ArchConfig, hp: L2GDHyper,
                             steps=length, client_comp=up_plan,
                             master_comp=down_plan, average_fn=average_fn,
                             unroll=unroll)
+
+    return rollout
+
+
+def build_sharded_rollout_fn(cfg: ArchConfig, hp: L2GDHyper, *, mesh,
+                             client_comp: Compressor = Identity(),
+                             master_comp: Compressor = Identity(),
+                             participation: Optional[float] = None,
+                             length: int = 8, unroll: int = 1,
+                             axis_name: str = "clients"):
+    """Client-sharded multi-round train function (DESIGN.md §9): the
+    :func:`build_rollout_fn` scan running inside one shard_map over
+    ``mesh``'s ``axis_name`` axis (repro.launch.mesh.make_client_mesh) —
+    each device holds hp.n/n_devices whole personalized models, the
+    aggregation branch all_gathers wire payloads, and ``participation``
+    enables per-round client sampling.
+
+    The returned ``rollout(state, batches, key_data)`` matches
+    :func:`build_rollout_fn`'s contract; place ``state``/``batches``
+    with ``repro.launch.sharding.client_sharded_shardings`` /
+    ``client_sharded_batch_shardings`` first to avoid a re-layout at
+    dispatch.  The ledger replay is
+    ``BitsLedger.replay_xi_trace(trace.xis, ...,
+    participation=participation)``.
+
+    Plans are pinned to ``transport="leafwise"``: each model is whole on
+    its device (no model-axis sharding), and the leafwise payload keeps
+    the all_gather free of the flat engine's cross-leaf ravel."""
+    from repro.core.rollout import rollout_l2gd_sharded
+    shapes = param_shapes(cfg)
+    up_plan = make_plan(client_comp, shapes, transport="leafwise")
+    down_plan = make_plan(master_comp, shapes, transport="leafwise")
+
+    def grad_fn(params_i, batch_i):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch_i), has_aux=True)(params_i)
+        return loss, grads
+
+    def rollout(state: L2GDState, batches, key_data: jax.Array):
+        key = jax.random.wrap_key_data(key_data)
+        return rollout_l2gd_sharded(key, state, hp, batches, mesh=mesh,
+                                    grad_fn=grad_fn, steps=length,
+                                    client_comp=up_plan,
+                                    master_comp=down_plan,
+                                    participation=participation,
+                                    unroll=unroll, axis_name=axis_name)
 
     return rollout
 

@@ -1,5 +1,51 @@
+"""Shared test fixtures.
+
+The tiny quadratic FL problem — per-client loss f_i(w) = 0.5||w - a_i||^2
+over a stacked client axis — used to be re-declared in test_rollout.py,
+test_l2gd.py and test_codec.py; the single copy lives here (plain
+helpers, importable with ``from conftest import ...`` exactly like the
+existing ``from test_layouts import _mesh_1x1`` idiom, plus a
+``quad_problem`` fixture bundling one standard instance).
+"""
+import types
+
+import jax
+import jax.numpy as jnp
 import pytest
+
+#: default client count / model dim of the standard instance
+N_CLIENTS, DIM = 4, 12
+
+
+def quad_grad_fn(params, batch):
+    """Per-client ``(params_i, a_i) -> (loss_i, grads_i)`` of the
+    quadratic f_i(w) = 0.5 ||w - a_i||^2 (closed-form optimum makes
+    convergence and parity assertions exact)."""
+    g = params["w"] - batch
+    return 0.5 * jnp.sum(g ** 2), {"w": g}
+
+
+def quad_batch(n: int = N_CLIENTS, d: int = DIM, seed: int = 7):
+    """The stacked per-client targets a_i (doubles as the batch pytree)."""
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+
+
+def zero_params(n: int = N_CLIENTS, d: int = DIM):
+    """Stacked all-zero client params {"w": (n, d)}."""
+    return {"w": jnp.zeros((n, d))}
+
+
+@pytest.fixture
+def quad_problem():
+    """The standard (n=4, d=12) instance as a namespace: ``.n``, ``.d``,
+    ``.batch``, ``.grad_fn``, ``.params()``."""
+    return types.SimpleNamespace(
+        n=N_CLIENTS, d=DIM, batch=quad_batch(), grad_fn=quad_grad_fn,
+        params=zero_params)
 
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running test")
+    config.addinivalue_line(
+        "markers", "multidevice: needs >= 2 jax devices (force host "
+        "devices with XLA_FLAGS=--xla_force_host_platform_device_count=2)")

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import quad_grad_fn as _grad_fn
 from repro.core import (L2GDHyper, QSGD, flatbuf, make_compressor,
                         make_plan, tree_apply, tree_wire_bits)
 from repro.core.codec import (CompressionPlan, NaturalPayload, QSGDPayload,
@@ -139,11 +140,6 @@ def test_payload_carries_layout_and_survives_tree_map():
 # --------------------------------------------------------------------------
 # ledger reads the payload spec (acceptance: perturb spec -> ledger moves)
 # --------------------------------------------------------------------------
-
-def _grad_fn(params, batch):
-    g = params["w"] - batch
-    return 0.5 * jnp.sum(g ** 2), {"w": g}
-
 
 def _run(comp, plan, steps=40):
     n, d = 4, 60

@@ -3,6 +3,7 @@ error-feedback with biased compressors and compressed local gradients."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import Identity, L2GDHyper, aggregation_update, local_update, \
     make_compressor
@@ -90,3 +91,88 @@ def test_compress_grads_unbiased_and_converges():
     outs = jax.vmap(lambda k: compress_grads(k, grads, comp)["w"])(keys)
     err = float(jnp.max(jnp.abs(jnp.mean(outs, 0) - grads["w"])))
     assert err < 0.05
+
+
+# ---------------------------------------------------------------------------
+# edge cases (ISSUE 4 satellite): the EF telescoping identity and
+# compress_grads unbiasedness/independence
+# ---------------------------------------------------------------------------
+
+def test_ef_telescoping_transmitted_sums():
+    """The EF recursion e_{t+1} = (x_t + e_t) - C(x_t + e_t) telescopes:
+    sum_t C(x_t + e_t) = sum_t x_t - e_T exactly (e_0 = 0), for ANY
+    compressor — so the time-averaged transmitted direction tracks the
+    time-averaged input up to e_T / T, which must vanish because the
+    residual stays bounded instead of accumulating."""
+    n, d, T = 3, 32, 40
+    base = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    for name, kw in (("topk", {"fraction": 0.25}), ("natural", {})):
+        comp = make_compressor(name, **kw)
+        mem = init_ef_memory({"w": base})
+        key = jax.random.PRNGKey(1)
+        sum_q = jnp.zeros((n, d))
+        sum_x = jnp.zeros((n, d))
+        res_norms = []
+        for t in range(T):
+            x_t = {"w": base * jnp.cos(0.1 * t) + 0.05 * t}
+            key, sub = jax.random.split(key)
+            corrected = x_t["w"] + mem.residual["w"]
+            _, mem = ef_average(sub, x_t, mem, comp, Identity())
+            sum_q = sum_q + (corrected - mem.residual["w"])  # transmitted
+            sum_x = sum_x + x_t["w"]
+            res_norms.append(float(jnp.linalg.norm(mem.residual["w"])))
+        # exact telescoping identity: sum q = sum x - e_T
+        np.testing.assert_allclose(np.asarray(sum_q),
+                                   np.asarray(sum_x - mem.residual["w"]),
+                                   rtol=1e-5, atol=1e-4)
+        # the residual is bounded (no accumulation), so (sum_q-sum_x)/T -> 0
+        assert res_norms[-1] < 3.0 * max(res_norms[: T // 2])
+        gap = float(jnp.linalg.norm((sum_q - sum_x) / T))
+        assert gap == pytest.approx(res_norms[-1] / T, rel=1e-4)
+        assert gap < 0.25 * float(jnp.linalg.norm(sum_x / T))
+
+
+def test_ef_residual_mean_zero_under_unbiased_compressor():
+    """One EF step with an UNBIASED compressor has a zero-mean residual:
+    E[e_1] = x - E[C(x)] = 0 — over 1k draws the telescoped bias term
+    vanishes (the 'sums to zero' half of the satellite; a biased top-k
+    residual has a systematic component instead)."""
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (2, 48))}
+    mem = init_ef_memory(params)
+    comp = make_compressor("natural")
+    keys = jax.random.split(jax.random.PRNGKey(1), 1000)
+    res = jax.vmap(
+        lambda k: ef_average(k, params, mem, comp, Identity())[1]
+        .residual["w"])(keys)
+    scale = float(jnp.max(jnp.abs(params["w"])))
+    assert float(jnp.max(jnp.abs(jnp.mean(res, 0)))) < 0.05 * scale
+    # ...while a single draw's residual is NOT zero (the compressor is
+    # lossy per-realization; only the expectation vanishes)
+    assert float(jnp.max(jnp.abs(res[0]))) > 1e-3
+
+
+def test_compress_grads_unbiased_qsgd_1k_draws():
+    """compress_grads unbiasedness over 1k draws for the bucketed QSGD
+    codec (the satellite's second codec after natural)."""
+    n, d = 4, 16
+    A = {"w": jax.random.normal(jax.random.PRNGKey(0), (n, d))}
+    grads = _quad_grad({"w": jnp.ones((n, d))}, A)
+    comp = make_compressor("qsgd")
+    keys = jax.random.split(jax.random.PRNGKey(2), 1000)
+    outs = jax.vmap(lambda k: compress_grads(k, grads, comp)["w"])(keys)
+    err = float(jnp.max(jnp.abs(jnp.mean(outs, 0) - grads["w"])))
+    assert err < 0.05
+
+
+def test_compress_grads_independent_keys_per_client():
+    """Clients with IDENTICAL gradients draw different compression noise
+    (Assumption 1: independent C_i) — and Identity passes through
+    bit-exactly regardless."""
+    g = jnp.ones((8,)) * 1.7
+    grads = {"w": jnp.stack([g, g])}
+    out = compress_grads(jax.random.PRNGKey(0), grads,
+                         make_compressor("natural"))["w"]
+    assert not np.array_equal(np.asarray(out[0]), np.asarray(out[1]))
+    ident = compress_grads(jax.random.PRNGKey(0), grads, Identity())
+    np.testing.assert_array_equal(np.asarray(ident["w"]),
+                                  np.asarray(grads["w"]))

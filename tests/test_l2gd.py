@@ -4,14 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import quad_grad_fn as _quad_grad_fn
 from repro.core import (Identity, L2GDHyper, aggregation_update, draw_xi,
                         init_state, l2gd_step, local_update, make_compressor)
 from repro.fl import run_l2gd
-
-
-def _quad_grad_fn(params, batch):
-    g = params["w"] - batch
-    return 0.5 * jnp.sum(g ** 2), {"w": g}
 
 
 def _run(hp, comp, steps=4000, seed=0, n=8, d=16, tail=1000):

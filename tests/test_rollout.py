@@ -12,23 +12,17 @@ try:
 except ModuleNotFoundError:  # optional dep — deterministic stub fallback
     from _hypothesis_stub import given, settings, strategies as st
 
+from conftest import DIM as D, N_CLIENTS as N, quad_batch, quad_grad_fn, \
+    zero_params
 from repro.core import (Identity, L2GDHyper, init_state, make_compressor,
                         make_hyper, rollout_l2gd, rollout_l2gd_grid,
                         hyper_grid)
 from repro.fl import run_l2gd
 from repro.fl.ledger import BitsLedger
 
-N, D = 4, 12
-BATCH = jax.random.normal(jax.random.PRNGKey(7), (N, D))
-
-
-def _grad_fn(params, batch):
-    g = params["w"] - batch
-    return 0.5 * jnp.sum(g ** 2), {"w": g}
-
-
-def _params():
-    return {"w": jnp.zeros((N, D))}
+BATCH = quad_batch()
+_grad_fn = quad_grad_fn
+_params = zero_params
 
 
 def _run(mode, steps, comp=Identity(), xi_trace=None, chunk=None, p=0.5,

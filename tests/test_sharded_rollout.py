@@ -1,0 +1,366 @@
+"""Client-sharded rollout engine (DESIGN.md §9).
+
+The headline property: on a 1-device mesh at full participation the
+sharded scan is BIT-EXACT with the stacked scan (``rollout_l2gd``) and
+the legacy host loop — forced xi traces included — and at sampled
+participation it stays bit-exact with the stacked masked path.  Plus:
+the fixed-size mask sampler, the sampled-round ledger rule
+(``replay_xi_trace(participation=...)`` vs a hand-counted reference),
+masked-average/update semantics, the launch-layer face, and the
+2-forced-host-device smoke (``XLA_FLAGS=
+--xla_force_host_platform_device_count=2``; replicated outputs may
+differ from the stacked path by reduction-order ulps, so multi-device
+assertions are allclose + exact xi streams).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep — deterministic stub fallback
+    from _hypothesis_stub import given, settings, strategies as st
+
+from conftest import DIM as D, N_CLIENTS as N, quad_batch, quad_grad_fn, \
+    zero_params
+from repro.core import (Identity, aggregation_update, compressed_average,
+                        draw_participation_mask, init_state, make_compressor,
+                        make_hyper, make_plan, participant_count,
+                        participation_masks, rollout_l2gd,
+                        rollout_l2gd_sharded, sharded_state_specs)
+from repro.fl import run_l2gd
+from repro.fl.ledger import BitsLedger
+from repro.launch.mesh import client_axes, make_client_mesh, n_clients_of
+
+BATCH = quad_batch()
+multidevice = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=2")
+
+
+def _hp(p=0.5):
+    return make_hyper(eta=0.3, lam=1.0, p=p, n=N)
+
+
+def _sharded(mesh, steps, comp, xi_trace=None, participation=None, p=0.5,
+             key=jax.random.PRNGKey(1)):
+    return rollout_l2gd_sharded(
+        key, init_state(zero_params()), _hp(p), BATCH,
+        None if xi_trace is None else jnp.asarray(xi_trace), mesh=mesh,
+        grad_fn=quad_grad_fn, steps=steps, client_comp=comp,
+        master_comp=comp, participation=participation, batch_axis=None)
+
+
+def _stacked(steps, comp, xi_trace=None, participation=None, p=0.5,
+             key=jax.random.PRNGKey(1)):
+    return rollout_l2gd(
+        key, init_state(zero_params()), _hp(p), BATCH,
+        None if xi_trace is None else jnp.asarray(xi_trace),
+        grad_fn=quad_grad_fn, steps=steps, client_comp=comp,
+        master_comp=comp, participation=participation, batch_axis=None)
+
+
+def _assert_rollouts_equal(a, b, exact=True):
+    (st_a, tr_a), (st_b, tr_b) = a, b
+    cmp = np.testing.assert_array_equal if exact else functools.partial(
+        np.testing.assert_allclose, rtol=1e-6, atol=1e-6)
+    cmp(np.asarray(st_a.params["w"]), np.asarray(st_b.params["w"]))
+    cmp(np.asarray(st_a.cache["w"]), np.asarray(st_b.cache["w"]))
+    assert int(st_a.xi_prev) == int(st_b.xi_prev)
+    assert int(st_a.step) == int(st_b.step)
+    np.testing.assert_array_equal(np.asarray(tr_a.xis), np.asarray(tr_b.xis))
+    np.testing.assert_array_equal(np.asarray(tr_a.branches),
+                                  np.asarray(tr_b.branches))
+    cmp(np.asarray(tr_a.losses), np.asarray(tr_b.losses))
+    assert int(tr_a.n_agg_comm) == int(tr_b.n_agg_comm)
+    assert int(tr_a.n_local) == int(tr_b.n_local)
+    assert int(tr_a.n_agg_cached) == int(tr_b.n_agg_cached)
+
+
+# ---------------------------------------------------------------------------
+# headline: sharded (1 device, participation=1.0) == stacked == host loop
+# ---------------------------------------------------------------------------
+
+def test_sharded_matches_stacked_and_host_bit_exact():
+    """Forced xi trace exercising the xi_{-1}=1 edge (opens with cached
+    aggregations), per codec: the sharded scan at participation=1.0 on a
+    1-device mesh is bit-exact with rollout_l2gd AND the legacy host
+    loop; the ledger replayed from its xi trace equals the host ledger."""
+    xi = np.array([1, 1, 0, 0, 1, 1, 0, 1, 0, 0, 1, 1, 1, 0], np.int32)
+    mesh = make_client_mesh(1)
+    for name in ("identity", "natural", "qsgd"):
+        comp = Identity() if name == "identity" else make_compressor(name)
+        sh = _sharded(mesh, len(xi), comp, xi_trace=xi, participation=1.0)
+        stk = _stacked(len(xi), comp, xi_trace=xi)
+        _assert_rollouts_equal(sh, stk)
+
+        host = run_l2gd(jax.random.PRNGKey(1), zero_params(), quad_grad_fn,
+                        _hp(), lambda k: BATCH, len(xi), client_comp=comp,
+                        master_comp=comp, mode="host", xi_trace=xi)
+        st_sh, tr_sh = sh
+        np.testing.assert_array_equal(np.asarray(st_sh.params["w"]),
+                                      np.asarray(host.state.params["w"]))
+        np.testing.assert_array_equal(
+            np.asarray(tr_sh.losses),
+            np.asarray([l for _, l in host.losses]))
+        plan = make_plan(comp, {"w": jnp.zeros((D,))})
+        led = BitsLedger(N)
+        led.replay_xi_trace(np.asarray(tr_sh.xis), plan.round_bits(),
+                            plan.round_bits())
+        assert led.history == host.ledger.history
+        assert led.bits_per_client == host.ledger.bits_per_client
+
+
+def test_sharded_matches_stacked_with_participation_bit_exact():
+    """Sampled participation on 1 device: the sharded masked collective
+    (payload all_gather + masked mean) is bit-exact with the stacked
+    masked path for any fraction — same mask stream, same reductions."""
+    mesh = make_client_mesh(1)
+    comp = make_compressor("natural")
+    for part in (0.5, 0.25):
+        sh = _sharded(mesh, 24, comp, participation=part)
+        stk = _stacked(24, comp, participation=part)
+        _assert_rollouts_equal(sh, stk)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10 ** 6), st.floats(0.2, 0.8))
+def test_sharded_matches_stacked_property(seed, p):
+    """Property: ANY forced xi realization + sampled participation —
+    sharded (1 device) == stacked, bit for bit."""
+    rng = np.random.default_rng(seed)
+    steps = 14 + seed % 6
+    xi = (rng.random(steps) < p).astype(np.int32)
+    mesh = make_client_mesh(1)
+    comp = make_compressor("qsgd")
+    part = [0.5, 0.75, 1.0][seed % 3]
+    sh = _sharded(mesh, steps, comp, xi_trace=xi, participation=part, p=p)
+    stk = _stacked(steps, comp, xi_trace=xi, participation=part, p=p)
+    _assert_rollouts_equal(sh, stk)
+
+
+# ---------------------------------------------------------------------------
+# participation sampling
+# ---------------------------------------------------------------------------
+
+def test_participant_count_rounding_and_validation():
+    assert participant_count(4, 1.0) == 4
+    assert participant_count(4, 0.5) == 2
+    assert participant_count(10, 0.26) == 3
+    assert participant_count(4, 0.01) == 1          # clamped to >= 1
+    with pytest.raises(ValueError, match="participation"):
+        participant_count(4, 0.0)
+    with pytest.raises(ValueError, match="participation"):
+        participant_count(4, 1.5)
+
+
+def test_participation_masks_fixed_size_and_chunk_invariant():
+    """Every mask has EXACTLY s participants; the stream is a function
+    of (key, global step) alone, so a chunked window reproduces the
+    suffix of the full window (the same invariance the xi stream has)."""
+    xi_key = jax.random.PRNGKey(3)
+    ks = jnp.arange(12, dtype=jnp.int32)
+    masks = np.asarray(participation_masks(xi_key, ks, 8, 3))
+    assert masks.shape == (12, 8)
+    np.testing.assert_array_equal(masks.sum(1), np.full(12, 3.0))
+    # chunk invariance: window starting at global step 5
+    tail = np.asarray(participation_masks(
+        xi_key, jnp.arange(5, 12, dtype=jnp.int32), 8, 3))
+    np.testing.assert_array_equal(tail, masks[5:])
+    # not all rounds sample the same subset
+    assert len({tuple(m) for m in masks}) > 1
+    # s >= n short-circuits to all-ones
+    np.testing.assert_array_equal(
+        np.asarray(draw_participation_mask(xi_key, 4, 4)), np.ones(4))
+
+
+def test_masked_average_and_update_semantics():
+    """compressed_average(mask=) averages ONLY the participants; the
+    masked aggregation_update moves ONLY the participants."""
+    params = {"w": jnp.asarray([[1.0, 1.0], [3.0, 3.0],
+                                [5.0, 5.0], [7.0, 7.0]])}
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    t = compressed_average(jax.random.PRNGKey(0), params, Identity(),
+                           Identity(), mask=mask)
+    np.testing.assert_allclose(np.asarray(t["w"]), [3.0, 3.0])  # mean(1,5)
+    hp = make_hyper(eta=1.0, lam=2.0, p=0.5, n=4)   # agg_scale == 1
+    out = aggregation_update(params, t, hp, mask=mask)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               [[3.0, 3.0], [3.0, 3.0],
+                                [3.0, 3.0], [7.0, 7.0]])
+
+
+# ---------------------------------------------------------------------------
+# sampled-round ledger rule
+# ---------------------------------------------------------------------------
+
+def test_ledger_replay_participation_vs_hand_counted():
+    """replay_xi_trace(participation=f) vs a reference hand-counted from
+    first principles: rounds at the 0->1 transitions only, each charged
+    (s/n) * bits on BOTH directions."""
+    xis = [1, 1, 0, 0, 1, 0, 1, 1, 0]
+    up, down = 400.0, 100.0
+    n, f = 4, 0.5
+    s = participant_count(n, f)             # = 2
+    # hand count: xi_{-1}=1, so transitions land at steps 4 and 6
+    hand = BitsLedger(n)
+    hand.record_round(up * s / n, down * s / n, step=4)
+    hand.record_round(up * s / n, down * s / n, step=6)
+
+    led = BitsLedger(n)
+    assert led.replay_xi_trace(xis, up, down, participation=f) == xis[-1]
+    assert led.rounds == 2
+    assert led.history == hand.history
+    assert led.uplink_bits_per_client == 2 * up * s / n == 400.0
+    assert led.downlink_bits_per_client == 2 * down * s / n == 100.0
+    # participation=None / 1.0 charge full rounds (historic behaviour)
+    full = BitsLedger(n)
+    full.replay_xi_trace(xis, up, down)
+    one = BitsLedger(n)
+    one.replay_xi_trace(xis, up, down, participation=1.0)
+    assert full.history == one.history
+    assert full.uplink_bits_per_client == 2 * up
+
+
+def test_driver_participation_modes_bit_exact():
+    """run_l2gd(participation=) draws identical masks in both modes and
+    charges the scaled rounds — scan (chunked) vs host, bit for bit."""
+    runs = {}
+    for m in ("scan", "host"):
+        runs[m] = run_l2gd(jax.random.PRNGKey(2), zero_params(),
+                           quad_grad_fn, _hp(), lambda k: BATCH, 30,
+                           client_comp=make_compressor("natural"),
+                           master_comp=make_compressor("natural"),
+                           mode=m, chunk=11, participation=0.5)
+    a, b = runs["scan"], runs["host"]
+    np.testing.assert_array_equal(np.asarray(a.state.params["w"]),
+                                  np.asarray(b.state.params["w"]))
+    np.testing.assert_array_equal(a.xis, b.xis)
+    assert a.ledger.history == b.ledger.history
+    # every round charged at s/n = 1/2 of the full payload bits
+    plan = make_plan(make_compressor("natural"), {"w": jnp.zeros((D,))})
+    assert a.ledger.rounds > 0
+    assert a.ledger.uplink_bits_per_client == pytest.approx(
+        a.ledger.rounds * plan.round_bits() / 2)
+
+
+# ---------------------------------------------------------------------------
+# layout + validation + launch-layer face
+# ---------------------------------------------------------------------------
+
+def test_sharded_state_specs_layout():
+    from jax.sharding import PartitionSpec as P
+    specs = sharded_state_specs(init_state(zero_params()))
+    assert specs.params["w"] == P("clients")
+    assert specs.cache["w"] == P()
+    assert specs.xi_prev == P() and specs.step == P()
+
+
+def test_client_mesh_axes():
+    mesh = make_client_mesh(1)
+    assert client_axes(mesh) == ("clients",)
+    assert n_clients_of(mesh) == 1
+
+
+def test_sharded_rollout_validation():
+    mesh = make_client_mesh(1)
+    hp3 = make_hyper(eta=0.3, lam=1.0, p=0.5, n=3)
+    with pytest.raises(ValueError, match="!= hp.n"):
+        rollout_l2gd_sharded(jax.random.PRNGKey(0),
+                             init_state(zero_params()), hp3, BATCH,
+                             mesh=mesh, grad_fn=quad_grad_fn, steps=4,
+                             batch_axis=None)
+    with pytest.raises(ValueError, match="average_fn"):
+        from repro.core import l2gd_step
+        l2gd_step(init_state(zero_params()), BATCH,
+                  jnp.asarray(0, jnp.int32), jax.random.PRNGKey(0),
+                  quad_grad_fn, _hp(), axis_name="clients")
+
+
+def test_sharded_stacked_batches_and_grid_of_steps():
+    """batch_axis=0 (per-step batches indexed inside the sharded scan)
+    matches the stacked engine bit-exactly on 1 device."""
+    steps = 8
+    stacked_batches = jnp.stack([BATCH + k for k in range(steps)])
+    mesh = make_client_mesh(1)
+    key = jax.random.PRNGKey(4)
+    st_sh, tr_sh = rollout_l2gd_sharded(
+        key, init_state(zero_params()), _hp(), stacked_batches, mesh=mesh,
+        grad_fn=quad_grad_fn, client_comp=make_compressor("natural"),
+        master_comp=make_compressor("natural"), participation=0.5)
+    st_st, tr_st = rollout_l2gd(
+        key, init_state(zero_params()), _hp(), stacked_batches,
+        grad_fn=quad_grad_fn, client_comp=make_compressor("natural"),
+        master_comp=make_compressor("natural"), participation=0.5)
+    _assert_rollouts_equal((st_sh, tr_sh), (st_st, tr_st))
+
+
+def test_build_sharded_rollout_fn_reduced_lm():
+    """Launch-layer face: a reduced transformer runs a sharded 4-round
+    scan with sampled participation — finite losses, counters add up."""
+    import dataclasses
+    from repro.configs.base import get_config
+    from repro.launch.steps import build_sharded_rollout_fn
+    from repro.models import init_params
+    from repro.core import L2GDHyper
+
+    cfg = dataclasses.replace(get_config("stablelm-1.6b").reduced(),
+                              vocab_size=32)
+    n, steps = 2, 4
+    keys = jax.random.split(jax.random.PRNGKey(0), n)
+    params = jax.vmap(lambda k: init_params(k, cfg))(keys)
+    hp = L2GDHyper(eta=0.05, lam=0.5, p=0.4, n=n)
+    mesh = make_client_mesh(1)
+    roll = build_sharded_rollout_fn(
+        cfg, hp, mesh=mesh, client_comp=make_compressor("natural"),
+        master_comp=make_compressor("natural"), participation=0.5,
+        length=steps)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (steps, n, 2, 8), 0,
+                              cfg.vocab_size)
+    key_data = jax.random.key_data(jax.random.PRNGKey(2))
+    st, trace = roll(init_state(params), {"tokens": toks}, key_data)
+    assert trace.losses.shape == (steps,)
+    assert bool(jnp.all(jnp.isfinite(trace.losses)))
+    assert int(trace.n_local + trace.n_agg_comm + trace.n_agg_cached) == steps
+    for leaf in jax.tree_util.tree_leaves(st.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+# ---------------------------------------------------------------------------
+# multi-device (2 forced host devices; the CI sharded-smoke job)
+# ---------------------------------------------------------------------------
+
+@multidevice
+@pytest.mark.multidevice
+def test_two_device_sharded_matches_stacked():
+    """2 shards x 2 clients: identical xi/branch streams and
+    trajectories equal to the stacked engine up to reduction-order ulps
+    (XLA may rewrite the gathered mean's reduction across shards)."""
+    mesh = make_client_mesh(2)
+    for part in (1.0, 0.5):
+        sh = _sharded(mesh, 20, make_compressor("natural"),
+                      participation=part)
+        stk = _stacked(20, make_compressor("natural"), participation=part)
+        _assert_rollouts_equal(sh, stk, exact=False)
+
+
+@multidevice
+@pytest.mark.multidevice
+def test_two_device_placed_state_roundtrip():
+    """device_put with the §9 shardings, then one sharded rollout: the
+    final params keep the client-sharded layout."""
+    from repro.launch.sharding import (client_sharded_batch_shardings,
+                                       client_sharded_shardings)
+    mesh = make_client_mesh(2)
+    st = init_state(zero_params())
+    st = jax.device_put(st, client_sharded_shardings(mesh, st))
+    batch = jax.device_put(
+        BATCH, client_sharded_batch_shardings(mesh, BATCH, batch_axis=None))
+    final, trace = rollout_l2gd_sharded(
+        jax.random.PRNGKey(0), st, _hp(), batch, mesh=mesh,
+        grad_fn=quad_grad_fn, steps=10, participation=0.5, batch_axis=None)
+    assert int(trace.n_local + trace.n_agg_comm + trace.n_agg_cached) == 10
+    shard_shapes = {s.data.shape for s in final.params["w"].addressable_shards}
+    assert shard_shapes == {(N // 2, D)}
