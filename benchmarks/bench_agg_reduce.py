@@ -1,0 +1,102 @@
+"""Fused decode->reduce aggregation benchmark (DESIGN.md §10).
+
+The server half of every aggregation round used to decode each client's
+payload into a full-size fp32 tree and mean them — O(n*d) transient
+memory and n bandwidth-bound decode passes.  The fused engine
+(`repro.core.flatbuf.reduce_payload_mean` over the
+`kernels/{qsgd,natural}` reduce kernels) accumulates ``code_ij *
+scale_j`` straight from the packed codes into ONE O(d) f32 accumulator.
+
+Rows (merged into BENCH_kernels.json):
+
+  agg_reduce_fused_qsgd_n{N}    — fused one-pass masked mean, N clients
+  agg_reduce_decode_qsgd_n{N}   — vmap(decode) + masked_client_mean
+                                  reference (what the server used to do)
+  agg_reduce_fused_natural_n64 / agg_reduce_decode_natural_n64
+  agg_compressed_average_n64    — end-to-end stacked aggregation
+                                  C_M(mean C_i(x_i)) on the fused path
+
+The fused rows carry ``speedup`` vs their decode-then-mean twin; the
+tier-2 CI leg (`benchmarks.run --only agg --check`) fails if any
+``*_fused``/``*_pack`` row regresses >2x against the recorded baseline.
+
+Run: PYTHONPATH=src python -m benchmarks.run --only agg [--json PATH]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from benchmarks.common import emit, timed
+from repro.core import (compressed_average, make_compressor, make_plan,
+                        masked_client_mean, reduce_payload_mean)
+
+D = 128 * 2048          # one-model element count (64 qsgd buckets)
+
+
+def _stacked(n: int):
+    return {"w": jax.random.normal(jax.random.PRNGKey(1), (n, D))}
+
+
+def _payload(plan, stacked, n):
+    keys = jax.random.split(jax.random.PRNGKey(2), n)
+    return jax.jit(jax.vmap(plan.encode))(keys, stacked)
+
+
+def _pair(codec_name: str, n: int):
+    """(fused_us, decode_us) for an n-client masked mean of packed
+    payloads; the mask keeps every client (weights exercise the same ops
+    the participation path uses without changing the bytes moved)."""
+    comp = make_compressor(codec_name)
+    plan = make_plan(comp, {"w": jnp.zeros((D,))})
+    payload = _payload(plan, _stacked(n), n)
+    fused = jax.jit(lambda p: reduce_payload_mean(p, None)["w"])
+    decode = jax.jit(
+        lambda p: masked_client_mean(jax.vmap(plan.decode)(p), None)["w"])
+    us_fused, out_f = timed(fused, payload)
+    us_decode, out_d = timed(decode, payload)
+    # same mean up to reduction-order ulps (DESIGN.md §10)
+    assert bool(jnp.allclose(out_f, out_d, rtol=1e-6, atol=1e-6))
+    return us_fused, us_decode
+
+
+def run():
+    start = len(common.RESULTS)
+    nbytes = D * 4
+
+    for n in (8, 64, 256):
+        us_f, us_d = _pair("qsgd", n)
+        emit(f"agg_reduce_fused_qsgd_n{n}", us_f,
+             f"n={n},speedup={us_d / us_f:.2f}x,GB/s={n * nbytes / (us_f * 1e-6) / 1e9:.2f}",
+             n_clients=n, speedup=round(us_d / us_f, 2),
+             gbps=n * nbytes / (us_f * 1e-6) / 1e9)
+        emit(f"agg_reduce_decode_qsgd_n{n}", us_d, f"n={n}",
+             n_clients=n, gbps=n * nbytes / (us_d * 1e-6) / 1e9)
+
+    us_f, us_d = _pair("natural", 64)
+    emit("agg_reduce_fused_natural_n64", us_f,
+         f"n=64,speedup={us_d / us_f:.2f}x",
+         n_clients=64, speedup=round(us_d / us_f, 2),
+         gbps=64 * nbytes / (us_f * 1e-6) / 1e9)
+    emit("agg_reduce_decode_natural_n64", us_d, "n=64", n_clients=64)
+
+    # end-to-end stacked aggregation on the fused path (encode vmap +
+    # fused reduce + shared-key C_M downlink)
+    n = 64
+    comp = make_compressor("qsgd")
+    stacked = _stacked(n)
+    # params as an ARGUMENT: a closure constant would let XLA constant-
+    # fold the whole encode side (30s+ compiles, unrepresentative row)
+    e2e = jax.jit(
+        lambda k, p: compressed_average(k, p, comp, comp)["w"])
+    us, _ = timed(e2e, jax.random.PRNGKey(3), stacked)
+    emit("agg_compressed_average_n64", us,
+         f"n={n},clients/s={n / (us * 1e-6):.0f}",
+         n_clients=n, clients_per_sec=round(n / (us * 1e-6), 1))
+
+    common.merge_json(common.bench_json_path(), common.RESULTS[start:])
+
+
+if __name__ == "__main__":
+    run()

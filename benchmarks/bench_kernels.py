@@ -10,8 +10,6 @@ Every row is also written machine-readably to BENCH_kernels.json
 """
 from __future__ import annotations
 
-import os
-
 import jax
 import jax.numpy as jnp
 
@@ -20,6 +18,7 @@ from benchmarks.common import emit, timed
 from repro.core import make_compressor, make_plan
 from repro.core.flatbuf import seeds_of
 from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ops import flash_attention_op
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.natural.kernel import natural_fused
 from repro.kernels.natural.ref import natural_compress_ref
@@ -28,8 +27,7 @@ from repro.kernels.qsgd.ref import qsgd_dequantized_ref
 from repro.kernels.selective_scan.ops import selective_scan_op
 from repro.kernels.selective_scan.ref import selective_scan_ref
 
-_JSON = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_kernels.json")
+_JSON = common.bench_json_path()
 
 
 def _model_tree(n_layers: int = 24, d: int = 192):
@@ -134,13 +132,24 @@ def run():
     us, _ = timed(lambda: selective_scan_ref(dt, Bm, Cm, xx, A))
     emit("selective_scan_ref", us, f"tokens/s={B * L / (us * 1e-6):.0f}")
 
+    # both attention variants PLUS the dispatched entry point: on CPU the
+    # interpret-mode kernel loses to the dense oracle, so the dispatcher
+    # (kernels/dispatch.py routing, like qsgd/natural) must track the ref
     q = jax.random.normal(k, (1, 4, 512, 64))
     kk = jax.random.normal(jax.random.PRNGKey(6), (1, 4, 512, 64))
     v = jax.random.normal(jax.random.PRNGKey(7), (1, 4, 512, 64))
-    us, _ = timed(lambda: flash_attention(q, kk, v, bq=128, bk=128))
+    us, _ = timed(lambda: flash_attention(q, kk, v, bq=128, bk=128,
+                                          interpret=None))
     emit("flash_attention_kernel", us, "S=512,H=4,D=64")
-    us, _ = timed(lambda: flash_attention_ref(q, kk, v))
-    emit("flash_attention_ref", us, "S=512,H=4,D=64")
+    us_ref, _ = timed(lambda: flash_attention_ref(q, kk, v))
+    emit("flash_attention_ref", us_ref, "S=512,H=4,D=64")
+    qo = q.swapaxes(1, 2)
+    ko = kk.swapaxes(1, 2)
+    vo = v.swapaxes(1, 2)
+    us_op, _ = timed(lambda: flash_attention_op(qo, ko, vo))
+    emit("flash_attention_op", us_op,
+         f"S=512,H=4,D=64,dispatch={'tpu-pallas' if jax.default_backend() == 'tpu' else 'ref'},"
+         f"vs_ref={us_op / us_ref:.2f}x")
 
     common.merge_json(_JSON, common.RESULTS[start:])
 

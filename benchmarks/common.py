@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import json
+import os
 import time
 
 import jax
@@ -16,15 +17,27 @@ from repro.data import logreg_loss_and_grad, make_logreg_data
 RESULTS: list = []
 
 
+def bench_json_path() -> str:
+    """Repo-root BENCH_kernels.json — the shared perf-trajectory record
+    every bench merges its rows into and ``run.py --check`` reads as the
+    regression baseline."""
+    return os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_kernels.json")
+
+
 def timed(fn, *args, warmup: int = 1, iters: int = 5):
-    """us per call after warmup (CPU wall time; TPU is the target, so these
-    numbers are for relative comparisons of the jnp paths only)."""
+    """us per call after warmup — the MINIMUM over ``iters`` calls (CPU
+    wall time on small shared boxes swings +-20% call to call; the min
+    is the stable statistic for relative comparisons of the jnp paths.
+    TPU is the deployment target)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(iters):
+        t0 = time.perf_counter()
         out = jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6, out
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, out
 
 
 def emit(name: str, us_per_call: float, derived, **extra) -> None:

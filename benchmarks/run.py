@@ -5,24 +5,32 @@
   table2 -- bits/n to reach a target quality            [paper Table II]
   fig7   -- FedAvg recovery at eta*lam/(np) = 1         [paper Figs. 7-8]
   kernels -- Pallas kernel microbench                   [system]
+  agg    -- fused decode->reduce aggregation engine     [system, DESIGN §10]
   rollout -- scanned rollout engine vs host loop        [system, DESIGN §8]
   sharded -- client-sharded rollout scaling             [system, DESIGN §9]
   roofline -- dry-run roofline table                    [deliverable g]
 
 Prints ``name,us_per_call,derived`` CSV lines; ``--json PATH``
 additionally serializes every emitted row (name, us/call, derived,
-backend, extras) as a JSON array.  Run:
+backend, extras) as a JSON array.  ``--check`` loads BENCH_kernels.json
+BEFORE the run and fails (exit 1) if any freshly emitted ``*_fused`` /
+``*_pack`` row is more than 2x slower than its recorded baseline — the
+tier-2 CI regression gate for the compression/aggregation hot paths.
+Run:
   PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json PATH]
+                                          [--check]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
 
-from benchmarks import (bench_fig3_sweep, bench_fig4_compressors,
-                        bench_fig7_fedavg_recovery, bench_kernels,
-                        bench_roofline, bench_rollout,
+from benchmarks import (bench_agg_reduce, bench_fig3_sweep,
+                        bench_fig4_compressors, bench_fig7_fedavg_recovery,
+                        bench_kernels, bench_roofline, bench_rollout,
                         bench_sharded_rollout, bench_table2_bits, common)
 
 BENCHES = {
@@ -31,10 +39,50 @@ BENCHES = {
     "table2": bench_table2_bits.run,
     "fig7": bench_fig7_fedavg_recovery.run,
     "kernels": bench_kernels.run,
+    "agg": bench_agg_reduce.run,
     "rollout": bench_rollout.run,
     "sharded": bench_sharded_rollout.run,
     "roofline": bench_roofline.run,
 }
+
+# rows the --check gate guards: the fused compression/aggregation kernels
+# and the wire pack paths (regressing these silently would undo the
+# engine PRs' headline wins).  The factor is env-tunable because the
+# baseline was recorded on ONE machine and wall-clock ratios across CI
+# runner generations drift — widen BENCH_CHECK_FACTOR there rather than
+# re-recording baselines from a slow runner.
+_CHECK_MARKERS = ("_fused", "_pack")
+_CHECK_FACTOR = float(os.environ.get("BENCH_CHECK_FACTOR", "2.0"))
+
+
+def _load_baseline() -> dict:
+    path = common.bench_json_path()
+    if not os.path.exists(path):
+        print(f"[check] no baseline at {path}; nothing to compare",
+              file=sys.stderr)
+        return {}
+    with open(path) as f:
+        return {row["name"]: row for row in json.load(f)}
+
+
+def _check_regressions(baseline: dict) -> list:
+    bad = []
+    for row in common.RESULTS:
+        name = row["name"]
+        if not any(m in name for m in _CHECK_MARKERS):
+            continue
+        base = baseline.get(name)
+        if base is None:
+            print(f"[check] {name}: new row, no baseline", flush=True)
+            continue
+        ratio = row["us_per_call"] / max(base["us_per_call"], 1e-9)
+        status = "FAIL" if ratio > _CHECK_FACTOR else "ok"
+        print(f"[check] {name}: {row['us_per_call']:.1f}us vs baseline "
+              f"{base['us_per_call']:.1f}us ({ratio:.2f}x) {status}",
+              flush=True)
+        if ratio > _CHECK_FACTOR:
+            bad.append((name, ratio))
+    return bad
 
 
 def main() -> None:
@@ -42,7 +90,11 @@ def main() -> None:
     ap.add_argument("--only", choices=list(BENCHES))
     ap.add_argument("--json", metavar="PATH",
                     help="write all emitted rows to PATH as JSON")
+    ap.add_argument("--check", action="store_true",
+                    help="fail if any fresh *_fused/*_pack row is >2x "
+                         "slower than its BENCH_kernels.json baseline")
     args = ap.parse_args()
+    baseline = _load_baseline() if args.check else {}
     names = [args.only] if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     failed = []
@@ -54,6 +106,12 @@ def main() -> None:
             traceback.print_exc()
     if args.json:
         common.write_json(args.json)
+    if args.check:
+        bad = _check_regressions(baseline)
+        if bad:
+            print(f"CHECK FAILED (>{_CHECK_FACTOR}x): {bad}",
+                  file=sys.stderr)
+            sys.exit(1)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -28,8 +28,8 @@ from repro.core.aggregation import (
 )
 from repro.core.flatbuf import (
     FlatLayout, flat_tree_apply, pack_tree, unpack_tree, pack_tree_qsgd,
-    pack_tree_natural, unpack_tree_qsgd, packed_wire_bits,
-    payload_wire_bits,
+    pack_tree_natural, unpack_tree_qsgd, reduce_payload_mean,
+    supports_fused_reduce, packed_wire_bits, payload_wire_bits,
 )
 from repro.core import codec, flatbuf, theory
 
@@ -50,6 +50,7 @@ __all__ = [
     "masked_client_mean", "theory", "codec",
     "flatbuf", "FlatLayout", "flat_tree_apply", "pack_tree", "unpack_tree",
     "pack_tree_qsgd", "pack_tree_natural", "unpack_tree_qsgd",
+    "reduce_payload_mean", "supports_fused_reduce",
     "packed_wire_bits", "payload_wire_bits",
     "EFMemory", "init_ef_memory", "ef_average", "compress_grads",
 ]

@@ -103,9 +103,17 @@ def compressed_average(key: jax.Array, params_stacked,
     n = jax.tree_util.tree_leaves(params_stacked)[0].shape[0]
     k_clients, k_master = jax.random.split(key)
     client_keys = jax.random.split(k_clients, n)
-    compressed = jax.vmap(lambda k, p: up_plan.apply(k, p))(
-        client_keys, params_stacked)
-    ybar = masked_client_mean(compressed, mask)
+    if up_plan.transport in ("flat", "packed"):
+        # fused decode->reduce (DESIGN.md §10): encode-only vmap, then the
+        # ONE-pass kernel accumulates the masked mean straight from the
+        # packed codes — no per-client dequantized tree is materialized
+        from repro.core import flatbuf
+        payload = jax.vmap(up_plan.encode)(client_keys, params_stacked)
+        ybar = flatbuf.reduce_payload_mean(payload, mask)
+    else:
+        compressed = jax.vmap(lambda k, p: up_plan.apply(k, p))(
+            client_keys, params_stacked)
+        ybar = masked_client_mean(compressed, mask)
     return down_plan.apply(k_master, ybar)
 
 
@@ -215,8 +223,9 @@ def make_payload_sharded_average(mesh, client_axes: tuple,
     codes + bucket norms, uint8 natural sign+exponent codes, ...),
     (3) ``all_gather``s every payload array over the client axes — the
     collective carries the quantized codes, e.g. ~3.9x fewer bytes than
-    dequantized fp32 for int8 QSGD — and (4) decodes every gathered
-    payload locally and averages.  Each shard's decoded payload is an
+    dequantized fp32 for int8 QSGD — and (4) folds the gathered payloads
+    into the mean with the ONE-pass fused decode->reduce engine (O(d)
+    server state, DESIGN.md §10).  Each shard's decoded payload is an
     unbiased estimate of its local mean, so the gathered average is
     unbiased for xbar (Lemma 2 unaffected).  Downlink: C_M applied
     shard-wise with a shared key, exactly as :func:`make_sharded_average`.
@@ -228,31 +237,46 @@ def make_payload_sharded_average(mesh, client_axes: tuple,
 
     def uplink(k_up, local_mean, axes):
         payload = uplink_plan.encode(k_up, local_mean)
-        deq = _gather_decode(uplink_plan, payload, axes, batched=False)
-        return jax.tree_util.tree_map(
-            lambda a: jnp.mean(a.astype(jnp.float32), axis=0), deq)
+        return _gather_reduce(uplink_plan, payload, axes, batched=False)
 
     return _make_shard_map_average(mesh, client_axes, param_pspecs_stacked,
                                    master_comp, uplink)
 
 
-def _gather_decode(plan, payload, axes, *, batched: bool):
+def _gather_payloads(payload, axes, *, batched: bool):
     """All_gather a (possibly client-batched) wire Payload over the client
-    mesh axes and decode every gathered message locally — the shared
-    collective of :func:`make_payload_sharded_average` (one payload per
-    shard, ``batched=False``) and :func:`make_client_sharded_average`
-    (one payload per local client, ``batched=True``).  The collective
-    moves the plan's packed wire arrays, never dequantized fp32."""
+    mesh axes — the collective moves the plan's packed wire arrays, never
+    dequantized fp32 — and collapse the gathered mesh axes (plus any
+    local client axis, ``batched=True``) into one leading axis ordered by
+    global client index."""
     gathered = payload
     for ax in axes:                           # wire arrays on the wire
         gathered = jax.tree_util.tree_map(
             lambda a: jax.lax.all_gather(a, ax), gathered)
-    # collapse the gathered mesh axes (and any local client axis) into
-    # one leading axis ordered by global client index
     tail = (lambda o: o.shape[1:]) if batched else (lambda o: o.shape)
-    gathered = jax.tree_util.tree_map(
+    return jax.tree_util.tree_map(
         lambda orig, g: g.reshape((-1,) + tail(orig)), payload, gathered)
-    return jax.vmap(plan.decode)(gathered)
+
+
+def _gather_reduce(plan, payload, axes, *, batched: bool, mask=None):
+    """The shared server side of :func:`make_payload_sharded_average`
+    (one payload per shard, ``batched=False``) and
+    :func:`make_client_sharded_average` (one payload per local client,
+    ``batched=True``): gather the wire payloads, then form the masked
+    mean with the ONE-pass fused decode->reduce engine (O(d) accumulator,
+    DESIGN.md §10) for flat-engine payloads, falling back to per-message
+    decode + masked mean for leafwise payload trees."""
+    from repro.core import flatbuf
+    gathered = _gather_payloads(payload, axes, batched=batched)
+    if flatbuf.supports_fused_reduce(gathered):
+        return flatbuf.reduce_payload_mean(gathered, mask)
+    deq = jax.vmap(plan.decode)(gathered)
+    if mask is None and not batched:
+        # make_payload_sharded_average's historic per-shard mean (decoded
+        # leaves may be non-f32; keep the f32 accumulate)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.mean(a.astype(jnp.float32), axis=0), deq)
+    return masked_client_mean(deq, mask)
 
 
 def make_client_sharded_average(axis_name: str, n_clients: int,
@@ -268,16 +292,17 @@ def make_client_sharded_average(axis_name: str, n_clients: int,
     n)`` as :func:`compressed_average` and takes its own slice, (2)
     encodes each LOCAL client's model to its wire payload, (3)
     ``all_gather``s the payload arrays over ``axis_name`` — the
-    collective carries the quantized codes — and (4) decodes all n
-    messages locally and averages (optionally masked to the round's
-    sampled participant subset, ``mask``).  The downlink C_M runs
-    shard-wise with the shared ``k_master``, bitwise identical to a
-    master broadcast.
+    collective carries the quantized codes — and (4) folds all n gathered
+    messages into the (optionally masked) mean with the ONE-pass fused
+    decode->reduce engine (O(d) server state, DESIGN.md §10; leafwise
+    payload trees fall back to per-message decode + masked mean).  The
+    downlink C_M runs shard-wise with the shared ``k_master``, bitwise
+    identical to a master broadcast.
 
     On a 1-shard mesh with full participation this is bit-exact with
     :func:`compressed_average` (same key schedule, encode→decode ==
-    apply, identical mean reduction) — the equivalence the sharded
-    rollout's headline test pins.
+    apply, the SAME fused reduce over the same gathered arrays) — the
+    equivalence the sharded rollout's headline test pins.
     """
     up_plan = as_plan(client_comp)
     down_plan = as_plan(master_comp)
@@ -290,8 +315,8 @@ def make_client_sharded_average(axis_name: str, n_clients: int,
         local_keys = jax.random.wrap_key_data(jax.lax.dynamic_slice_in_dim(
             ckd, jax.lax.axis_index(axis_name) * m, m))
         payload = jax.vmap(up_plan.encode)(local_keys, params_local)
-        deq = _gather_decode(up_plan, payload, (axis_name,), batched=True)
-        ybar = masked_client_mean(deq, mask)
+        ybar = _gather_reduce(up_plan, payload, (axis_name,), batched=True,
+                              mask=mask)
         return down_plan.apply(k_master, ybar)
 
     return average_fn

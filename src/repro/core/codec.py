@@ -114,16 +114,34 @@ def _register(cls, data_fields, meta_fields):
 def pack_bits(fields: jax.Array, width: int) -> jax.Array:
     """Pack small unsigned ints (< 2**width) along the last axis into
     uint8 bytes, little-endian within the byte.  The last axis must be a
-    multiple of ``8 // width``."""
+    multiple of ``8 // width``.
+
+    The natural 1-bit sign bitmap and the ternary 2-bit fields (every
+    in-repo width divides 8) stay entirely in uint8 arithmetic: the
+    shifted fields and their byte sum are exact in 8 bits (all-ones at
+    width 1 sums to exactly 255), so the intermediates carry 1 byte per
+    field instead of the 4 of a uint32 pipeline — this pack is on the
+    wire-encode hot path (``pack_tree_natural``, ``TernGrad.encode``)."""
     per = 8 // width
+    if 8 % width == 0:
+        b = fields.astype(jnp.uint8).reshape(fields.shape[:-1] + (-1, per))
+        shifts = jnp.arange(per, dtype=jnp.uint8) * jnp.uint8(width)
+        return jnp.sum(b << shifts, axis=-1, dtype=jnp.uint8)
     b = fields.astype(jnp.uint32).reshape(fields.shape[:-1] + (-1, per))
     shifts = jnp.arange(per, dtype=jnp.uint32) * jnp.uint32(width)
     return jnp.sum(b << shifts, axis=-1).astype(jnp.uint8)
 
 
 def unpack_bits(packed: jax.Array, width: int) -> jax.Array:
-    """Inverse of :func:`pack_bits` (returns uint32 fields)."""
+    """Inverse of :func:`pack_bits` (returns uint32 fields).  Widths
+    dividing 8 shift/mask in uint8 (4x narrower intermediates than the
+    generic uint32 path); the final widening cast fuses into consumers."""
     per = 8 // width
+    if 8 % width == 0:
+        shifts = jnp.arange(per, dtype=jnp.uint8) * jnp.uint8(width)
+        mask = jnp.uint8((1 << width) - 1)
+        out = (packed.astype(jnp.uint8)[..., None] >> shifts) & mask
+        return out.reshape(packed.shape[:-1] + (-1,)).astype(jnp.uint32)
     shifts = jnp.arange(per, dtype=jnp.uint32) * jnp.uint32(width)
     mask = jnp.uint32((1 << width) - 1)
     out = (packed.astype(jnp.uint32)[..., None] >> shifts) & mask

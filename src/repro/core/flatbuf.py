@@ -21,6 +21,11 @@ Public surface:
                                   bit-exact decode vs the fused kernels
   pack_tree_qsgd / pack_tree_natural / unpack_tree_qsgd
                                 — codec-specific entry points
+  reduce_payload_mean           — fused decode->reduce: the masked MEAN
+                                  of a stacked payload batch in ONE
+                                  pass, O(d) accumulator state — the
+                                  server side of every aggregation
+                                  round (DESIGN.md §10)
   packed_wire_bits / payload_wire_bits
                                 — exact packed-payload bit accounting;
                                   both read ``Payload.nbits``
@@ -44,15 +49,17 @@ import numpy as np
 
 from repro.core.codec import (NaturalPayload, QSGDPayload, natural_merge,
                               natural_split, pack_bits, unpack_bits)
-from repro.kernels.natural.kernel import natural_fused
+from repro.kernels.natural.kernel import natural_fused, natural_pack
+from repro.kernels.natural.ops import natural_reduce
 from repro.kernels.qsgd.kernel import qsgd_fused, qsgd_pack, qsgd_unpack
+from repro.kernels.qsgd.ops import qsgd_reduce
 
 __all__ = [
     "FlatLayout", "QSGDPayload", "NaturalPayload", "layout_of", "ravel",
     "unravel", "bucketize", "unbucketize", "seeds_of", "supports_flat",
-    "flat_tree_apply", "pack_tree", "unpack_tree", "pack_tree_qsgd",
-    "pack_tree_natural", "unpack_tree_qsgd", "payload_wire_bits",
-    "packed_wire_bits",
+    "supports_fused_reduce", "flat_tree_apply", "pack_tree", "unpack_tree",
+    "pack_tree_qsgd", "pack_tree_natural", "unpack_tree_qsgd",
+    "reduce_payload_mean", "payload_wire_bits", "packed_wire_bits",
 ]
 
 _LANE = 128          # natural compression buckets = one VPU lane row
@@ -103,10 +110,15 @@ def layout_of(tree, bucket: int = 2048) -> FlatLayout:
 
 
 def ravel(layout: FlatLayout, tree) -> jax.Array:
-    """Concatenate all leaves into one (d,) float32 buffer."""
+    """Concatenate all leaves into one (d,) float32 buffer.  A
+    single-leaf tree skips the concatenate — a pure reshape/cast, so the
+    encode side of the aggregation engine adds no (n, d) copy for the
+    common one-buffer layout (the §10 HLO memory test measures this)."""
     leaves = jax.tree_util.tree_leaves(tree)
     if not leaves:
         return jnp.zeros((0,), jnp.float32)
+    if len(leaves) == 1:
+        return leaves[0].reshape(-1).astype(jnp.float32)
     return jnp.concatenate(
         [leaf.reshape(-1).astype(jnp.float32) for leaf in leaves])
 
@@ -282,9 +294,8 @@ def pack_tree_natural(key: jax.Array, tree, *, bucket: int = _LANE):
     bucket = _clamp_bucket(bucket, layout.d)
     layout = layout_of(tree, bucket)
     x2d = bucketize(ravel(layout, tree), bucket)
-    y2d = natural_fused(x2d, seeds_of(key))
-    exps, signs = natural_split(y2d)
-    return NaturalPayload(exps, pack_bits(signs, 1), layout=layout), layout
+    exps, packed = natural_pack(x2d, seeds_of(key))
+    return NaturalPayload(exps, packed, layout=layout), layout
 
 
 def unpack_tree_qsgd(payload: QSGDPayload, layout: FlatLayout = None, *,
@@ -297,6 +308,56 @@ def unpack_tree_qsgd(payload: QSGDPayload, layout: FlatLayout = None, *,
         return unpack_tree(payload)
     y2d = qsgd_unpack(payload.codes, payload.norms, levels=levels)
     return unravel(layout, unbucketize(y2d, layout.d))
+
+
+def supports_fused_reduce(payload) -> bool:
+    """True for stacked flat-engine payloads the one-pass server reduce
+    (:func:`reduce_payload_mean`) can consume directly."""
+    return isinstance(payload, (QSGDPayload, NaturalPayload)) \
+        and getattr(payload, "layout", None) is not None
+
+
+def reduce_payload_mean(payload, mask=None):
+    """Fused decode->reduce: the (optionally mask-weighted) MEAN pytree of
+    a STACKED flat-engine payload batch, in ONE pass (DESIGN.md §10).
+
+    ``payload`` is a :class:`QSGDPayload` / :class:`NaturalPayload` whose
+    wire arrays carry a leading client axis of size n (built by
+    ``vmap(plan.encode)`` or by all_gathering per-client payloads); the
+    static ``layout`` is the shared one-model :class:`FlatLayout`.
+    ``mask`` (optional (n,) 0/1 array) restricts the mean to a sampled
+    participant subset: ``sum_i m_i x_i / sum_i m_i``.
+
+    The kernel accumulates ``code_ij * scale_j`` client-by-client into a
+    single (n_buckets, bucket) float32 accumulator — no per-client
+    dequantized buffer ever exists, so server memory is O(d) instead of
+    the O(n*d) of decode-then-mean (HLO-test-enforced).  Accumulation in
+    f32 in client index order 0..n-1 on every backend; results agree
+    with ``masked_client_mean(vmap(decode)(payload), mask)`` to
+    reduction-order ulps (XLA's axis-0 reduce may associate differently)
+    and are used consistently by BOTH the stacked and client-sharded
+    engines, which therefore stay bit-exact with each other."""
+    if not supports_fused_reduce(payload):
+        raise ValueError(
+            f"no fused reduce for payload {type(payload).__name__}; "
+            "expected a stacked flat-engine QSGDPayload/NaturalPayload "
+            "carrying its FlatLayout")
+    layout = payload.layout
+    if layout.d == 0:
+        return unravel(layout, jnp.zeros((0,), jnp.float32))
+    if mask is None:
+        weights = None
+        n = jax.tree_util.tree_leaves(payload)[0].shape[0]
+        denom = jnp.float32(n)
+    else:
+        weights = mask.reshape(-1).astype(jnp.float32)
+        denom = jnp.sum(weights)
+    if isinstance(payload, QSGDPayload):
+        acc = qsgd_reduce(payload.codes, payload.norms, weights,
+                          levels=payload.levels)
+    else:
+        acc = natural_reduce(payload.exps, payload.signs, weights)
+    return unravel(layout, unbucketize(acc / denom, layout.d))
 
 
 def payload_wire_bits(payload) -> int:

@@ -19,7 +19,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["on_tpu", "default_interpret", "autotune_rows"]
+__all__ = ["on_tpu", "default_interpret", "autotune_rows",
+           "autotune_attn_blocks"]
 
 # Working VMEM budget for one pipeline stage.  Cores have ~16 MiB of VMEM;
 # we target a quarter of it so double buffering (x2) plus compiler scratch
@@ -48,3 +49,33 @@ def autotune_rows(n_buckets: int, bucket: int, *, n_buffers: int = 3,
     rows = vmem_budget // bytes_per_row
     rows = (rows // _ROW_ALIGN) * _ROW_ALIGN
     return int(min(max(rows, 1), max(n_buckets, 1)))
+
+
+_ATTN_BLOCK_ALIGN = 128  # MXU tile edge; q/k blocks stay lane-aligned
+
+
+def autotune_attn_blocks(S: int, T: int, D: int, *, itemsize: int = 4,
+                         vmem_budget: int = _VMEM_BUDGET_BYTES):
+    """(bq, bk) block sizes for the flash-attention kernel so the live
+    tiles — q (bq, D), k/v (bk, D), scores (bq, bk), accumulator (bq, D)
+    — fit the VMEM budget, MXU-aligned (multiples of 128) and clamped to
+    the sequence lengths.  Square blocks: the streaming-softmax kernel is
+    balanced when the q and kv tiles match."""
+    def fits(b):
+        # q + accumulator (2 b D) + k + v (2 b D) + scores (b^2) live
+        # tiles, double-buffered
+        return 2 * itemsize * b * (4 * D + b) <= vmem_budget
+
+    b = _ATTN_BLOCK_ALIGN
+    while b * 2 <= min(S, T) and fits(b * 2):
+        b *= 2
+
+    def fit_axis(block, length):
+        # the kernel requires block | length: shrink to a divisor
+        # (powers of two stay MXU-aligned); sequences shorter than one
+        # block clamp to the length, exactly like the old fixed default
+        while block > _ATTN_BLOCK_ALIGN and length % block:
+            block //= 2
+        return min(block, max(length, 1))
+
+    return fit_axis(b, S), fit_axis(b, T)

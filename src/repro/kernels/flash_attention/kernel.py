@@ -71,9 +71,16 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int | None = None,
                     bq: int = 128, bk: int = 128,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool = None) -> jax.Array:
     """q: (B,H,S,D), k/v: (B,H,T,D) (GQA repeat done by caller).  S and T
-    must be multiples of bq/bk (caller pads)."""
+    must be multiples of bq/bk (caller pads).  ``interpret=None`` follows
+    the backend rule of DESIGN.md §5 (compiled on TPU, interpreter
+    elsewhere); the dispatched entry point that picks the WINNING impl
+    per backend is :func:`repro.kernels.flash_attention.ops.
+    flash_attention_op`."""
+    from repro.kernels.dispatch import default_interpret
+    if interpret is None:
+        interpret = default_interpret()
     B, H, S, D = q.shape
     T = k.shape[2]
     bq = min(bq, S)

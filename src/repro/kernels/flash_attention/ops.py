@@ -1,17 +1,33 @@
-"""jit'd wrapper: (B,S,H,D)-layout entry point with GQA repeat + padding."""
+"""Backend-dispatched (B,S,H,D)-layout entry point with GQA repeat.
+
+Like the qsgd/natural engines, the route is decided by
+:mod:`repro.kernels.dispatch` (DESIGN.md §5): compiled Pallas with
+autotuned (bq, bk) blocks on TPU; the dense jnp oracle elsewhere — on
+CPU the interpret-mode Pallas kernel is ~2.5x SLOWER than the fused XLA
+softmax (``BENCH_kernels.json``: ``flash_attention_kernel`` vs
+``flash_attention_ref``), so the dispatcher picks the winner per
+backend.  Pass ``interpret`` explicitly to pin the Pallas kernel (kernel
+validation tests).
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import autotune_attn_blocks, on_tpu
 from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
 
 __all__ = ["flash_attention_op"]
 
 
 def flash_attention_op(q, k, v, *, causal: bool = True,
-                       window: int | None = None, bq: int = 128,
-                       bk: int = 128, interpret: bool = True):
-    """q: (B,S,H,D), k/v: (B,T,Kv,D) with H % Kv == 0.  Returns (B,S,H,D)."""
+                       window: int | None = None, bq: int | None = None,
+                       bk: int | None = None, interpret: bool | None = None):
+    """q: (B,S,H,D), k/v: (B,T,Kv,D) with H % Kv == 0.  Returns (B,S,H,D).
+
+    ``bq``/``bk`` default to the VMEM-budget autotune
+    (:func:`repro.kernels.dispatch.autotune_attn_blocks`); ``interpret``
+    pins the Pallas kernel path (None = backend dispatch)."""
     B, S, H, D = q.shape
     Kv = k.shape[2]
     if Kv != H:
@@ -21,7 +37,14 @@ def flash_attention_op(q, k, v, *, causal: bool = True,
     qt = q.swapaxes(1, 2)
     kt = k.swapaxes(1, 2)
     vt = v.swapaxes(1, 2)
+    if interpret is None and not on_tpu():
+        # the dense oracle IS the fast path off-TPU (one fused XLA
+        # softmax; the Pallas interpreter exists for validation only)
+        return flash_attention_ref(qt, kt, vt, causal=causal,
+                                   window=window).swapaxes(1, 2)
+    T = kt.shape[2]
+    abq, abk = autotune_attn_blocks(S, T, D)
     out = flash_attention(qt, kt, vt, causal=causal, window=window,
-                          bq=min(bq, S), bk=min(bk, kt.shape[2]),
+                          bq=min(bq or abq, S), bk=min(bk or abk, T),
                           interpret=interpret)
     return out.swapaxes(1, 2)

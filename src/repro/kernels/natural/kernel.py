@@ -23,10 +23,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.dispatch import autotune_rows, default_interpret, on_tpu
-from repro.kernels.natural.ref import natural_compress_ref, natural_fused_ref
+from repro.kernels.natural.ref import (natural_compress_ref,
+                                       natural_fused_ref, natural_pack_ref)
 from repro.kernels.rng import bits_to_uniform, counter_bits
 
-__all__ = ["natural_compress_2d", "natural_fused", "natural_fused_pallas"]
+__all__ = ["natural_compress_2d", "natural_fused", "natural_fused_pallas",
+           "natural_pack"]
 
 
 def _round_to_pow2(x, u):
@@ -119,3 +121,22 @@ def natural_fused(x2d: jax.Array, seeds: jax.Array, *,
         return natural_fused_pallas(x2d, seeds, rows=rows, interpret=False,
                                     hw_rng=True)
     return _natural_fused_jnp(x2d, seeds)
+
+
+_natural_pack_jnp = jax.jit(natural_pack_ref)
+
+
+def natural_pack(x2d: jax.Array, seeds: jax.Array, *, rows: int = None):
+    """Backend-dispatched wire encode: (uint8 exponent codes, packed sign
+    bitmap).  On TPU the compiled fused kernel produces the rounded f32
+    buffer and the bit-split runs as a fused XLA epilogue; elsewhere the
+    one-pass bits-domain jnp encode (:func:`natural_pack_ref`) never
+    materializes the f32 output at all — the pack-bandwidth hot path.
+    Bit-exact with ``natural_split(natural_fused(...))`` on both routes."""
+    if on_tpu():
+        from repro.core.codec import natural_split, pack_bits
+        exps, signs = natural_split(
+            natural_fused_pallas(x2d, seeds, rows=rows, interpret=False,
+                                 hw_rng=True))
+        return exps, pack_bits(signs, 1)
+    return _natural_pack_jnp(x2d, seeds)

@@ -1,14 +1,34 @@
-"""Public wrapper: single-array natural compression via the fused kernels.
+"""Public wrappers: single-array natural compression + the fused
+decode->reduce aggregation kernel.
 
-Lane-padding is routed through the flat-buffer engine's bucketizer and
-noise is generated in-kernel; backend dispatch is automatic (compiled
-Pallas on TPU, fused jnp elsewhere).  Pass ``interpret`` explicitly to
-pin the interpret-mode Pallas kernel (tests)."""
+``natural_compress`` routes lane-padding through the flat-buffer
+engine's bucketizer and generates noise in-kernel; backend dispatch is
+automatic (compiled Pallas on TPU, fused jnp elsewhere).  Pass
+``interpret`` explicitly to pin the interpret-mode Pallas kernel
+(tests).
+
+``natural_reduce`` is the server half of the one-pass aggregation
+engine (DESIGN.md §10): it consumes a STACKED natural wire batch —
+exponent codes (n, n_buckets, bucket) uint8 plus packed sign bitmaps
+(n, n_buckets, bucket//8) uint8 — and accumulates the weighted sum of
+the reconstructed buffers (the ``natural_merge`` bit composition
+``(sign << 31) | (exp << 23)``) into a single (n_buckets, bucket)
+float32 accumulator: server memory is O(d), not O(n*d).
+"""
 from __future__ import annotations
 
-from repro.kernels.natural.kernel import natural_fused, natural_fused_pallas
+import functools
 
-__all__ = ["natural_compress"]
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.dispatch import autotune_rows, on_tpu
+from repro.kernels.natural.kernel import natural_fused, natural_fused_pallas
+from repro.kernels.natural.ref import natural_reduce_ref
+
+__all__ = ["natural_compress", "natural_reduce", "natural_reduce_pallas"]
 
 _LANE = 128
 
@@ -24,3 +44,97 @@ def natural_compress(key, x, *, interpret: bool = None):
     else:
         out = natural_fused_pallas(x2d, seeds, interpret=interpret)
     return unbucketize(out, d).reshape(x.shape).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# fused decode->reduce (the one-pass server aggregation, DESIGN.md §10)
+# --------------------------------------------------------------------------
+
+def _merge_tile(e_ref, s_ref):
+    """Reconstruct one client's (rows, b) f32 tile from its exponent
+    codes and packed sign bitmap — the in-kernel ``natural_merge``."""
+    exps = e_ref[0].astype(jnp.uint32)                  # (rows, b)
+    packed = s_ref[0].astype(jnp.uint32)                # (rows, b // 8)
+    shifts = jnp.arange(8, dtype=jnp.uint32)
+    sign = (packed[..., None] >> shifts) & jnp.uint32(1)
+    sign = sign.reshape(exps.shape)
+    bits = (sign << 31) | (exps << 23)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def _natural_reduce_kernel(*refs, has_w: bool):
+    e_ref, s_ref = refs[0], refs[1]
+    w_ref = refs[2] if has_w else None
+    o_ref, acc_ref = refs[-2], refs[-1]
+    i = pl.program_id(1)                     # client axis, innermost
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    y = _merge_tile(e_ref, s_ref)
+    if has_w:
+        y = y * w_ref[0, 0]
+    acc_ref[...] += y
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "interpret", "has_w"))
+def _natural_reduce_pallas(exps, signs, weights, *, rows: int,
+                           interpret: bool, has_w: bool):
+    n, nb, b = exps.shape
+    bs = signs.shape[-1]                     # b // 8 packed bytes
+    rows = min(rows, nb)
+    grid = (pl.cdiv(nb, rows), n)            # client axis innermost
+    in_specs = [
+        pl.BlockSpec((1, rows, b), lambda t, i: (i, t, 0)),
+        pl.BlockSpec((1, rows, bs), lambda t, i: (i, t, 0)),
+    ]
+    args = (exps, signs)
+    kernel = functools.partial(_natural_reduce_kernel, has_w=has_w)
+    if has_w:
+        in_specs.append(pl.BlockSpec((1, 1), lambda t, i: (i, 0)))
+        args = args + (weights.reshape(n, 1),)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((rows, b), lambda t, i: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, b), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((rows, b), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+
+
+def natural_reduce_pallas(exps, signs, weights=None, *, rows: int = None,
+                          interpret: bool = None):
+    """Pallas path of :func:`natural_reduce`: grid (bucket_tiles, n) with
+    the client axis innermost/sequential, f32 accumulator in VMEM scratch
+    (the flash-attention streaming pattern); signs are unpacked in-tile."""
+    n, nb, b = exps.shape
+    if interpret is None:
+        interpret = not on_tpu()
+    if rows is None:
+        rows = autotune_rows(nb, b, n_buffers=3)
+    return _natural_reduce_pallas(exps, signs, weights, rows=rows,
+                                  interpret=interpret,
+                                  has_w=weights is not None)
+
+
+_natural_reduce_jnp = jax.jit(natural_reduce_ref,
+                              static_argnames=("unroll",))
+
+
+def natural_reduce(exps, signs, weights=None, *, rows: int = None
+                   ) -> jax.Array:
+    """Backend-dispatched fused decode->reduce over the leading client
+    axis in ONE pass with an O(d) accumulator (compiled Pallas on TPU, a
+    jnp ``lax.scan`` accumulation elsewhere; both add clients in index
+    order 0..n-1)."""
+    if on_tpu():
+        return natural_reduce_pallas(exps, signs, weights, rows=rows,
+                                     interpret=False)
+    return _natural_reduce_jnp(exps, signs, weights)

@@ -165,7 +165,7 @@ def build_average_fn(*args, uplink="wire", kind: str = None, **kwargs):
 def build_train_step(cfg: ArchConfig, hp: L2GDHyper,
                      client_comp: Compressor = Identity(),
                      master_comp: Compressor = Identity(),
-                     average_fn=None, plans=None):
+                     average_fn=None, plans=None, donate: bool = True):
     """Compressed-L2GD step over client-stacked model params.
 
     ``average_fn`` (optional) overrides the aggregation realization — see
@@ -178,7 +178,15 @@ def build_train_step(cfg: ArchConfig, hp: L2GDHyper,
     model-axis-sharded params, where the flat-buffer engine's ravel would
     force a cross-shard rematerialization (DESIGN.md §7 sharding table);
     the fused engine rides the shard_map ``average_fn`` variants
-    instead."""
+    instead.
+
+    ``donate=True`` (default) returns the step jitted with the state
+    carry donated (``donate_argnums=(0,)``): XLA aliases the stacked
+    params buffer input->output instead of copying it every step
+    (HLO-test-enforced; the input state is consumed).  Callers that wrap
+    the step in their own ``jax.jit`` (the pjit dry-run pipeline) are
+    unaffected — donation on the inlined inner jit is ignored and the
+    outer jit decides."""
     if plans is None:
         shapes = param_shapes(cfg)
         plans = (make_plan(client_comp, shapes, transport="leafwise"),
@@ -198,6 +206,8 @@ def build_train_step(cfg: ArchConfig, hp: L2GDHyper,
                                        average_fn=average_fn)
         return new_state, metrics
 
+    if donate:
+        return jax.jit(train_step, donate_argnums=(0,))
     return train_step
 
 
@@ -205,7 +215,7 @@ def build_rollout_fn(cfg: ArchConfig, hp: L2GDHyper,
                      client_comp: Compressor = Identity(),
                      master_comp: Compressor = Identity(),
                      average_fn=None, plans=None, length: int = 8,
-                     unroll: int = 1):
+                     unroll: int = 1, donate: bool = True):
     """Scanned multi-round train function (DESIGN.md §8): ``length``
     rounds of Algorithm 1 inside ONE ``lax.scan``, drawing xi on device.
 
@@ -214,7 +224,14 @@ def build_rollout_fn(cfg: ArchConfig, hp: L2GDHyper,
     ``rollout(state, batches, key_data)`` takes batches with a leading
     ``(length, ...)`` steps axis and returns ``(state, RolloutTrace)``;
     the host replays ``trace.xis`` into the bits ledger
-    (:meth:`repro.fl.ledger.BitsLedger.replay_xi_trace`)."""
+    (:meth:`repro.fl.ledger.BitsLedger.replay_xi_trace`).
+
+    ``donate=True`` (default) jits the rollout with the state carry
+    donated (``donate_argnums=(0,)``): the stacked params buffer is
+    aliased input->output across the whole chunk, so the scan reuses one
+    accumulator instead of copying O(n_clients * d) floats per dispatch
+    (HLO-test-enforced; the input state is consumed — chunked drivers
+    feed each chunk's output state into the next)."""
     from repro.core.rollout import rollout_l2gd
     if plans is None:
         shapes = param_shapes(cfg)
@@ -234,6 +251,8 @@ def build_rollout_fn(cfg: ArchConfig, hp: L2GDHyper,
                             master_comp=down_plan, average_fn=average_fn,
                             unroll=unroll)
 
+    if donate:
+        return jax.jit(rollout, donate_argnums=(0,))
     return rollout
 
 
@@ -242,7 +261,8 @@ def build_sharded_rollout_fn(cfg: ArchConfig, hp: L2GDHyper, *, mesh,
                              master_comp: Compressor = Identity(),
                              participation: Optional[float] = None,
                              length: int = 8, unroll: int = 1,
-                             axis_name: str = "clients"):
+                             axis_name: str = "clients",
+                             donate: bool = True):
     """Client-sharded multi-round train function (DESIGN.md §9): the
     :func:`build_rollout_fn` scan running inside one shard_map over
     ``mesh``'s ``axis_name`` axis (repro.launch.mesh.make_client_mesh) —
@@ -260,7 +280,11 @@ def build_sharded_rollout_fn(cfg: ArchConfig, hp: L2GDHyper, *, mesh,
 
     Plans are pinned to ``transport="leafwise"``: each model is whole on
     its device (no model-axis sharding), and the leafwise payload keeps
-    the all_gather free of the flat engine's cross-leaf ravel."""
+    the all_gather free of the flat engine's cross-leaf ravel.
+
+    ``donate=True`` (default) jits the rollout with the state carry
+    donated, exactly as :func:`build_rollout_fn` (each device's param
+    shard is aliased input->output across the chunk)."""
     from repro.core.rollout import rollout_l2gd_sharded
     shapes = param_shapes(cfg)
     up_plan = make_plan(client_comp, shapes, transport="leafwise")
@@ -280,6 +304,8 @@ def build_sharded_rollout_fn(cfg: ArchConfig, hp: L2GDHyper, *, mesh,
                                     participation=participation,
                                     unroll=unroll, axis_name=axis_name)
 
+    if donate:
+        return jax.jit(rollout, donate_argnums=(0,))
     return rollout
 
 

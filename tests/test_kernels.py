@@ -131,7 +131,9 @@ def test_flash_attention_dtype_and_gqa(dtype):
     q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, D)).astype(dtype)
     k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Kv, D)).astype(dtype)
     v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Kv, D)).astype(dtype)
-    got = flash_attention_op(q, k, v, bq=64, bk=64)
+    # interpret=True pins the Pallas kernel (the dispatcher would route
+    # CPU to the dense oracle, see test_flash_attention_op_dispatch)
+    got = flash_attention_op(q, k, v, bq=64, bk=64, interpret=True)
     # oracle via repeat + ref
     kr = jnp.repeat(k, H // Kv, axis=2).swapaxes(1, 2)
     vr = jnp.repeat(v, H // Kv, axis=2).swapaxes(1, 2)
@@ -139,6 +141,58 @@ def test_flash_attention_dtype_and_gqa(dtype):
     tol = 3e-5 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_op_dispatch():
+    """DESIGN.md §5 routing for attention: off-TPU the dispatched entry
+    point returns the dense oracle's result BIT-EXACTLY (the interpret
+    kernel is validation-only and 2.5x slower on CPU); pinning
+    ``interpret=True`` still runs the Pallas kernel (allclose)."""
+    B, S, H, Kv, D = 1, 128, 4, 2, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Kv, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Kv, D))
+    kr = jnp.repeat(k, H // Kv, axis=2).swapaxes(1, 2)
+    vr = jnp.repeat(v, H // Kv, axis=2).swapaxes(1, 2)
+    want = flash_attention_ref(q.swapaxes(1, 2), kr, vr).swapaxes(1, 2)
+    assert jax.default_backend() != "tpu"
+    np.testing.assert_array_equal(
+        np.asarray(flash_attention_op(q, k, v)), np.asarray(want))
+    np.testing.assert_allclose(
+        np.asarray(flash_attention_op(q, k, v, interpret=True)),
+        np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_autotune_attn_blocks():
+    """Blocks are MXU-aligned, clamped to the sequence lengths, and fit
+    the VMEM budget."""
+    from repro.kernels.dispatch import autotune_attn_blocks
+    bq, bk = autotune_attn_blocks(512, 512, 64)
+    assert bq % 128 == 0 and bk % 128 == 0
+    assert 2 * 4 * bq * (4 * 64 + bk) <= 4 * 1024 * 1024
+    assert autotune_attn_blocks(64, 64, 64) == (64, 64)   # clamped
+    bq2, bk2 = autotune_attn_blocks(4096, 4096, 256)
+    assert bq2 % 128 == 0
+    assert 2 * 4 * bq2 * (4 * 256 + bk2) <= 4 * 1024 * 1024
+    # blocks must DIVIDE the sequence lengths (kernel precondition): 384
+    # and 640 admit 128 but not the VMEM-maximal power of two
+    for S in (384, 640):
+        bq3, bk3 = autotune_attn_blocks(S, S, 64)
+        assert S % bq3 == 0 and S % bk3 == 0, (S, bq3, bk3)
+
+
+def test_flash_attention_op_autotuned_nonpow2_seq():
+    """The autotuned dispatch path runs (not crashes) on sequence
+    lengths the maximal block would not divide."""
+    B, S, H, D = 1, 384, 2, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, D))
+    got = flash_attention_op(q, k, v, interpret=True)
+    want = flash_attention_ref(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                               v.swapaxes(1, 2)).swapaxes(1, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
 
 
 def test_flash_matches_model_attention_core():
