@@ -1,0 +1,116 @@
+"""Async engine benchmark: arrival-ordered faulty rounds vs the
+synchronous scan (DESIGN.md §11).
+
+Three measurements, merged into BENCH_kernels.json for the perf
+trajectory:
+
+  * ``async_null_overhead`` — steps/sec of the async engine under the
+    NULL fault plan vs the synchronous ``rollout_l2gd``, identical
+    trajectory (the keystone invariant is asserted bit-for-bit on the
+    final params before timing: this row is meaningless if the engines
+    disagree).
+  * ``async_chaos_steps`` — steps/sec under a representative chaos plan
+    (geometric latency, drops, crashes, 60% quorum, D=3 staleness
+    buffer), with the determinism invariant asserted: a replay from the
+    same key reproduces the trajectory, the fault trace and the ledger
+    bit-for-bit (compared via content hashes).
+  * ``async_chaos_d`` — buffer-depth scaling: us/step at D in {1, 4, 8}
+    (each extra slot is one more weighted fold per round).
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit, logreg_setup
+from repro.core import L2GDHyper, QSGD, make_plan
+from repro.fl import FaultPlan, geometric_latency_probs, run_l2gd
+
+_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_kernels.json")
+
+
+def _run_hash(run) -> str:
+    """Content hash of everything determinism promises: final params,
+    per-step losses, xi trace, fault totals and the replayed ledger."""
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(run.state.params):
+        h.update(np.asarray(leaf).tobytes())
+    h.update(np.asarray(run.xis).tobytes())
+    h.update(repr(run.losses).encode())
+    h.update(repr(sorted((run.fault_stats or {}).items())).encode())
+    h.update(repr(run.ledger.history).encode())
+    return h.hexdigest()
+
+
+def run(K: int = 400):
+    start = len(common.RESULTS)
+    X, Y, grad_fn, _, _ = logreg_setup()
+    n, d = 5, 124
+    hp = L2GDHyper(eta=0.5, lam=1.0, p=0.3, n=n)
+    params = {"w": jnp.zeros((n, d))}
+    key = jax.random.PRNGKey(0)
+    plan = make_plan(QSGD(levels=15),
+                     {"w": jax.ShapeDtypeStruct((d,), jnp.float32)},
+                     transport="flat")
+    batch_fn = lambda k: (X, Y)
+
+    def timed_run(**kw):
+        run_l2gd(key, params, grad_fn, hp, batch_fn, K, plan=(plan, plan),
+                 **kw)  # warm (per-call compile, symmetric across rows)
+        t0 = time.perf_counter()
+        r = run_l2gd(key, params, grad_fn, hp, batch_fn, K,
+                     plan=(plan, plan), **kw)
+        return r, time.perf_counter() - t0
+
+    # null-fault overhead vs the synchronous engine, keystone asserted
+    r_sync, dt_sync = timed_run()
+    r_null, dt_null = timed_run(faults=FaultPlan())
+    assert np.array_equal(np.asarray(r_sync.state.params["w"]),
+                          np.asarray(r_null.state.params["w"])), \
+        "async engine broke the null-fault keystone invariant"
+    assert r_sync.ledger.history == r_null.ledger.history
+    sps_sync, sps_null = K / dt_sync, K / dt_null
+    emit("async_null_overhead", dt_null * 1e6 / K,
+         f"async_steps/s={sps_null:.0f} sync_steps/s={sps_sync:.0f} "
+         f"overhead={dt_null / dt_sync:.2f}x keystone=bit-exact",
+         async_steps_per_s=round(sps_null, 1),
+         sync_steps_per_s=round(sps_sync, 1),
+         overhead=round(dt_null / dt_sync, 2))
+
+    # chaos throughput + the determinism invariant (replay hash)
+    chaos = FaultPlan(max_delay=3,
+                      latency_probs=geometric_latency_probs(1.0, 5),
+                      drop_rate=0.15, crash_rate=0.05, quorum=0.6)
+    r1, dt1 = timed_run(faults=chaos)
+    r2, _ = timed_run(faults=chaos)
+    h1, h2 = _run_hash(r1), _run_hash(r2)
+    assert h1 == h2, f"chaos replay diverged: {h1} != {h2}"
+    sps = K / dt1
+    emit("async_chaos_steps", dt1 * 1e6 / K,
+         f"steps/s={sps:.0f} dropped={r1.fault_stats['dropped']} "
+         f"stale={r1.fault_stats['stale']} replay=bit-exact hash={h1[:12]}",
+         steps_per_sec=round(sps, 1), **{k: v for k, v in
+                                         r1.fault_stats.items()})
+
+    # buffer-depth scaling
+    for D in (1, 4, 8):
+        plan_d = FaultPlan(max_delay=D,
+                           latency_probs=geometric_latency_probs(2.0, D + 2),
+                           drop_rate=0.1, quorum=0.6)
+        _, dt = timed_run(faults=plan_d)
+        emit(f"async_chaos_d{D}", dt * 1e6 / K,
+             f"steps/s={K / dt:.0f} slots={D + 1}",
+             steps_per_sec=round(K / dt, 1), dim=D)
+
+    common.merge_json(_JSON, common.RESULTS[start:])
+
+
+if __name__ == "__main__":
+    run()

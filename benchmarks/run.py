@@ -8,6 +8,7 @@
   agg    -- fused decode->reduce aggregation engine     [system, DESIGN §10]
   rollout -- scanned rollout engine vs host loop        [system, DESIGN §8]
   sharded -- client-sharded rollout scaling             [system, DESIGN §9]
+  async  -- arrival-ordered faulty rounds vs sync scan  [system, DESIGN §11]
   roofline -- dry-run roofline table                    [deliverable g]
 
 Prints ``name,us_per_call,derived`` CSV lines; ``--json PATH``
@@ -28,7 +29,7 @@ import os
 import sys
 import traceback
 
-from benchmarks import (bench_agg_reduce, bench_fig3_sweep,
+from benchmarks import (bench_agg_reduce, bench_async, bench_fig3_sweep,
                         bench_fig4_compressors, bench_fig7_fedavg_recovery,
                         bench_kernels, bench_roofline, bench_rollout,
                         bench_sharded_rollout, bench_table2_bits, common)
@@ -42,6 +43,7 @@ BENCHES = {
     "agg": bench_agg_reduce.run,
     "rollout": bench_rollout.run,
     "sharded": bench_sharded_rollout.run,
+    "async": bench_async.run,
     "roofline": bench_roofline.run,
 }
 
@@ -66,14 +68,22 @@ def _load_baseline() -> dict:
 
 
 def _check_regressions(baseline: dict) -> list:
-    bad = []
+    """Compare fresh ``*_fused``/``*_pack`` rows against the recorded
+    baseline.  A fresh row with no baseline (or a baseline row predating
+    the ``us_per_call`` field) is NOT a failure: it is printed as
+    "new, recorded" and merged into BENCH_kernels.json so the NEXT run
+    has a baseline — adding a benchmark never breaks the tier2-perf leg.
+    Returns the list of (name, ratio) regressions beyond the factor."""
+    bad, new_rows = [], []
     for row in common.RESULTS:
         name = row["name"]
         if not any(m in name for m in _CHECK_MARKERS):
             continue
         base = baseline.get(name)
-        if base is None:
-            print(f"[check] {name}: new row, no baseline", flush=True)
+        if base is None or base.get("us_per_call") is None:
+            print(f"[check] {name}: {row['us_per_call']:.1f}us "
+                  f"new, recorded", flush=True)
+            new_rows.append(row)
             continue
         ratio = row["us_per_call"] / max(base["us_per_call"], 1e-9)
         status = "FAIL" if ratio > _CHECK_FACTOR else "ok"
@@ -82,6 +92,8 @@ def _check_regressions(baseline: dict) -> list:
               flush=True)
         if ratio > _CHECK_FACTOR:
             bad.append((name, ratio))
+    if new_rows:
+        common.merge_json(common.bench_json_path(), new_rows)
     return bad
 
 

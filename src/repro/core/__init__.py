@@ -31,6 +31,10 @@ from repro.core.flatbuf import (
     pack_tree_natural, unpack_tree_qsgd, reduce_payload_mean,
     supports_fused_reduce, packed_wire_bits, payload_wire_bits,
 )
+from repro.core.async_engine import (
+    AsyncAggState, AsyncRolloutTrace, EVENT_FIELDS, init_async_state,
+    rollout_l2gd_async, fault_totals,
+)
 from repro.core import codec, flatbuf, theory
 
 __all__ = [
@@ -52,6 +56,8 @@ __all__ = [
     "pack_tree_qsgd", "pack_tree_natural", "unpack_tree_qsgd",
     "reduce_payload_mean", "supports_fused_reduce",
     "packed_wire_bits", "payload_wire_bits",
+    "AsyncAggState", "AsyncRolloutTrace", "EVENT_FIELDS",
+    "init_async_state", "rollout_l2gd_async", "fault_totals",
     "EFMemory", "init_ef_memory", "ef_average", "compress_grads",
 ]
 from repro.core.extensions import EFMemory, init_ef_memory, ef_average, compress_grads

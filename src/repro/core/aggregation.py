@@ -42,7 +42,8 @@ from repro.core.compressors import QSGD
 __all__ = ["compressed_average", "compressed_average_wire",
            "stochastic_round_cast", "make_sharded_average",
            "make_payload_sharded_average", "make_packed_sharded_average",
-           "make_client_sharded_average", "masked_client_mean"]
+           "make_client_sharded_average", "masked_client_mean",
+           "stacked_finite_mask", "weighted_client_sum"]
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs):
@@ -72,6 +73,38 @@ def masked_client_mean(tree_stacked, mask):
     def one(a):
         mb = mask.reshape((a.shape[0],) + (1,) * (a.ndim - 1)).astype(a.dtype)
         return jnp.sum(a * mb, axis=0) / denom.astype(a.dtype)
+
+    return jax.tree.map(one, tree_stacked)
+
+
+def stacked_finite_mask(tree_stacked) -> jax.Array:
+    """(n,) 0/1 float32 over a client-stacked pytree: 1 where client i's
+    slice is finite in EVERY leaf — the leafwise-transport counterpart of
+    :func:`repro.core.flatbuf.payload_finite_mask` (there the small wire
+    arrays are scanned instead of decoded buffers)."""
+    leaves = jax.tree_util.tree_leaves(tree_stacked)
+    if not leaves:
+        return jnp.ones((0,), jnp.float32)
+    ok = jnp.ones((leaves[0].shape[0],), bool)
+    for a in leaves:
+        ok = ok & jnp.all(jnp.isfinite(a.astype(jnp.float32)),
+                          axis=tuple(range(1, a.ndim)))
+    return ok.astype(jnp.float32)
+
+
+def weighted_client_sum(tree_stacked, weights: jax.Array):
+    """NaN-safe weighted sum over the leading client axis: ``sum_i w_i *
+    x_i`` with zero-weight clients EXCLUDED via ``where`` — a poisoned
+    client's NaN/Inf would survive a multiply-by-zero mask (NaN * 0 is
+    NaN).  ``weights`` are arbitrary non-negative floats (the async
+    server's staleness weights, not just 0/1 masks).  The caller divides
+    by its own weight total — the sum form is what folds into the
+    arrival-ordered server's delay buffer (DESIGN.md §11)."""
+
+    def one(a):
+        wb = weights.reshape(
+            (a.shape[0],) + (1,) * (a.ndim - 1)).astype(a.dtype)
+        return jnp.sum(jnp.where(wb > 0, a, 0) * wb, axis=0)
 
     return jax.tree.map(one, tree_stacked)
 
@@ -113,7 +146,20 @@ def compressed_average(key: jax.Array, params_stacked,
     else:
         compressed = jax.vmap(lambda k, p: up_plan.apply(k, p))(
             client_keys, params_stacked)
-        ybar = masked_client_mean(compressed, mask)
+        # fail-fast payload validation (mask-and-count, mirroring
+        # reduce_payload_mean): exclude non-finite clients from numerator
+        # AND denominator; select the historic expression when everything
+        # is finite so that path stays bit-identical
+        fin = stacked_finite_mask(compressed)
+        all_ok = jnp.min(fin) > 0 if fin.shape[0] else jnp.bool_(True)
+        w = fin if mask is None else mask.reshape(-1).astype(jnp.float32) * fin
+        denom = jnp.sum(w)
+        guarded = jax.tree.map(
+            lambda s: s / jnp.where(denom > 0, denom, 1.0).astype(s.dtype),
+            weighted_client_sum(compressed, w))
+        plain = masked_client_mean(compressed, mask)
+        ybar = jax.tree.map(lambda p, g: jnp.where(all_ok, p, g),
+                            plain, guarded)
     return down_plan.apply(k_master, ybar)
 
 

@@ -59,6 +59,7 @@ __all__ = [
     "unravel", "bucketize", "unbucketize", "seeds_of", "supports_flat",
     "supports_fused_reduce", "flat_tree_apply", "pack_tree", "unpack_tree",
     "pack_tree_qsgd", "pack_tree_natural", "unpack_tree_qsgd",
+    "payload_finite_mask", "sanitize_payload", "reduce_payload_acc",
     "reduce_payload_mean", "payload_wire_bits", "packed_wire_bits",
 ]
 
@@ -317,6 +318,55 @@ def supports_fused_reduce(payload) -> bool:
         and getattr(payload, "layout", None) is not None
 
 
+def payload_finite_mask(payload) -> jax.Array:
+    """(n,) 0/1 float32 over a STACKED flat-engine payload batch: 1 where
+    client i's message decodes entirely finite.  A poisoned client shows
+    up on the wire as non-finite bucket norms (QSGD: the norm is a max /
+    sum over the client's buffer) or as biased-exponent code 255 (natural:
+    ``(exp << 23)`` bitcasts to ±Inf) — both are O(n * wire) scans of the
+    SMALL wire arrays, not of decoded f32 buffers."""
+    if isinstance(payload, QSGDPayload):
+        ok = jnp.all(jnp.isfinite(payload.norms),
+                     axis=tuple(range(1, payload.norms.ndim)))
+    else:
+        ok = jnp.all(payload.exps != jnp.uint8(255),
+                     axis=tuple(range(1, payload.exps.ndim)))
+    return ok.astype(jnp.float32)
+
+
+def sanitize_payload(payload, finite_mask: jax.Array):
+    """Zero the scale-carrying wire arrays of non-finite clients (QSGD
+    norms -> 0.0, natural exponent codes -> 0, which decodes to ±0.0).
+
+    Required in ADDITION to zeroing the client's reduce weight: the
+    kernels accumulate ``decode_i * w_i``, and NaN * 0 is still NaN — a
+    weight alone cannot keep a poisoned payload out of the accumulator.
+    For all-finite payloads the ``where`` selects every original element,
+    so the sanitized payload is bit-identical to the input."""
+    if isinstance(payload, QSGDPayload):
+        m = finite_mask.reshape((-1,) + (1,) * (payload.norms.ndim - 1))
+        return dataclasses.replace(
+            payload, norms=jnp.where(m > 0, payload.norms, 0.0))
+    m = finite_mask.reshape((-1,) + (1,) * (payload.exps.ndim - 1))
+    return dataclasses.replace(
+        payload, exps=jnp.where(m > 0, payload.exps, jnp.uint8(0)))
+
+
+def reduce_payload_acc(payload, weights) -> jax.Array:
+    """The RAW (n_buckets, bucket) float32 accumulator ``sum_i w_i *
+    decode(payload_i)`` of a stacked flat-engine payload batch — the
+    incremental-fold half of :func:`reduce_payload_mean`, exposed so the
+    arrival-ordered async server (repro.core.async_engine, DESIGN.md §11)
+    can fold arrival cohorts into ring-buffer slots and divide by the
+    total weight only when a round completes.  ``weights`` is an (n,)
+    float32 vector (staleness weights are arbitrary non-negative floats,
+    not just 0/1 masks); pass ``None`` for the unweighted sum."""
+    if isinstance(payload, QSGDPayload):
+        return qsgd_reduce(payload.codes, payload.norms, weights,
+                           levels=payload.levels)
+    return natural_reduce(payload.exps, payload.signs, weights)
+
+
 def reduce_payload_mean(payload, mask=None):
     """Fused decode->reduce: the (optionally mask-weighted) MEAN pytree of
     a STACKED flat-engine payload batch, in ONE pass (DESIGN.md §10).
@@ -327,6 +377,18 @@ def reduce_payload_mean(payload, mask=None):
     static ``layout`` is the shared one-model :class:`FlatLayout`.
     ``mask`` (optional (n,) 0/1 array) restricts the mean to a sampled
     participant subset: ``sum_i m_i x_i / sum_i m_i``.
+
+    Fail-fast payload validation (mask-and-count, not checkify — the
+    guard must run inside jitted scans): clients whose message decodes
+    non-finite (:func:`payload_finite_mask`) are excluded from BOTH the
+    numerator (their wire arrays are sanitized — NaN * 0 weight is still
+    NaN) and the denominator, so one corrupt client shrinks the mean's
+    support instead of NaN-ing the fleet.  If every contributor is
+    excluded the denominator clamps to 1 and the mean degrades to the
+    zeros tree (the caller's cached-target fallback handles the rest).
+    For all-finite payloads the guard is bit-free: sanitize selects the
+    original elements, the weights multiply by exactly 1.0, and the
+    summed denominator equals the historic count/mask sum bit-for-bit.
 
     The kernel accumulates ``code_ij * scale_j`` client-by-client into a
     single (n_buckets, bucket) float32 accumulator — no per-client
@@ -345,19 +407,17 @@ def reduce_payload_mean(payload, mask=None):
     layout = payload.layout
     if layout.d == 0:
         return unravel(layout, jnp.zeros((0,), jnp.float32))
+    fin = payload_finite_mask(payload)
     if mask is None:
-        weights = None
-        n = jax.tree_util.tree_leaves(payload)[0].shape[0]
-        denom = jnp.float32(n)
+        weights = fin
     else:
-        weights = mask.reshape(-1).astype(jnp.float32)
-        denom = jnp.sum(weights)
-    if isinstance(payload, QSGDPayload):
-        acc = qsgd_reduce(payload.codes, payload.norms, weights,
-                          levels=payload.levels)
-    else:
-        acc = natural_reduce(payload.exps, payload.signs, weights)
-    return unravel(layout, unbucketize(acc / denom, layout.d))
+        weights = mask.reshape(-1).astype(jnp.float32) * fin
+    payload = sanitize_payload(payload, fin)
+    denom = jnp.sum(weights)
+    acc = reduce_payload_acc(payload, weights)
+    return unravel(layout,
+                   unbucketize(acc / jnp.where(denom > 0, denom, 1.0),
+                               layout.d))
 
 
 def payload_wire_bits(payload) -> int:

@@ -43,6 +43,7 @@ from repro.core import (Compressor, Identity, L2GDHyper, draw_xi, init_state,
 from repro.core.codec import _UNSET, CompressionPlan, make_plan
 from repro.core.rollout import (participant_count, participation_masks,
                                 rollout_l2gd)
+from repro.fl.faults import FaultPlan
 from repro.fl.ledger import BitsLedger
 
 __all__ = ["L2GDRun", "run_l2gd"]
@@ -65,6 +66,7 @@ class L2GDRun:
     n_agg_comm: int = 0
     n_agg_cached: int = 0
     xis: Optional[np.ndarray] = None   # realized xi trace (both modes)
+    fault_stats: Optional[dict] = None  # {event: total} when faults= given
 
 
 def _resolve_plans(client_comp, master_comp, plan, one_client):
@@ -107,7 +109,8 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
              seed=_UNSET, jit: bool = True,
              packed_uplink=_UNSET, mode: str = "scan",
              chunk: Optional[int] = None, xi_trace=None,
-             participation: Optional[float] = None) -> L2GDRun:
+             participation: Optional[float] = None,
+             faults: Optional[FaultPlan] = None) -> L2GDRun:
     """Run Algorithm 1 for ``steps`` iterations.
 
     batch_fn(step) -> per-client batch pytree (leading client axis n);
@@ -146,6 +149,18 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
     ``downlink_plan.round_bits()`` — both read from the payload spec
     (DESIGN.md §3).
 
+    ``faults`` (optional :class:`repro.fl.faults.FaultPlan`) runs the
+    protocol on the arrival-ordered async engine
+    (:func:`repro.core.async_engine.rollout_l2gd_async`, DESIGN.md §11):
+    per-round latency/drop/crash events from the fourth RNG stream,
+    staleness-weighted straggler folds, quorum cutoff.  Scan mode only
+    (the engine IS a scan; there is no host reference for it).  The
+    ledger then charges rounds by the realized delivery counts
+    (:meth:`~repro.fl.ledger.BitsLedger.replay_fault_trace`, honouring
+    ``faults.charge_dropped``) and ``run.fault_stats`` totals the event
+    counters.  With ``FaultPlan()`` (the null plan) the run is bit-exact
+    with ``faults=None``.
+
     Deprecated shims: ``packed_uplink=`` maps to
     ``plan=make_plan(client_comp, one_client, transport="packed")``;
     ``seed=`` predates the unified PRNG contract (module docstring) and
@@ -153,6 +168,9 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
     """
     if mode not in MODES:
         raise ValueError(f"unknown mode {mode!r}; have {MODES}")
+    if faults is not None and mode != "scan":
+        raise ValueError("faults= requires mode='scan': the async engine "
+                         "is the scanned rollout (repro.core.async_engine)")
     if seed is not _UNSET:
         warnings.warn(
             "run_l2gd(seed=) is deprecated: xi is drawn from `key` (split "
@@ -201,6 +219,10 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
         _run_host(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
                   down_plan, up_bits, down_bits, eval_fn, eval_every, jit,
                   xi_trace, participation)
+    elif faults is not None:
+        _run_scan_async(run, key, state, grad_fn, hp, batch_fn, steps,
+                        up_plan, down_plan, up_bits, down_bits, eval_fn,
+                        eval_every, chunk, xi_trace, participation, faults)
     else:
         _run_scan(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
                   down_plan, up_bits, down_bits, eval_fn, eval_every, chunk,
@@ -327,3 +349,86 @@ def _run_scan(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
             run.evals.append((done, float(eval_fn(state.params))))
     run.state = state
     run.xis = np.concatenate(xis_all)
+
+
+def _run_scan_async(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
+                    down_plan, up_bits, down_bits, eval_fn, eval_every,
+                    chunk, xi_trace, participation, faults):
+    """The faulty twin of :func:`_run_scan`: chunked
+    :func:`repro.core.async_engine.rollout_l2gd_async` dispatches, with
+    the server's delay buffer (``AsyncAggState``) threaded across chunks
+    exactly like ``state`` — both carries index the same global
+    step/round clocks, so chunking is invisible to the fault
+    realization.  The ledger is replayed from the realized delivery
+    counts (``replay_fault_trace``), honouring ``faults.charge_dropped``.
+    """
+    # function-local import: repro.core.__init__ re-exports the async
+    # engine, whose module imports repro.fl.faults — a top-level import
+    # here would close that cycle while repro.core is mid-initialization
+    from repro.core.async_engine import (EVENT_FIELDS, init_async_state,
+                                         rollout_l2gd_async)
+
+    const = _constant_batches(batch_fn, steps)
+    if chunk is None:
+        if eval_fn is not None:
+            chunk = eval_every
+        elif const:
+            chunk = steps
+        else:
+            chunk = min(steps, _DEFAULT_BATCH_CHUNK)
+    chunk = max(1, min(int(chunk), steps))
+
+    # build the (empty) delay buffer ONCE, eagerly: passing None for the
+    # first chunk and an array-carry for the rest would recompile
+    agg = init_async_state(state.params, up_plan, faults)
+
+    rolled = {}
+
+    def _roll(length):
+        if length not in rolled:
+            rolled[length] = jax.jit(functools.partial(
+                rollout_l2gd_async, grad_fn=grad_fn, fault_plan=faults,
+                steps=length, client_comp=up_plan, master_comp=down_plan,
+                batch_axis=None if const else 0,
+                participation=participation))
+        return rolled[length]
+
+    totals = {name: 0 for name in EVENT_FIELDS}
+    done = 0
+    xi_prev = 1  # Algorithm 1 input: xi_{-1} = 1
+    xis_all = []
+    while done < steps:
+        length = min(chunk, steps - done)
+        if const:
+            batches = batch_fn(done)
+        else:
+            batches = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[batch_fn(k) for k in range(done, done + length)])
+        forced = None if xi_trace is None else \
+            jnp.asarray(xi_trace[done:done + length])
+        state, agg, trace = _roll(length)(key, state, hp, batches, forced,
+                                          agg_state=agg)
+
+        xis = np.asarray(trace.xis)
+        losses = np.asarray(trace.losses)
+        events = np.asarray(trace.events)
+        xis_all.append(xis)
+        run.losses.extend((done + i, float(losses[i]))
+                          for i in range(length))
+        run.n_local += int(np.sum(xis == 0))
+        prevs = np.concatenate(([xi_prev], xis[:-1]))
+        run.n_agg_comm += int(np.sum((xis == 1) & (prevs == 0)))
+        run.n_agg_cached += int(np.sum((xis == 1) & (prevs == 1)))
+        for i, name in enumerate(EVENT_FIELDS):
+            totals[name] += int(events[:, i].sum())
+        xi_prev = run.ledger.replay_fault_trace(
+            xis, events[:, 0], events[:, 1], up_bits, down_bits,
+            xi_prev=xi_prev, start_step=done,
+            charge_dropped=faults.charge_dropped)
+        done += length
+        if eval_fn is not None and done % eval_every == 0:
+            run.evals.append((done, float(eval_fn(state.params))))
+    run.state = state
+    run.xis = np.concatenate(xis_all)
+    run.fault_stats = totals

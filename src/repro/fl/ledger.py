@@ -95,3 +95,42 @@ class BitsLedger:
                                   step=start_step + i)
             xi_prev = xi
         return xi_prev
+
+    def replay_fault_trace(self, xis, sent, delivered,
+                           uplink_bits_one_client: float,
+                           downlink_bits: float, *, xi_prev: int = 1,
+                           start_step: int = 0,
+                           charge_dropped: bool = True) -> int:
+        """Replay an async fault trace (repro.core.async_engine) into the
+        ledger — the delivery-charging policy of DESIGN.md §11.
+
+        ``sent`` / ``delivered`` are the per-step event counts from
+        ``AsyncRolloutTrace.events``: payloads transmitted by alive
+        participants, and the subset the server eventually folds.  Rounds
+        still happen exactly on local->aggregation xi transitions; the
+        fault trace only changes HOW MUCH each round costs:
+
+          * uplink:   (sent/n) * round_bits under ``charge_dropped=True``
+            — dropped and evicted payloads consumed client bandwidth even
+            though the server never folds them; (delivered/n) under
+            ``False`` (charge only what arrives in time).
+          * downlink: always (sent/n) * round_bits — every alive
+            participant receives the broadcast; crashed clients neither
+            send nor receive, so they are never charged on either
+            direction under either policy.
+
+        With no faults and full delivery this reduces to
+        :meth:`replay_xi_trace` bit-for-bit (sent == delivered == s every
+        round).  Returns the final xi, like :meth:`replay_xi_trace`.
+        """
+        n = self.n_clients
+        for i, xi in enumerate(int(x) for x in xis):
+            if xi == 1 and xi_prev == 0:
+                up_count = int(sent[i]) if charge_dropped \
+                    else int(delivered[i])
+                self.record_round(
+                    (up_count / n) * uplink_bits_one_client,
+                    (int(sent[i]) / n) * downlink_bits,
+                    step=start_step + i)
+            xi_prev = xi
+        return xi_prev

@@ -28,7 +28,8 @@ from repro.models import (decode_step, forward, init_caches, init_params,
                           loss_fn)
 
 __all__ = ["input_specs", "state_specs", "cache_specs", "build_train_step",
-           "build_rollout_fn", "build_sharded_rollout_fn", "build_average_fn",
+           "build_rollout_fn", "build_async_rollout_fn",
+           "build_sharded_rollout_fn", "build_average_fn",
            "build_prefill_step", "build_serve_step", "stacked_param_shapes"]
 
 _I32 = jnp.int32
@@ -253,6 +254,55 @@ def build_rollout_fn(cfg: ArchConfig, hp: L2GDHyper,
 
     if donate:
         return jax.jit(rollout, donate_argnums=(0,))
+    return rollout
+
+
+def build_async_rollout_fn(cfg: ArchConfig, hp: L2GDHyper,
+                           fault_plan=None,
+                           client_comp: Compressor = Identity(),
+                           master_comp: Compressor = Identity(),
+                           plans=None, length: int = 8, unroll: int = 1,
+                           donate: bool = True):
+    """The :func:`build_rollout_fn` face of the arrival-ordered async
+    engine (:func:`repro.core.async_engine.rollout_l2gd_async`,
+    DESIGN.md §11): ``length`` faulty rounds per dispatch, fault events
+    drawn on device from the plan's fourth RNG stream.
+
+    The returned ``rollout(state, agg, batches, key_data)`` threads TWO
+    carries — the :class:`~repro.core.l2gd.L2GDState` and the server's
+    :class:`~repro.core.async_engine.AsyncAggState` delay buffer (build
+    the initial one with :func:`repro.core.async_engine.
+    init_async_state`) — and returns ``(state, agg,
+    AsyncRolloutTrace)``; the host replays ``trace.xis`` +
+    ``trace.events`` into the ledger
+    (:meth:`repro.fl.ledger.BitsLedger.replay_fault_trace`).  Both
+    carries are donated under ``donate=True``: params AND delay buffer
+    buffers are aliased input->output across chunks."""
+    from repro.core.async_engine import rollout_l2gd_async
+    from repro.fl.faults import FaultPlan
+    if fault_plan is None:
+        fault_plan = FaultPlan()
+    if plans is None:
+        shapes = param_shapes(cfg)
+        plans = (make_plan(client_comp, shapes, transport="leafwise"),
+                 make_plan(master_comp, shapes, transport="leafwise"))
+    up_plan, down_plan = plans
+
+    def grad_fn(params_i, batch_i):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch_i), has_aux=True)(params_i)
+        return loss, grads
+
+    def rollout(state: L2GDState, agg, batches, key_data: jax.Array):
+        key = jax.random.wrap_key_data(key_data)
+        return rollout_l2gd_async(key, state, hp, batches, grad_fn=grad_fn,
+                                  fault_plan=fault_plan, steps=length,
+                                  client_comp=up_plan,
+                                  master_comp=down_plan, unroll=unroll,
+                                  agg_state=agg)
+
+    if donate:
+        return jax.jit(rollout, donate_argnums=(0, 1))
     return rollout
 
 

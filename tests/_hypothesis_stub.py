@@ -29,6 +29,18 @@ class strategies:
     def floats(min_value, max_value, **kwargs):
         return _Strategy(lambda rng: rng.uniform(min_value, max_value))
 
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def sample(rng):
+            size = rng.randint(min_size, max_size)
+            return [elements.sample(rng) for _ in range(size)]
+
+        return _Strategy(sample)
+
 
 def settings(**kwargs):
     max_examples = kwargs.get("max_examples", _DEFAULT_EXAMPLES)

@@ -1,0 +1,523 @@
+"""Arrival-ordered async engine (DESIGN.md §11): the null-fault keystone
+(async == sync BIT-FOR-BIT at zero latency / zero drops / full quorum,
+all codecs + forced xi + partial participation), deterministic chaos
+replay, event-counter conservation, staleness/eviction semantics, the
+finite-payload guard, the fault-aware ledger replay, and the driver /
+launch faces."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep — deterministic stub fallback
+    from _hypothesis_stub import given, settings, strategies as st
+
+from conftest import DIM as D, N_CLIENTS as N, quad_batch, quad_grad_fn, \
+    zero_params
+from repro.core import (Identity, L2GDHyper, init_state, make_plan,
+                        rollout_l2gd)
+from repro.core.async_engine import (EVENT_FIELDS, fault_totals,
+                                     init_async_state, rollout_l2gd_async)
+from repro.core.compressors import QSGD, Natural
+from repro.fl import FaultPlan, fault_draws, geometric_latency_probs, \
+    run_l2gd
+from repro.fl.faults import FAULT_STREAM_TAG
+from repro.fl.ledger import BitsLedger
+
+BATCH = quad_batch()
+KEY = jax.random.PRNGKey(1)
+HP = L2GDHyper(eta=0.3, lam=1.0, p=0.5, n=N)
+_ONE = {"w": jax.ShapeDtypeStruct((D,), jnp.float32)}
+
+CODECS = {
+    "identity-leafwise": lambda: (Identity(), Identity()),
+    "qsgd-flat": lambda: (make_plan(QSGD(levels=7), _ONE, transport="flat"),
+                          make_plan(QSGD(levels=7), _ONE,
+                                    transport="flat")),
+    "qsgd-packed": lambda: (make_plan(QSGD(levels=7), _ONE,
+                                      transport="packed"), Identity()),
+    "natural-flat": lambda: (make_plan(Natural(), _ONE, transport="flat"),
+                             make_plan(Natural(), _ONE, transport="flat")),
+    "qsgd-leafwise": lambda: (make_plan(QSGD(levels=7), _ONE,
+                                        transport="leafwise"), Identity()),
+}
+
+CHAOS = FaultPlan(max_delay=2, latency_probs=geometric_latency_probs(1.0, 4),
+                  drop_rate=0.2, crash_rate=0.1, quorum=0.6)
+
+
+def _sync(steps=24, cc=Identity(), mc=Identity(), part=None, xi_trace=None,
+          key=KEY):
+    return rollout_l2gd(key, init_state(zero_params()), HP, BATCH,
+                        xi_trace, steps=None if xi_trace is not None
+                        else steps, grad_fn=quad_grad_fn, client_comp=cc,
+                        master_comp=mc, batch_axis=None,
+                        participation=part)
+
+
+def _async(steps=24, cc=Identity(), mc=Identity(), part=None, plan=None,
+           xi_trace=None, key=KEY, state=None, agg=None):
+    return rollout_l2gd_async(
+        key, state if state is not None else init_state(zero_params()),
+        HP, BATCH, xi_trace, grad_fn=quad_grad_fn,
+        fault_plan=plan if plan is not None else FaultPlan(),
+        steps=None if xi_trace is not None else steps, client_comp=cc,
+        master_comp=mc, batch_axis=None, participation=part,
+        agg_state=agg)
+
+
+def _tree_eq(x, y):
+    return all(np.array_equal(np.asarray(a), np.asarray(b), equal_nan=True)
+               for a, b in zip(jax.tree.leaves(x), jax.tree.leaves(y)))
+
+
+def _ev(trace):
+    return {f: np.asarray(trace.events)[:, i]
+            for i, f in enumerate(EVENT_FIELDS)}
+
+
+# ---------------------------------------------------------------------------
+# keystone: null faults == synchronous engine, bit for bit
+
+
+@pytest.mark.parametrize("codec", list(CODECS))
+@pytest.mark.parametrize("part", [None, 0.5])
+@pytest.mark.parametrize("delay", [0, 2])
+def test_null_fault_bit_exact(codec, part, delay):
+    """Zero latency + zero drops + quorum n: the async engine IS the
+    synchronous scan — params, cache, losses, xis, branches — for every
+    transport, with and without partial participation, at any buffer
+    depth (the delay buffer only ever folds exact zeros)."""
+    cc, mc = CODECS[codec]()
+    null = FaultPlan(max_delay=delay, staleness_decay=0.7)
+    assert null.is_null
+    fs, tr = _sync(cc=cc, mc=mc, part=part)
+    fa, agg, tra = _async(cc=cc, mc=mc, part=part, plan=null)
+    assert _tree_eq(fs.params, fa.params)
+    assert _tree_eq(fs.cache, fa.cache)
+    np.testing.assert_array_equal(np.asarray(tr.losses),
+                                  np.asarray(tra.losses))
+    np.testing.assert_array_equal(np.asarray(tr.xis), np.asarray(tra.xis))
+    np.testing.assert_array_equal(np.asarray(tr.branches),
+                                  np.asarray(tra.branches))
+    tot = fault_totals(tra)
+    assert tot["dropped"] == tot["evicted"] == tot["crashed"] == 0
+    assert tot["stale"] == tot["rejected"] == 0
+    assert tot["sent"] == tot["delivered"] == tot["fresh"]
+    assert int(agg.rnd) == int(tra.n_agg_comm)
+    # nothing ever buffered
+    assert float(jnp.sum(agg.buf_w)) == 0.0
+    assert int(jnp.sum(agg.buf_cnt)) == 0
+
+
+def test_null_fault_bit_exact_forced_xi():
+    """The keystone under a forced xi trace (protocol realization pinned
+    by the caller, not drawn from the key)."""
+    xi = jnp.asarray([1, 0, 0, 1, 1, 0, 1, 0, 0, 0, 1, 1], jnp.int32)
+    cc, mc = CODECS["qsgd-flat"]()
+    fs, tr = _sync(cc=cc, mc=mc, xi_trace=xi)
+    fa, _, tra = _async(cc=cc, mc=mc, xi_trace=xi)
+    assert _tree_eq(fs.params, fa.params)
+    np.testing.assert_array_equal(np.asarray(tr.losses),
+                                  np.asarray(tra.losses))
+    np.testing.assert_array_equal(np.asarray(tra.xis), np.asarray(xi))
+
+
+# ---------------------------------------------------------------------------
+# determinism + conservation under chaos
+
+
+@pytest.mark.parametrize("codec", ["qsgd-flat", "identity-leafwise"])
+def test_chaos_deterministic_replay(codec):
+    """A faulty run is a pure function of (key, FaultPlan): replaying the
+    same key reproduces trajectory, fault trace and buffer state
+    bit-for-bit; a different key realizes different faults."""
+    cc, mc = CODECS[codec]()
+    f1, g1, t1 = _async(cc=cc, mc=mc, plan=CHAOS)
+    f2, g2, t2 = _async(cc=cc, mc=mc, plan=CHAOS)
+    assert _tree_eq(f1.params, f2.params)
+    assert _tree_eq(g1.buf, g2.buf)
+    np.testing.assert_array_equal(np.asarray(t1.events),
+                                  np.asarray(t2.events))
+    np.testing.assert_array_equal(np.asarray(t1.losses),
+                                  np.asarray(t2.losses))
+    _, _, t3 = _async(cc=cc, mc=mc, plan=CHAOS, key=jax.random.PRNGKey(9))
+    assert not np.array_equal(np.asarray(t1.events), np.asarray(t3.events))
+
+
+def test_event_conservation():
+    """Every transmitted payload is accounted for exactly once:
+    sent == delivered + dropped + evicted + rejected, per step; crashed
+    participants never send."""
+    for plan in (CHAOS, FaultPlan(drop_rate=0.5),
+                 FaultPlan(max_delay=1, latency_probs=(0.3, 0.3, 0.4),
+                           quorum=0.5, crash_rate=0.3)):
+        _, _, tr = _async(steps=40, plan=plan)
+        ev = _ev(tr)
+        np.testing.assert_array_equal(
+            ev["sent"], ev["delivered"] + ev["dropped"] + ev["evicted"]
+            + ev["rejected"])
+        # faults only fire on fresh comm rounds
+        branches = np.asarray(tr.branches)
+        assert (ev["sent"][branches != 1] == 0).all()
+        assert (ev["crashed"][branches != 1] == 0).all()
+        # sent + crashed = the round's participants (full participation)
+        comm = branches == 1
+        np.testing.assert_array_equal(ev["sent"][comm] + ev["crashed"][comm],
+                                      np.full(int(comm.sum()), N))
+
+
+def test_fault_draws_stream_independent():
+    """The fault stream is the same function of (key, global step)
+    regardless of windowing — chunk-invariant like xi/noise — and
+    disjoint from the xi stream's step folds."""
+    xi_key, _ = jax.random.split(KEY)
+    ks = jnp.arange(10, dtype=jnp.int32)
+    a = fault_draws(xi_key, ks, N, CHAOS)
+    b = fault_draws(xi_key, ks[4:], N, CHAOS)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x)[4:], np.asarray(y))
+    assert int(FAULT_STREAM_TAG) == 2 ** 32 - 2
+
+
+# ---------------------------------------------------------------------------
+# fault semantics: drops, staleness, eviction, quorum
+
+
+def test_all_drops_degrade_gracefully():
+    """drop_rate=1.0: every uplink is lost, every round is empty — the
+    masked mean never divides by zero, the protocol keeps aggregating
+    against the cached target, and the trajectory stays finite."""
+    fin, _, tr = _async(steps=30, plan=FaultPlan(drop_rate=1.0))
+    ev = _ev(tr)
+    assert ev["delivered"].sum() == 0
+    assert ev["dropped"].sum() == ev["sent"].sum() > 0
+    for leaf in jax.tree.leaves(fin.params):
+        assert np.isfinite(np.asarray(leaf)).all()
+    # empty rounds fall back to the cache: identical to a run whose
+    # fresh rounds were never communicated (cache stays the init mean)
+    assert _tree_eq(fin.cache, init_state(zero_params()).cache)
+
+
+def test_staleness_buffer_and_eviction():
+    """latency == 1 for everyone with a 1-member quorum: one fresh fold
+    per round, the rest land one round late (stale) when D >= 1 and are
+    evicted when D == 0."""
+    lat1 = (0.0, 1.0)  # point mass at delay 1
+    buffered = FaultPlan(max_delay=1, latency_probs=lat1, quorum=1 / N)
+    _, agg, tr = _async(steps=30, plan=buffered)
+    ev = _ev(tr)
+    comm = np.asarray(tr.branches) == 1
+    # quorum cutoff: exactly one fresh arrival per round
+    np.testing.assert_array_equal(ev["fresh"][comm],
+                                  np.ones(int(comm.sum())))
+    assert ev["stale"].sum() > 0
+    assert ev["evicted"].sum() == 0
+
+    evicting = FaultPlan(max_delay=0, latency_probs=lat1, quorum=1 / N)
+    _, _, tr0 = _async(steps=30, plan=evicting)
+    ev0 = _ev(tr0)
+    assert ev0["stale"].sum() == 0
+    assert ev0["evicted"].sum() > 0
+    np.testing.assert_array_equal(ev0["evicted"][comm],
+                                  np.full(int(comm.sum()), N - 1))
+
+
+def test_staleness_weights_table():
+    plan = FaultPlan(max_delay=3, staleness_decay=0.5)
+    np.testing.assert_allclose(plan.staleness_weights(),
+                               [1.0, 0.5, 0.25, 0.125])
+    assert plan.staleness_weights()[0] == 1.0  # fresh folds are unweighted
+
+
+def test_quorum_count_clamps():
+    plan = FaultPlan(quorum=0.6)
+    assert plan.quorum_count(5) == 3
+    assert plan.quorum_count(1) == 1
+    assert FaultPlan(quorum=0.01).quorum_count(8) == 1  # never waits for 0
+    assert FaultPlan(quorum=1.0).quorum_count(8) == 8
+
+
+def test_faultplan_validation():
+    with pytest.raises(ValueError, match="max_delay"):
+        FaultPlan(max_delay=-1)
+    with pytest.raises(ValueError, match="latency_probs"):
+        FaultPlan(latency_probs=(0.5, 0.4))
+    with pytest.raises(ValueError, match="drop_rate"):
+        FaultPlan(drop_rate=1.5)
+    with pytest.raises(ValueError, match="quorum"):
+        FaultPlan(quorum=0.0)
+    with pytest.raises(ValueError, match="staleness_decay"):
+        FaultPlan(staleness_decay=0.0)
+    assert FaultPlan().is_null and not CHAOS.is_null
+
+
+def test_geometric_latency_probs():
+    probs = geometric_latency_probs(2.0, 4)
+    assert len(probs) == 5 and abs(sum(probs) - 1.0) < 1e-9
+    assert probs[0] > probs[1] > probs[4] > 0
+    assert geometric_latency_probs(0.0, 3) == (1.0, 0.0, 0.0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# fail-fast payload validation (satellite: finite guard)
+
+
+@pytest.mark.parametrize("codec", ["qsgd-flat", "natural-flat",
+                                   "identity-leafwise"])
+def test_finite_guard_excludes_poisoned_client(codec):
+    """A client whose params go non-finite is excluded mask-and-count
+    from the aggregation target instead of NaN-ing the fleet — on the
+    fused wire (non-finite norms / exp-255 codes) and leafwise."""
+    cc, mc = CODECS[codec]()
+    params = zero_params()
+    params["w"] = params["w"].at[1].set(jnp.inf)
+    state = init_state(zero_params())  # finite cache, poisoned params
+    state = state._replace(params=params)
+    # xi 0 -> 1 transition forces a FRESH comm round (xi_prev starts at 1)
+    xi = jnp.asarray([0, 1], jnp.int32)
+    fa, _, tra = _async(xi_trace=xi, cc=cc, mc=mc, state=state)
+    tot = fault_totals(tra)
+    assert tot["rejected"] == 1
+    assert tot["delivered"] == N - 1
+    for leaf in jax.tree.leaves(fa.cache):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_finite_guard_sync_reduce():
+    """The synchronous reduce paths get the same guard: a poisoned
+    client degrades compressed_average gracefully for fused and
+    leafwise transports."""
+    from repro.core.aggregation import compressed_average
+    params = zero_params()
+    params["w"] = params["w"].at[0].set(jnp.nan) + 1.0
+    for codec in ("qsgd-flat", "identity-leafwise"):
+        cc, mc = CODECS[codec]()
+        ybar = compressed_average(KEY, params, cc, mc)
+        assert np.isfinite(np.asarray(ybar["w"])).all(), codec
+    # all clients poisoned: clamped denominator, still finite (zeros)
+    params["w"] = jnp.full((N, D), jnp.nan)
+    ybar = compressed_average(KEY, params, *CODECS["qsgd-flat"]())
+    assert np.isfinite(np.asarray(ybar["w"])).all()
+
+
+# ---------------------------------------------------------------------------
+# chunk threading
+
+
+def test_chunked_equals_oneshot():
+    """Threading (state, agg_state) across chunks reproduces the
+    one-shot rollout bit-for-bit — both carries index the same global
+    step/round clocks."""
+    cc, mc = CODECS["qsgd-flat"]()
+    fs, ag, tr = _async(steps=24, cc=cc, mc=mc, plan=CHAOS)
+    st, agg, evs = init_state(zero_params()), None, []
+    for _ in range(4):
+        st, agg, t = _async(steps=6, cc=cc, mc=mc, plan=CHAOS, state=st,
+                            agg=agg)
+        evs.append(np.asarray(t.events))
+    assert _tree_eq(fs.params, st.params)
+    assert _tree_eq(ag.buf, agg.buf)
+    assert int(ag.rnd) == int(agg.rnd)
+    np.testing.assert_array_equal(np.asarray(tr.events),
+                                  np.concatenate(evs))
+
+
+# ---------------------------------------------------------------------------
+# ledger: fault-aware replay (satellite: property tests)
+
+
+def _hand_count(xis, sent, delivered, n, ub, db, charge_dropped, xi_prev=1):
+    up = down = 0.0
+    rounds = []
+    for i, xi in enumerate(xis):
+        if xi == 1 and xi_prev == 0:
+            c = sent[i] if charge_dropped else delivered[i]
+            up += (c / n) * ub
+            down += (sent[i] / n) * db
+            rounds.append(i)
+        xi_prev = xi
+    return up, down, rounds
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 1), min_size=1, max_size=40),
+       st.integers(1, 8), st.booleans(), st.integers(0, 2 ** 31))
+def test_replay_fault_trace_matches_hand_count(xis, n, charge_dropped,
+                                               seed):
+    """Property: ledger bits equal a hand-counted sum over an arbitrary
+    (xi, sent, delivered) trace under either charging policy."""
+    rng = np.random.default_rng(seed)
+    sent = rng.integers(0, n + 1, len(xis))
+    delivered = np.minimum(rng.integers(0, n + 1, len(xis)), sent)
+    ub, db = 1000.0, 300.0
+    led = BitsLedger(n)
+    led.replay_fault_trace(xis, sent, delivered, ub, db,
+                           charge_dropped=charge_dropped)
+    up, down, rounds = _hand_count(xis, sent, delivered, n, ub, db,
+                                   charge_dropped)
+    assert led.uplink_bits_per_client == pytest.approx(up)
+    assert led.downlink_bits_per_client == pytest.approx(down)
+    assert led.rounds == len(rounds)
+    assert [h["step"] for h in led.history] == rounds
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 1), min_size=1, max_size=40),
+       st.floats(0.1, 1.0), st.integers(2, 8))
+def test_replay_xi_trace_participation_matches_hand_count(xis, frac, n):
+    """Property: replay_xi_trace(participation=f) charges every round at
+    participant_count(n, f)/n of a full round — including the s == n
+    short-circuit, where it matches participation=None bit-for-bit."""
+    from repro.core.rollout import participant_count
+    ub, db = 640.0, 160.0
+    led = BitsLedger(n)
+    led.replay_xi_trace(xis, ub, db, participation=frac)
+    s = participant_count(n, frac)
+    scale = s / n
+    up, down, rounds = _hand_count(
+        xis, [n] * len(xis), [n] * len(xis), n, scale * ub, scale * db,
+        True)
+    assert led.uplink_bits_per_client == pytest.approx(up)
+    assert led.downlink_bits_per_client == pytest.approx(down)
+    if s == n:
+        full = BitsLedger(n)
+        full.replay_xi_trace(xis, ub, db)
+        assert led.history == full.history
+
+
+def test_replay_fault_trace_edges():
+    """All-dropped round: uplink charged only under charge_dropped=True,
+    downlink still reaches the (alive) senders; a fully crashed round
+    charges nothing under either policy; null faults reduce to
+    replay_xi_trace bit-for-bit."""
+    xis = [0, 1, 0, 1]
+    sent, delivered = [0, 4, 0, 0], [0, 0, 0, 0]
+    a = BitsLedger(4)
+    a.replay_fault_trace(xis, sent, delivered, 100.0, 40.0,
+                         charge_dropped=True)
+    assert (a.uplink_bits_per_client, a.downlink_bits_per_client) \
+        == (100.0, 40.0)
+    b = BitsLedger(4)
+    b.replay_fault_trace(xis, sent, delivered, 100.0, 40.0,
+                         charge_dropped=False)
+    assert (b.uplink_bits_per_client, b.downlink_bits_per_client) \
+        == (0.0, 40.0)
+    assert a.rounds == b.rounds == 2  # rounds happen even when empty
+    # null faults: sent == delivered == n every round -> replay_xi_trace
+    c = BitsLedger(4)
+    c.replay_fault_trace([1, 0, 1], [4, 0, 4], [4, 0, 4], 100.0, 40.0)
+    d = BitsLedger(4)
+    d.replay_xi_trace([1, 0, 1], 100.0, 40.0)
+    assert c.history == d.history
+
+
+# ---------------------------------------------------------------------------
+# driver + launch faces
+
+
+def test_driver_null_fault_keystone():
+    """run_l2gd(faults=FaultPlan()) is bit-exact with faults=None —
+    trajectory, losses, xi trace AND the replayed ledger."""
+    cc, mc = CODECS["qsgd-flat"]()
+    kw = dict(plan=(cc, cc), participation=0.5)
+    r0 = run_l2gd(KEY, zero_params(), quad_grad_fn, HP, lambda k: BATCH,
+                  40, **kw)
+    r1 = run_l2gd(KEY, zero_params(), quad_grad_fn, HP, lambda k: BATCH,
+                  40, faults=FaultPlan(), **kw)
+    assert _tree_eq(r0.state.params, r1.state.params)
+    assert r0.losses == r1.losses
+    np.testing.assert_array_equal(r0.xis, r1.xis)
+    assert r0.ledger.history == r1.ledger.history
+    assert r1.fault_stats["dropped"] == r1.fault_stats["crashed"] == 0
+    assert r0.fault_stats is None
+
+
+def test_driver_chaos_chunked_and_policy():
+    """Chunked chaos == one-shot (state + buffer threading through the
+    driver); charge_dropped=False charges strictly less uplink when
+    drops occurred; host mode refuses faults."""
+    r1 = run_l2gd(KEY, zero_params(), quad_grad_fn, HP, lambda k: BATCH,
+                  40, faults=CHAOS)
+    r2 = run_l2gd(KEY, zero_params(), quad_grad_fn, HP, lambda k: BATCH,
+                  40, faults=CHAOS, chunk=7)
+    assert _tree_eq(r1.state.params, r2.state.params)
+    assert r1.ledger.history == r2.ledger.history
+    assert r1.fault_stats == r2.fault_stats
+    assert r1.fault_stats["sent"] == (r1.fault_stats["delivered"]
+                                      + r1.fault_stats["dropped"]
+                                      + r1.fault_stats["evicted"]
+                                      + r1.fault_stats["rejected"])
+    assert r1.fault_stats["dropped"] > 0
+    r3 = run_l2gd(KEY, zero_params(), quad_grad_fn, HP, lambda k: BATCH,
+                  40, faults=dataclasses.replace(CHAOS,
+                                                 charge_dropped=False))
+    assert r3.ledger.uplink_bits_per_client \
+        < r1.ledger.uplink_bits_per_client
+    assert r3.ledger.downlink_bits_per_client \
+        == r1.ledger.downlink_bits_per_client
+    with pytest.raises(ValueError, match="mode='scan'"):
+        run_l2gd(KEY, zero_params(), quad_grad_fn, HP, lambda k: BATCH, 4,
+                 faults=CHAOS, mode="host")
+
+
+def test_build_async_rollout_fn_reduced_lm():
+    """Launch-layer face: a reduced transformer runs faulty rounds in
+    one dispatch with both carries threaded; finite losses throughout."""
+    from repro.configs.base import get_config
+    from repro.launch.steps import build_async_rollout_fn, param_shapes
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(get_config("stablelm-1.6b").reduced(),
+                              vocab_size=32)
+    n, steps = 2, 4
+    keys = jax.random.split(jax.random.PRNGKey(0), n)
+    params = jax.vmap(lambda k: init_params(k, cfg))(keys)
+    hp = L2GDHyper(eta=0.05, lam=0.5, p=0.4, n=n)
+    plan = FaultPlan(max_delay=1, latency_probs=(0.5, 0.5), drop_rate=0.2,
+                     quorum=0.5)
+    up = make_plan(Natural(), param_shapes(cfg), transport="leafwise")
+    roll = build_async_rollout_fn(cfg, hp, plan, plans=(up, up),
+                                  length=steps)
+    agg = init_async_state(params, up, plan)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (steps, n, 2, 8), 0,
+                              cfg.vocab_size)
+    key_data = jax.random.key_data(jax.random.PRNGKey(2))
+    st, agg, trace = roll(init_state(params), agg, {"tokens": toks},
+                          key_data)
+    assert trace.losses.shape == (steps,)
+    assert bool(jnp.all(jnp.isfinite(trace.losses)))
+    assert trace.events.shape == (steps, len(EVENT_FIELDS))
+    for leaf in jax.tree_util.tree_leaves(st.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/run.py --check (satellite: missing-baseline handling)
+
+
+def test_bench_check_missing_baseline(tmp_path, monkeypatch):
+    """A fresh *_fused row with no baseline (or a pre-us_per_call
+    baseline row) is 'new, recorded' — merged into the baseline file,
+    never a KeyError / failure."""
+    from benchmarks import common, run as bench_run
+
+    path = tmp_path / "BENCH_kernels.json"
+    monkeypatch.setattr(common, "bench_json_path", lambda: str(path))
+    monkeypatch.setattr(common, "RESULTS", [
+        {"name": "qsgd_fused_new", "us_per_call": 10.0},
+        {"name": "qsgd_fused_old", "us_per_call": 10.0},
+        {"name": "qsgd_fused_legacy", "us_per_call": 10.0},
+        {"name": "unchecked_row", "us_per_call": 999.0},
+    ])
+    baseline = {"qsgd_fused_old": {"name": "qsgd_fused_old",
+                                   "us_per_call": 9.0},
+                "qsgd_fused_legacy": {"name": "qsgd_fused_legacy"}}
+    bad = bench_run._check_regressions(baseline)
+    assert bad == []  # 10/9 < factor; new rows are not failures
+    import json
+    recorded = {r["name"] for r in json.loads(path.read_text())}
+    assert recorded == {"qsgd_fused_new", "qsgd_fused_legacy"}
