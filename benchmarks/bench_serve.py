@@ -1,0 +1,152 @@
+"""Serving-stack benchmark (DESIGN.md §12): base+delta residency and
+the continuous-batching decode engine.
+
+Before emitting anything the bench re-asserts the keystone invariant on
+the bench geometry — one mixed-tenant batch produces exactly the token
+sequences of serving each tenant alone (engine default lax.map mode) —
+so a perf row can never outlive the correctness it advertises.
+
+Rows (merged into BENCH_kernels.json):
+
+  serve_delta_pack            — encode one tenant delta to its wire
+                                payload (natural, packed)       [gated]
+  serve_materialize_fused     — base + fused payload decode: the LRU
+                                miss path materializing a tenant [gated]
+  serve_models_per_gb_natural — measured residency at n=32 tenants,
+                                natural deltas (9 bits/param);
+                                ratio_f32 >= 3x dense float32
+  serve_models_per_gb_qsgd4   — 4-bit narrow QSGD storage codes;
+                                ratio_bf16 >= 3x dense bf16
+  serve_ttft                  — per-tenant time-to-first-token: wall
+                                time of the fused prefill dispatch
+                                (post-compile, mixed batch of 4)
+  serve_tokens_per_s          — aggregate generated tokens/s over the
+                                prefill+decode dispatches
+
+The ``*_pack``/``*_fused`` rows ride the tier-2 ``--check`` regression
+gate (>2x the recorded baseline fails CI).
+
+Run: PYTHONPATH=src python -m benchmarks.run --only serve [--json PATH]
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit, timed
+from repro.configs.base import get_config
+from repro.core import decode_payload, make_compressor, make_plan
+from repro.models import init_params, param_count
+from repro.serve import DeltaModelStore, Request, ServingEngine
+
+N_TENANTS = 32
+PROMPT_LEN, GEN, BATCH = 8, 16, 4
+
+
+def _cfg():
+    return dataclasses.replace(get_config("stablelm-1.6b").reduced(),
+                               vocab_size=64)
+
+
+def _stores(cfg):
+    """(natural store, 4-bit narrow qsgd store) over the same 32 tenant
+    models (shared base = client mean)."""
+    keys = jax.random.split(jax.random.PRNGKey(0), N_TENANTS)
+    stacked = jax.vmap(lambda k: init_params(k, cfg))(keys)
+    nat = DeltaModelStore.from_params(
+        stacked, make_plan(make_compressor("natural"), transport="packed"),
+        key=jax.random.PRNGKey(1))
+    q4 = DeltaModelStore.from_params(
+        stacked, make_plan(make_compressor("qsgd", levels=7),
+                           transport="packed"),
+        key=jax.random.PRNGKey(1), narrow=True)
+    return stacked, nat, q4
+
+
+def _assert_keystone(store, cfg):
+    """Mixed-tenant batch == solo serving, token-exact, on the bench
+    geometry — the invariant every row below rides on."""
+    tenants = store.tenants[:BATCH]
+    prompt = tuple(range(3, 3 + PROMPT_LEN))
+    reqs = [Request(t, prompt, gen=GEN) for t in tenants]
+    eng = ServingEngine(store, cfg, cache_capacity=BATCH, max_batch=BATCH)
+    mixed = eng.serve(reqs)
+    for r in reqs:
+        solo = ServingEngine(store, cfg, cache_capacity=1,
+                             max_batch=1).serve([r])[0]
+        m = next(x for x in mixed if x["tenant"] == r.tenant)
+        assert np.array_equal(m["tokens"], solo["tokens"]), \
+            f"mixed-tenant batch diverged from solo for tenant {r.tenant}"
+    return eng
+
+
+def run():
+    start = len(common.RESULTS)
+    cfg = _cfg()
+    stacked, nat, q4 = _stores(cfg)
+    d = param_count(jax.tree.map(lambda a: a[0], stacked))
+
+    eng = _assert_keystone(nat, cfg)
+    print(f"# keystone ok: mixed==solo over {BATCH} tenants "
+          f"(d={d}, arch={cfg.name})")
+
+    # -- delta pack (encode one tenant's delta to the wire payload) ---------
+    base, plan = nat.base, nat.plan
+    delta = jax.tree.map(
+        lambda x, b: (x - b).astype(jnp.float32),
+        jax.tree.map(lambda a: a[0], stacked), base)
+    pack = jax.jit(lambda k, t: plan.encode(k, t))
+    us, payload = timed(pack, jax.random.PRNGKey(2), delta)
+    emit("serve_delta_pack", us,
+         f"d={d},bits/param={payload.nbits / d:.2f}",
+         d=d, bits_per_param=round(payload.nbits / d, 3))
+
+    # -- materialize (the LRU miss path: base + fused payload decode) -------
+    mat = jax.jit(lambda p: jax.tree.map(
+        lambda b, dd: (b + dd.astype(jnp.float32)).astype(b.dtype),
+        base, decode_payload(p)))
+    us, _ = timed(mat, payload)
+    emit("serve_materialize_fused", us,
+         f"d={d},GB/s={d * 4 / (us * 1e-6) / 1e9:.2f}",
+         d=d, gbps=round(d * 4 / (us * 1e-6) / 1e9, 2))
+
+    # -- residency (measured from Payload.nbits; base counted once) ---------
+    for name, store, ref_bits, ref_name in (
+            ("serve_models_per_gb_natural", nat, 32.0, "f32"),
+            ("serve_models_per_gb_qsgd4", q4, 16.0, "bf16")):
+        mpg = store.models_per_gb()
+        ratio = mpg / store.dense_models_per_gb(ref_bits)
+        emit(name, 0.0,
+             f"n={len(store)},models/GB={mpg:.1f},"
+             f"x_dense_{ref_name}={ratio:.2f}",
+             n_tenants=len(store), models_per_gb=round(mpg, 1),
+             bits_per_param=round(store.tenant_bits(store.tenants[0]) / d,
+                                  3),
+             dense_ref_bits=ref_bits, ratio_vs_dense=round(ratio, 2))
+        assert ratio >= 3.0, f"{name}: residency ratio {ratio:.2f} < 3x"
+
+    # -- latency/throughput (post-compile; engine warmed by the keystone) ---
+    eng.metrics = type(eng.metrics)()        # fresh counters, warm jit/LRU
+    reqs = [Request(t, tuple(range(3, 3 + PROMPT_LEN)), gen=GEN)
+            for t in nat.tenants[:BATCH]]
+    eng.serve(reqs)                           # timed inside the engine
+    stats = [eng.metrics.tenants[r.tenant] for r in reqs]
+    ttft = float(np.mean([s.mean_ttft_s for s in stats]))
+    toks = sum(s.tokens_generated for s in stats)
+    wall = max(s.gen_time_s for s in stats)   # batch wall time
+    emit("serve_ttft", ttft * 1e6,
+         f"B={BATCH},P={PROMPT_LEN},tokens/s={toks / wall:.1f}",
+         batch=BATCH, prompt_len=PROMPT_LEN)
+    emit("serve_tokens_per_s", wall / toks * 1e6,
+         f"B={BATCH},gen={GEN},tokens/s={toks / wall:.1f}",
+         batch=BATCH, gen=GEN, tokens_per_s=round(toks / wall, 1))
+
+    common.merge_json(common.bench_json_path(), common.RESULTS[start:])
+
+
+if __name__ == "__main__":
+    run()

@@ -3,10 +3,29 @@
 Arrays are stored as (dtype, shape, raw bytes); the pytree structure is
 serialized by flattening with jax.tree_util and storing the treedef's
 string-keyed path skeleton.  Round-trips dicts / lists / tuples /
-NamedTuples-as-tuples of jnp/np arrays and python scalars.
+NamedTuples-as-tuples of jnp/np arrays and python scalars, plus every
+registered codec Payload dataclass (repro.core.codec — wire arrays,
+static meta, and the FlatLayout/treedef statics) BIT-EXACTLY, so the
+serving delta store persists compressed tenants in the same pack format
+the training checkpoints use (DESIGN.md §12).
+
+Payload serialization notes:
+
+  * the class registry is seeded lazily from ``repro.core.codec.Payload``
+    and extensible via :func:`register_payload_class` for out-of-core
+    payload dataclasses;
+  * ``jax.tree_util`` treedefs (TreePayload / FlatLayout statics) are
+    stored as an int-leaf skeleton with tuple markers preserved, so
+    dict/list/tuple structures reconstruct exactly (the one structure
+    msgpack alone collapses is tuple -> list);
+  * static dtypes serialize as their numpy names, shapes as lists
+    restored to tuples — reconstructed payloads compare equal as pytrees
+    and their wire arrays compare bit-equal (property-tested per payload
+    type in tests/test_serve.py).
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 from typing import Any
 
@@ -15,13 +34,141 @@ import jax.numpy as jnp
 import msgpack
 import numpy as np
 
-__all__ = ["save", "restore", "save_state", "restore_state"]
+__all__ = ["save", "restore", "save_state", "restore_state",
+           "register_payload_class"]
 
 _ARR = "__arr__"
 _SCALAR = "__scalar__"
+_TUPLE = "__tuple__"
+_PAYLOAD = "__payload__"
+_LAYOUT = "__layout__"
+_TREEDEF = "__treedef__"
+
+# name -> dataclass; seeded from repro.core.codec on first use so the
+# checkpoint module stays importable without pulling the codec layer in
+_PAYLOAD_CLASSES: dict = {}
+
+
+def register_payload_class(cls) -> type:
+    """Register a payload dataclass for checkpoint round-trips (the codec
+    payloads are pre-registered; serving-side formats call this)."""
+    _PAYLOAD_CLASSES[cls.__name__] = cls
+    return cls
+
+
+def _payload_classes() -> dict:
+    if not _PAYLOAD_CLASSES:
+        from repro.core.codec import Payload
+        for cls in Payload:
+            _PAYLOAD_CLASSES.setdefault(cls.__name__, cls)
+    return _PAYLOAD_CLASSES
+
+
+def _is_payload(obj) -> bool:
+    return dataclasses.is_dataclass(obj) and not isinstance(obj, type) \
+        and type(obj).__name__ in _payload_classes() \
+        and type(obj) is _payload_classes()[type(obj).__name__]
+
+
+# -- treedef <-> int-leaf skeleton (tuples preserved via marker dicts) ------
+
+def _pack_structure(obj: Any):
+    if isinstance(obj, dict):
+        return {k: _pack_structure(v) for k, v in obj.items()}
+    if isinstance(obj, tuple):
+        return {_TUPLE: [_pack_structure(v) for v in obj]}
+    if isinstance(obj, list):
+        return [_pack_structure(v) for v in obj]
+    return obj
+
+
+def _unpack_structure(obj: Any):
+    if isinstance(obj, dict):
+        if _TUPLE in obj and len(obj) == 1:
+            return tuple(_unpack_structure(v) for v in obj[_TUPLE])
+        return {k: _unpack_structure(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_unpack_structure(v) for v in obj]
+    return obj
+
+
+def _pack_treedef(treedef):
+    skeleton = jax.tree_util.tree_unflatten(
+        treedef, list(range(treedef.num_leaves)))
+    return {_TREEDEF: True, "skeleton": _pack_structure(skeleton)}
+
+
+def _unpack_treedef(obj):
+    skeleton = _unpack_structure(obj["skeleton"])
+    return jax.tree_util.tree_structure(skeleton)
+
+
+def _pack_layout(layout):
+    return {_LAYOUT: True,
+            "treedef": _pack_treedef(layout.treedef),
+            "shapes": [list(s) for s in layout.shapes],
+            "dtypes": [str(np.dtype(dt)) for dt in layout.dtypes],
+            "offsets": list(layout.offsets),
+            "d": int(layout.d), "bucket": int(layout.bucket)}
+
+
+def _unpack_layout(obj):
+    from repro.core.flatbuf import FlatLayout
+    return FlatLayout(treedef=_unpack_treedef(obj["treedef"]),
+                      shapes=tuple(tuple(s) for s in obj["shapes"]),
+                      dtypes=tuple(np.dtype(dt) for dt in obj["dtypes"]),
+                      offsets=tuple(int(o) for o in obj["offsets"]),
+                      d=int(obj["d"]), bucket=int(obj["bucket"]))
+
+
+def _pack_payload(obj):
+    from repro.core.flatbuf import FlatLayout
+    fields = {}
+    for f in dataclasses.fields(obj):
+        v = getattr(obj, f.name)
+        if v is None:
+            fields[f.name] = {_SCALAR: True, "v": None}
+        elif isinstance(v, FlatLayout):
+            fields[f.name] = _pack_layout(v)
+        elif f.name == "treedef":
+            fields[f.name] = _pack_treedef(v)
+        elif f.name == "shape":
+            fields[f.name] = {_TUPLE: [int(s) for s in v]}
+        elif f.name == "dtype":
+            fields[f.name] = {_SCALAR: True, "v": str(np.dtype(v))}
+        elif f.name == "leaves":           # TreePayload: nested payloads
+            fields[f.name] = {_TUPLE: [_pack(p) for p in v]}
+        else:
+            fields[f.name] = _pack(v)
+    return {_PAYLOAD: type(obj).__name__, "fields": fields}
+
+
+def _unpack_payload(obj):
+    cls = _payload_classes().get(obj[_PAYLOAD])
+    if cls is None:
+        raise TypeError(f"unknown payload class {obj[_PAYLOAD]!r} in "
+                        "checkpoint; register it via "
+                        "repro.checkpoint.register_payload_class")
+    fields = {}
+    for name, v in obj["fields"].items():
+        if isinstance(v, dict) and v.get(_LAYOUT):
+            fields[name] = _unpack_layout(v)
+        elif isinstance(v, dict) and v.get(_TREEDEF):
+            fields[name] = _unpack_treedef(v)
+        elif name == "shape" and isinstance(v, dict) and _TUPLE in v:
+            fields[name] = tuple(int(s) for s in v[_TUPLE])
+        elif name == "dtype":
+            fields[name] = None if v["v"] is None else np.dtype(v["v"])
+        elif name == "leaves":
+            fields[name] = tuple(_unpack(p) for p in v[_TUPLE])
+        else:
+            fields[name] = _unpack(v)
+    return cls(**fields)
 
 
 def _pack(obj: Any):
+    if _is_payload(obj):
+        return _pack_payload(obj)
     if isinstance(obj, (jnp.ndarray, np.ndarray)) or hasattr(obj, "__array__"):
         a = np.asarray(obj)
         return {_ARR: True, "dtype": str(a.dtype), "shape": list(a.shape),
@@ -40,8 +187,10 @@ def _unpack(obj: Any):
         if obj.get(_ARR):
             a = np.frombuffer(obj["data"], dtype=obj["dtype"])
             return jnp.asarray(a.reshape(obj["shape"]))
-        if obj.get(_SCALAR):
+        if _SCALAR in obj:
             return obj["v"]
+        if _PAYLOAD in obj:
+            return _unpack_payload(obj)
         return {k: _unpack(v) for k, v in obj.items()}
     if isinstance(obj, list):
         return [_unpack(v) for v in obj]

@@ -5,7 +5,7 @@ layer, and the convergence-theory calculators."""
 from repro.core.codec import (
     CompressionPlan, make_plan, as_plan, DensePayload, QSGDPayload,
     NaturalPayload, TernPayload, SparsePayload, BernoulliPayload,
-    TreePayload, index_bits,
+    TreePayload, NarrowQSGDPayload, index_bits, decode_payload,
 )
 from repro.core.compressors import (
     Compressor, Identity, QSGD, Natural, TernGrad, Bernoulli, RandK, TopK,
@@ -28,8 +28,9 @@ from repro.core.aggregation import (
 )
 from repro.core.flatbuf import (
     FlatLayout, flat_tree_apply, pack_tree, unpack_tree, pack_tree_qsgd,
-    pack_tree_natural, unpack_tree_qsgd, reduce_payload_mean,
-    supports_fused_reduce, packed_wire_bits, payload_wire_bits,
+    pack_tree_natural, unpack_tree_qsgd, narrow_tree_qsgd, widen_tree_qsgd,
+    reduce_payload_mean, supports_fused_reduce, packed_wire_bits,
+    payload_wire_bits,
 )
 from repro.core.async_engine import (
     AsyncAggState, AsyncRolloutTrace, EVENT_FIELDS, init_async_state,
@@ -40,7 +41,8 @@ from repro.core import codec, flatbuf, theory
 __all__ = [
     "CompressionPlan", "make_plan", "as_plan", "DensePayload",
     "QSGDPayload", "NaturalPayload", "TernPayload", "SparsePayload",
-    "BernoulliPayload", "TreePayload", "index_bits",
+    "BernoulliPayload", "TreePayload", "NarrowQSGDPayload", "index_bits",
+    "decode_payload",
     "Compressor", "Identity", "QSGD", "Natural", "TernGrad", "Bernoulli",
     "RandK", "TopK", "make_compressor", "tree_apply", "tree_wire_bits",
     "joint_omega", "L2GDHyper", "L2GDState", "init_state", "make_hyper",
@@ -54,6 +56,7 @@ __all__ = [
     "masked_client_mean", "theory", "codec",
     "flatbuf", "FlatLayout", "flat_tree_apply", "pack_tree", "unpack_tree",
     "pack_tree_qsgd", "pack_tree_natural", "unpack_tree_qsgd",
+    "narrow_tree_qsgd", "widen_tree_qsgd",
     "reduce_payload_mean", "supports_fused_reduce",
     "packed_wire_bits", "payload_wire_bits",
     "AsyncAggState", "AsyncRolloutTrace", "EVENT_FIELDS",

@@ -57,9 +57,9 @@ import numpy as np
 __all__ = [
     "Payload", "DensePayload", "QSGDPayload", "NaturalPayload",
     "TernPayload", "SparsePayload", "BernoulliPayload", "TreePayload",
-    "CompressionPlan", "make_plan", "as_plan", "TRANSPORTS",
-    "index_bits", "pack_bits", "unpack_bits", "natural_split",
-    "natural_merge",
+    "NarrowQSGDPayload", "CompressionPlan", "make_plan", "as_plan",
+    "TRANSPORTS", "index_bits", "pack_bits", "unpack_bits",
+    "natural_split", "natural_merge", "decode_payload",
 ]
 
 TRANSPORTS = ("leafwise", "flat", "packed")
@@ -299,6 +299,35 @@ _register(BernoulliPayload, ("mask", "values"), ("q", "shape", "dtype"))
 
 
 @dataclasses.dataclass(frozen=True)
+class NarrowQSGDPayload:
+    """Storage repack of a flat-engine :class:`QSGDPayload` with small
+    ``levels``: the int8 sign-magnitude codes shrink to ``width``-bit
+    fields (sign in the top bit, magnitude below — ``levels <= 1`` fits
+    2 bits, ``levels <= 7`` fits 4) packed 8/width per byte.  This is a
+    RESIDENCY format, not a wire format: the serving delta store
+    (repro.serve.store) holds tenants in it and widens back to the exact
+    int8 payload on materialization (bit-exact round-trip,
+    ``flatbuf.widen_tree_qsgd``)."""
+
+    codes: Any                         # packed uint8, (n_buckets, bucket*width/8)
+    norms: Any
+    levels: int = 7                    # static
+    width: int = 4                     # static bits per code
+    layout: Any = None
+    shape: Optional[tuple] = None
+    dtype: Any = None
+
+    @property
+    def nbits(self) -> float:
+        return (float(self.codes.size) * _itembits(self.codes)
+                + 32.0 * float(self.norms.size))
+
+
+_register(NarrowQSGDPayload, ("codes", "norms"),
+          ("levels", "width", "layout", "shape", "dtype"))
+
+
+@dataclasses.dataclass(frozen=True)
 class TreePayload:
     """Leafwise transport: one per-leaf payload per tree leaf, in
     ``tree_flatten`` order."""
@@ -315,7 +344,41 @@ _register(TreePayload, ("leaves",), ("treedef",))
 
 #: union of every payload class (for isinstance checks / docs)
 Payload = (DensePayload, QSGDPayload, NaturalPayload, TernPayload,
-           SparsePayload, BernoulliPayload, TreePayload)
+           SparsePayload, BernoulliPayload, TreePayload,
+           NarrowQSGDPayload)
+
+
+def decode_payload(payload, codec=None):
+    """Standalone dequantize of ANY payload — the decode-only entry point
+    the read-heavy serving path consumes (no :class:`CompressionPlan`
+    instance, no encode machinery on the hot path).
+
+    Flat-engine payloads (``QSGDPayload`` / ``NaturalPayload`` /
+    ``NarrowQSGDPayload`` carrying their :class:`~repro.core.flatbuf.
+    FlatLayout`) decode through the fused unpack kernels and need no
+    codec.  Leaf payloads and ``TreePayload`` dispatch to
+    ``codec.decode`` (the codec that produced them — required because
+    bucket geometry lives on the compressor); a ``DensePayload`` decodes
+    without one."""
+    from repro.core import flatbuf
+    if isinstance(payload, (QSGDPayload, NaturalPayload, NarrowQSGDPayload)) \
+            and getattr(payload, "layout", None) is not None:
+        if isinstance(payload, NarrowQSGDPayload):
+            payload = flatbuf.widen_tree_qsgd(payload)
+        return flatbuf.unpack_tree(payload)
+    if isinstance(payload, TreePayload):
+        if codec is None:
+            raise ValueError("decode_payload(TreePayload) needs the codec "
+                             "that produced the per-leaf payloads")
+        return jax.tree_util.tree_unflatten(
+            payload.treedef, [codec.decode(p) for p in payload.leaves])
+    if isinstance(payload, DensePayload) and codec is None:
+        return payload.values.reshape(payload.shape).astype(payload.dtype)
+    if codec is None:
+        raise ValueError(f"decode_payload({type(payload).__name__}) needs "
+                         "its codec (bucket geometry lives on the "
+                         "compressor)")
+    return codec.decode(payload)
 
 
 # --------------------------------------------------------------------------

@@ -47,8 +47,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.codec import (NaturalPayload, QSGDPayload, natural_merge,
-                              natural_split, pack_bits, unpack_bits)
+from repro.core.codec import (NarrowQSGDPayload, NaturalPayload, QSGDPayload,
+                              natural_merge, natural_split, pack_bits,
+                              unpack_bits)
 from repro.kernels.natural.kernel import natural_fused, natural_pack
 from repro.kernels.natural.ops import natural_reduce
 from repro.kernels.qsgd.kernel import qsgd_fused, qsgd_pack, qsgd_unpack
@@ -59,6 +60,7 @@ __all__ = [
     "unravel", "bucketize", "unbucketize", "seeds_of", "supports_flat",
     "supports_fused_reduce", "flat_tree_apply", "pack_tree", "unpack_tree",
     "pack_tree_qsgd", "pack_tree_natural", "unpack_tree_qsgd",
+    "narrow_tree_qsgd", "widen_tree_qsgd",
     "payload_finite_mask", "sanitize_payload", "reduce_payload_acc",
     "reduce_payload_mean", "payload_wire_bits", "packed_wire_bits",
 ]
@@ -242,6 +244,8 @@ def pack_tree(comp, key: jax.Array, tree, *, bucket: int = None):
 def unpack_tree(payload):
     """Dequantize a flat-engine Payload back to its pytree — bit-exact
     vs :func:`flat_tree_apply` under the same key."""
+    if isinstance(payload, NarrowQSGDPayload):
+        payload = widen_tree_qsgd(payload)
     layout = payload.layout
     if layout is None:
         raise ValueError("payload carries no FlatLayout; it was not "
@@ -309,6 +313,53 @@ def unpack_tree_qsgd(payload: QSGDPayload, layout: FlatLayout = None, *,
         return unpack_tree(payload)
     y2d = qsgd_unpack(payload.codes, payload.norms, levels=levels)
     return unravel(layout, unbucketize(y2d, layout.d))
+
+
+def _narrow_width(levels: int) -> int:
+    """Smallest pack_bits-compatible field width holding sign +
+    magnitude <= levels: 2 bits for ternary codes (levels 1), 4 bits for
+    levels <= 7.  Wider levels keep the int8 wire format — there is no
+    byte-aligned win below 8 bits for them."""
+    if levels <= 1:
+        return 2
+    if levels <= 7:
+        return 4
+    raise ValueError(
+        f"levels={levels} has no sub-byte storage pack (magnitude needs "
+        f"{max(int(np.ceil(np.log2(levels + 1))), 1)} bits + sign); use "
+        "levels <= 7 or store the int8 QSGDPayload as-is")
+
+
+def narrow_tree_qsgd(payload: QSGDPayload) -> NarrowQSGDPayload:
+    """Repack a flat-engine :class:`QSGDPayload` with ``levels <= 7``
+    into its sub-byte residency format (:class:`NarrowQSGDPayload`):
+    sign-magnitude fields of ``width`` bits, 8/width codes per byte —
+    4.02 bits/param at levels 7 / bucket 2048 instead of the wire's
+    8.02.  Lossless: :func:`widen_tree_qsgd` restores the int8 codes
+    bit-exactly (the serving delta store's storage win, DESIGN.md §12)."""
+    width = _narrow_width(payload.levels)
+    codes = payload.codes
+    mag = jnp.abs(codes.astype(jnp.int32)).astype(jnp.uint8)
+    sign = (codes < 0).astype(jnp.uint8)
+    fields = (sign << jnp.uint8(width - 1)) | mag
+    return NarrowQSGDPayload(pack_bits(fields, width), payload.norms,
+                             levels=payload.levels, width=width,
+                             layout=payload.layout, shape=payload.shape,
+                             dtype=payload.dtype)
+
+
+def widen_tree_qsgd(payload: NarrowQSGDPayload) -> QSGDPayload:
+    """Inverse of :func:`narrow_tree_qsgd` — bit-exact int8 code
+    reconstruction, so every downstream consumer (``unpack_tree``, the
+    fused §10 reduce) sees the exact wire payload."""
+    width = payload.width
+    fields = unpack_bits(payload.codes, width)
+    mag = (fields & jnp.uint32((1 << (width - 1)) - 1)).astype(jnp.int8)
+    sign = (fields >> jnp.uint32(width - 1)).astype(jnp.int8)
+    codes = jnp.where(sign > 0, -mag, mag)
+    return QSGDPayload(codes, payload.norms, levels=payload.levels,
+                       layout=payload.layout, shape=payload.shape,
+                       dtype=payload.dtype)
 
 
 def supports_fused_reduce(payload) -> bool:

@@ -1,0 +1,9 @@
+"""Read-heavy serving stack (DESIGN.md §12): one resident global base,
+per-tenant compressed deltas, decode-on-demand through the fused unpack
+kernels, continuous mixed-tenant batching bit-exact with solo serving."""
+from repro.serve.store import DeltaModelStore, plan_spec, plan_from_spec
+from repro.serve.engine import Request, ServingEngine
+from repro.serve.metrics import TenantStats, ServeMetrics
+
+__all__ = ["DeltaModelStore", "plan_spec", "plan_from_spec",
+           "Request", "ServingEngine", "TenantStats", "ServeMetrics"]

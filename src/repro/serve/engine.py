@@ -1,0 +1,236 @@
+"""Multi-tenant decode engine over a :class:`DeltaModelStore`
+(DESIGN.md §12).
+
+One shared global base stays resident; tenant params materialize on
+demand (base + fused payload decode) into a bounded LRU cache with
+deterministic eviction (least-recently-used first — the cache is an
+``OrderedDict``, so the eviction sequence under a fixed request trace
+is reproducible and test-pinned).
+
+Continuous batching: requests from DIFFERENT tenants with the same
+(prompt_len, gen) geometry run in one decode batch against the single
+base residency.  The default ``batch_mode="map"`` dispatches rows
+through ``jax.lax.map``, which executes each row's ``decode_step``
+with exactly the single-request computation graph — mixed-tenant
+logits are BIT-EXACT with serving each tenant alone (the keystone test
+in tests/test_serve.py).  ``batch_mode="vmap"`` batches rows into one
+vectorized dispatch for throughput; it reproduces the same argmax
+tokens on the architectures tested here but does not carry the
+structural bit-exactness guarantee (batched matmul reduction order may
+differ), so it is opt-in.
+
+Generation is two fused device dispatches per batch — no per-token
+host sync (transfer-guard-tested):
+
+  prefill — one ``lax.scan`` teacher-forcing the prompt; its last step
+            emits the first generated token.  TTFT is the wall time of
+            this dispatch.
+  decode  — one ``lax.scan`` of greedy argmax feedback for the
+            remaining gen−1 tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_caches
+from repro.serve.metrics import ServeMetrics
+from repro.serve.store import DeltaModelStore
+
+__all__ = ["Request", "ServingEngine"]
+
+BATCH_MODES = ("map", "vmap")
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request: ``tenant``'s model, greedy-decode ``gen``
+    tokens after teacher-forcing ``prompt``."""
+
+    tenant: str
+    prompt: Tuple[int, ...]
+    gen: int = 16
+
+    def __post_init__(self):
+        object.__setattr__(self, "prompt", tuple(int(t) for t in self.prompt))
+        if len(self.prompt) < 1:
+            raise ValueError("empty prompt")
+        if self.gen < 1:
+            raise ValueError("gen must be >= 1")
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+class ServingEngine:
+    """Serve many tenants from one base + compressed-delta store.
+
+    Args:
+      store: the :class:`DeltaModelStore` holding base + tenant payloads.
+      cfg: model config (``get_config(arch).reduced()`` etc.); encoder-
+        decoder architectures are rejected (their stub frame frontend has
+        no serving path here).
+      cache_capacity: max tenants with materialized params resident.
+      max_batch: max requests fused into one decode batch.
+      batch_mode: ``"map"`` (default, bit-exact with solo serving) or
+        ``"vmap"`` (vectorized throughput mode).
+    """
+
+    def __init__(self, store: DeltaModelStore, cfg, *,
+                 cache_capacity: int = 4, max_batch: int = 4,
+                 batch_mode: str = "map"):
+        if getattr(cfg, "is_encdec", False):
+            raise ValueError(
+                f"arch {cfg.name!r} is encoder-decoder; the serving engine "
+                "only handles decoder-only caches")
+        if batch_mode not in BATCH_MODES:
+            raise ValueError(f"batch_mode {batch_mode!r} not in {BATCH_MODES}")
+        if cache_capacity < 1 or max_batch < 1:
+            raise ValueError("cache_capacity and max_batch must be >= 1")
+        self.store = store
+        self.cfg = cfg
+        self.cache_capacity = int(cache_capacity)
+        self.max_batch = int(max_batch)
+        self.batch_mode = batch_mode
+        self.metrics = ServeMetrics()
+        self._cache: "OrderedDict[str, object]" = OrderedDict()
+        self._fns: Dict[Tuple[int, int, int], tuple] = {}
+
+    # -- tenant residency (LRU, deterministic eviction) ---------------------
+    def params_for(self, tenant):
+        """Materialized params for ``tenant`` through the LRU cache."""
+        tid = str(tenant)
+        if tid in self._cache:
+            self._cache.move_to_end(tid)
+            self.metrics.record_hit(tid)
+            return self._cache[tid]
+        self.metrics.record_miss(tid)
+        params = self.store.materialize(tid)
+        self._cache[tid] = params
+        while len(self._cache) > self.cache_capacity:
+            evicted, _ = self._cache.popitem(last=False)
+            self.metrics.record_eviction(evicted)
+        return params
+
+    @property
+    def resident_tenants(self) -> List[str]:
+        return list(self._cache)
+
+    # -- compiled generation (two dispatches, no per-token host sync) -------
+    def _fns_for(self, P: int, G: int, B: int):
+        """Jitted (prefill, decode) for one batch geometry, cached."""
+        key = (P, G, B)
+        if key in self._fns:
+            return self._fns[key]
+        cfg, mode, total = self.cfg, self.batch_mode, P + G
+
+        def batched_step(pb, cb, i, tokb):
+            if mode == "vmap":
+                return jax.vmap(
+                    lambda p, c, t: decode_step(p, cfg, c, i, {"tokens": t})
+                )(pb, cb, tokb)
+            return jax.lax.map(
+                lambda a: decode_step(a[0], cfg, a[1], i, {"tokens": a[2]}),
+                (pb, cb, tokb))
+
+        def _next_greedy(logits):
+            return jnp.argmax(logits[:, :, 0], axis=-1) \
+                .astype(jnp.int32).reshape(B, 1)
+
+        def prefill(pb, prompts):
+            """Teacher-force positions 0..P-1 in one scan; returns the
+            first generated token (B,1,1) and the filled caches."""
+            c1 = init_caches(cfg, 1, total)
+            cb = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (B,) + a.shape), c1)
+
+            def body(carry, i):
+                tok, caches = carry
+                logits, caches = batched_step(pb, caches, i, tok)
+                nxt = jnp.where(
+                    i + 1 < P,
+                    jax.lax.dynamic_slice_in_dim(
+                        prompts, jnp.minimum(i + 1, P - 1), 1, 1),
+                    _next_greedy(logits))
+                return (nxt.reshape(B, 1, 1), caches), None
+
+            tok0 = prompts[:, 0:1].reshape(B, 1, 1)
+            (tokf, cb), _ = jax.lax.scan(body, (tok0, cb), jnp.arange(P))
+            return tokf, cb
+
+        def decode(pb, cb, tokf):
+            """Greedy feedback for positions P..P+G-2 in one scan;
+            returns the remaining G-1 tokens as (G-1, B, 1)."""
+            def body(carry, i):
+                tok, caches = carry
+                logits, caches = batched_step(pb, caches, i, tok)
+                nxt = _next_greedy(logits)
+                return (nxt.reshape(B, 1, 1), caches), nxt
+
+            _, toks = jax.lax.scan(body, (tokf, cb),
+                                   jnp.arange(P, P + G - 1))
+            return toks
+
+        fns = (jax.jit(prefill), jax.jit(decode))
+        self._fns[key] = fns
+        return fns
+
+    # -- continuous batching ------------------------------------------------
+    def serve(self, requests: Sequence[Request]) -> List[dict]:
+        """Run a request trace; results come back in request order.
+
+        Requests are grouped by (prompt_len, gen) geometry — mixed
+        tenants share a batch — and chunked to ``max_batch``.  Each
+        batch costs two dispatches; its wall times are attributed to
+        every request in it."""
+        groups: "OrderedDict[Tuple[int, int], list]" = OrderedDict()
+        for idx, r in enumerate(requests):
+            groups.setdefault((len(r.prompt), r.gen), []).append((idx, r))
+
+        results: List[dict] = [None] * len(requests)
+        for (P, G), entries in groups.items():
+            for lo in range(0, len(entries), self.max_batch):
+                chunk = entries[lo:lo + self.max_batch]
+                self._serve_batch(P, G, chunk, results)
+        return results
+
+    def _serve_batch(self, P: int, G: int, chunk, results) -> None:
+        B = len(chunk)
+        params = [self.params_for(r.tenant) for _, r in chunk]
+        pb = _stack(params)
+        prompts = jnp.asarray(np.array([r.prompt for _, r in chunk],
+                                       np.int32))
+        prefill, decode = self._fns_for(P, G, B)
+
+        t0 = time.perf_counter()
+        tokf, cb = prefill(pb, prompts)
+        jax.block_until_ready(tokf)
+        ttft = time.perf_counter() - t0
+
+        t1 = time.perf_counter()
+        toks = decode(pb, cb, tokf)
+        jax.block_until_ready(toks)
+        dt = time.perf_counter() - t1
+
+        first = np.asarray(tokf).reshape(B)
+        rest = np.asarray(toks).reshape(-1, B).T        # (B, G-1)
+        self.metrics.batches += 1
+        for row, (idx, r) in enumerate(chunk):
+            seq = np.concatenate([np.asarray(r.prompt, np.int32),
+                                  first[row:row + 1].astype(np.int32),
+                                  rest[row].astype(np.int32)])
+            stats = self.metrics.tenant(r.tenant)
+            stats.requests += 1
+            stats.tokens_generated += G
+            stats.ttft_s.append(ttft)
+            stats.gen_time_s += ttft + dt
+            results[idx] = {"tenant": str(r.tenant),
+                            "tokens": seq, "ttft_s": ttft,
+                            "gen_time_s": ttft + dt, "batch_size": B}

@@ -1,0 +1,193 @@
+"""DeltaModelStore: many personalized models resident as compressed
+deltas from ONE shared global base (DESIGN.md §12).
+
+Formulation (1) trains n personalized models x_1..x_n pulled toward
+their mean x̄ by the penalty λ/2n Σ‖x_i − x̄‖²; at serving time the x_i
+therefore cluster around x̄ and the residency-efficient layout is
+
+    resident = base (dense, x̄)  +  one codec Payload per tenant
+               encoding  delta_i = x_i − base.
+
+Any :class:`~repro.core.codec.CompressionPlan` supplies the delta wire
+format; ``Payload.nbits`` is the exact bits accounting, so
+``models_per_gb()`` is measured from the same object that is stored,
+never re-derived.  With the ``narrow=True`` option a flat-engine QSGD
+payload (levels ≤ 7) is repacked to 4-bit storage codes
+(:func:`~repro.core.flatbuf.narrow_tree_qsgd`) — bit-exact with the
+int8 wire form, ~4 bits/param resident.
+
+Persistence rides the msgpack checkpoint pack format: payload
+dataclasses round-trip bit-exactly through ``repro.checkpoint``
+(property-tested in tests/test_serve.py), so a store file is a regular
+checkpoint a training driver could also read."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.core import codec as codec_mod
+from repro.core import flatbuf
+from repro.core.codec import CompressionPlan, as_plan, decode_payload
+from repro.core.compressors import make_compressor
+
+__all__ = ["DeltaModelStore", "plan_spec", "plan_from_spec"]
+
+_BITS_PER_GB = 8.0 * 1024 ** 3
+
+
+def plan_spec(plan: CompressionPlan) -> dict:
+    """Serializable recipe for a plan built from a registry compressor
+    (name + constructor kwargs + transport/bucket) — enough for
+    :func:`plan_from_spec` to rebuild an equivalent plan on load."""
+    comp = plan.codec
+    kwargs = {f.name: getattr(comp, f.name)
+              for f in dataclasses.fields(comp) if f.init}
+    return {"codec": comp.name, "kwargs": kwargs,
+            "transport": plan.transport, "bucket": plan.bucket}
+
+
+def plan_from_spec(spec: dict) -> CompressionPlan:
+    comp = make_compressor(spec["codec"], **spec.get("kwargs", {}))
+    return codec_mod.make_plan(comp, transport=spec["transport"],
+                               bucket=spec.get("bucket"))
+
+
+class DeltaModelStore:
+    """Base-plus-compressed-delta residency for many personalized models.
+
+    Args:
+      base: dense pytree — the shared global model (x̄).
+      plan: CompressionPlan (or plain Compressor) for the tenant deltas.
+      key: PRNG key for stochastic codecs; tenant i's encode key is
+        ``fold_in(key, i)`` by insertion index, so re-ingesting the same
+        models in the same order replays identical payloads.
+      narrow: repack flat-engine QSGD payloads (levels ≤ 7) to 4-bit
+        storage codes; decode widens first and stays bit-exact.
+    """
+
+    def __init__(self, base, plan, *, key: Optional[jax.Array] = None,
+                 narrow: bool = False):
+        self.base = base
+        self.plan = as_plan(plan).bind(base)
+        self.narrow = bool(narrow)
+        if self.narrow:
+            levels = getattr(self.plan.codec, "levels", None)
+            if self.plan.transport not in ("flat", "packed") \
+                    or levels is None or levels > 7:
+                raise ValueError(
+                    "narrow=True needs a flat/packed QSGD plan with "
+                    f"levels <= 7; got transport={self.plan.transport!r}, "
+                    f"levels={levels!r}")
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        self._payloads: Dict[str, Any] = {}
+
+    # -- ingestion ----------------------------------------------------------
+    def add_tenant(self, tenant, params) -> None:
+        """Encode ``params − base`` under the plan and store the payload."""
+        tid = str(tenant)
+        if tid in self._payloads:
+            raise ValueError(f"tenant {tid!r} already stored")
+        delta = jax.tree.map(lambda x, b: (x - b).astype(jnp.float32),
+                             params, self.base)
+        k = jax.random.fold_in(self._key, len(self._payloads))
+        payload = self.plan.encode(k, delta)
+        if self.narrow:
+            payload = flatbuf.narrow_tree_qsgd(payload)
+        self._payloads[tid] = payload
+
+    @classmethod
+    def from_params(cls, stacked, plan, *, key: Optional[jax.Array] = None,
+                    ids: Optional[List[str]] = None,
+                    narrow: bool = False) -> "DeltaModelStore":
+        """Ingest client-stacked training params (leading client axis, the
+        layout every trainer/checkpoint in this repo uses): base is the
+        client mean, tenant i's delta is ``x_i − mean(x)``."""
+        n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+        base = jax.tree.map(lambda a: jnp.mean(a, axis=0), stacked)
+        store = cls(base, plan, key=key, narrow=narrow)
+        ids = [str(i) for i in range(n)] if ids is None else list(ids)
+        if len(ids) != n:
+            raise ValueError(f"{len(ids)} ids for {n} client slices")
+        for i, tid in enumerate(ids):
+            store.add_tenant(tid, jax.tree.map(lambda a: a[i], stacked))
+        return store
+
+    @classmethod
+    def from_checkpoint(cls, path: str, plan, **kwargs) -> "DeltaModelStore":
+        """Ingest a federated training checkpoint (stacked params saved by
+        ``checkpoint.save_state``)."""
+        stacked, _extra = checkpoint.restore_state(path)
+        return cls.from_params(stacked, plan, **kwargs)
+
+    # -- read path ----------------------------------------------------------
+    @property
+    def tenants(self) -> List[str]:
+        return list(self._payloads)
+
+    def __contains__(self, tenant) -> bool:
+        return str(tenant) in self._payloads
+
+    def __len__(self) -> int:
+        return len(self._payloads)
+
+    def payload(self, tenant):
+        return self._payloads[str(tenant)]
+
+    def materialize(self, tenant):
+        """Decode one tenant's params: base + decode(payload), cast back to
+        the base dtype leafwise.  Deterministic — decode has no rng."""
+        delta = decode_payload(self._payloads[str(tenant)], self.plan.codec)
+        return jax.tree.map(lambda b, d: (b + d.astype(jnp.float32))
+                            .astype(b.dtype), self.base, delta)
+
+    # -- residency accounting (measured, from Payload.nbits) ---------------
+    def tenant_bits(self, tenant) -> float:
+        return float(self._payloads[str(tenant)].nbits)
+
+    def base_bits(self) -> float:
+        return float(sum(a.size * a.dtype.itemsize * 8
+                         for a in jax.tree_util.tree_leaves(self.base)))
+
+    def total_bits(self) -> float:
+        return self.base_bits() + sum(float(p.nbits)
+                                      for p in self._payloads.values())
+
+    def models_per_gb(self) -> float:
+        """Tenant models resident per GB, counting the shared base once."""
+        if not self._payloads:
+            return 0.0
+        return len(self._payloads) / (self.total_bits() / _BITS_PER_GB)
+
+    def dense_models_per_gb(self, bits_per_param: float = 16.0) -> float:
+        """Models/GB if every tenant were resident dense at
+        ``bits_per_param`` (16 = bf16 reference, 32 = this repo's actual
+        float32 params) — the baseline the ISSUE ratio is measured
+        against."""
+        d = sum(int(np.prod(a.shape)) if a.ndim else 1
+                for a in jax.tree_util.tree_leaves(self.base))
+        return _BITS_PER_GB / (bits_per_param * d)
+
+    # -- persistence (rides the checkpoint pack format) ---------------------
+    def save(self, path: str) -> None:
+        checkpoint.save(path, {
+            "base": self.base,
+            "plan": plan_spec(self.plan),
+            "narrow": self.narrow,
+            "key": self._key,
+            "ids": list(self._payloads),
+            "payloads": list(self._payloads.values()),
+        })
+
+    @classmethod
+    def load(cls, path: str) -> "DeltaModelStore":
+        t = checkpoint.restore(path)
+        store = cls(t["base"], plan_from_spec(t["plan"]),
+                    key=jnp.asarray(t["key"], jnp.uint32),
+                    narrow=bool(t["narrow"]))
+        store._payloads = dict(zip(t["ids"], t["payloads"]))
+        return store
