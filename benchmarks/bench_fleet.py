@@ -1,0 +1,88 @@
+"""Heterogeneous-fleet bench: the uniform-fleet keystone asserted, then
+a 3-cohort mixed fleet (identity-leafwise / natural-flat / narrow
+qsgd4-packed) timed on the scanned rollout engine (DESIGN.md §13).
+
+Rows are named ``fleet_<mix>_n<n>`` via :func:`benchmarks.common.
+scenario_name`, so each cohort mix keys its own BENCH_kernels.json
+baseline (``run.py --check`` compares by name).  Each row carries
+steps/s and the exact ledger bits/round (``sum_i round_bits(i)``, the
+conservation quantity the mixed-fleet keystone pins).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit, logreg_setup, scenario_name
+from repro.core import Identity, L2GDHyper, make_compressor, make_plan
+from repro.fl import run_l2gd
+from repro.fl.fleet import FleetPlan, as_fleet_plan
+
+N, D = 8, 124
+
+
+def _fleet(one, assignment):
+    cohorts = (make_plan(Identity(), one, transport="leafwise"),
+               make_plan(make_compressor("natural"), one, transport="flat"),
+               make_plan(make_compressor("qsgd", levels=4), one,
+                         transport="packed", narrow=True))
+    return FleetPlan(cohorts=cohorts, assignment=assignment)
+
+
+def run(K: int = 300):
+    start = len(common.RESULTS)
+    X, Y, grad_fn, _, _ = logreg_setup(n_clients=N)
+    one = {"w": jnp.zeros((D,))}
+    hp = L2GDHyper(eta=0.5, lam=1.0, p=0.3, n=N)
+    params = {"w": jnp.zeros((N, D))}
+    key = jax.random.PRNGKey(0)
+    batch_fn = lambda k: (X, Y)  # noqa: E731
+
+    # -- keystone assert: a uniform fleet is BIT-EXACT with its plan ------
+    plan = make_plan(make_compressor("qsgd", levels=4), one,
+                     transport="packed", narrow=True)
+    r_plan = run_l2gd(key, params, grad_fn, hp, batch_fn, K,
+                      client_comp=plan, mode="scan")
+    r_fleet = run_l2gd(key, params, grad_fn, hp, batch_fn, K,
+                       client_comp=as_fleet_plan(plan, N), mode="scan")
+    assert np.array_equal(np.asarray(r_plan.state.params["w"]),
+                          np.asarray(r_fleet.state.params["w"])), \
+        "uniform-fleet keystone broke: params differ from single-plan path"
+    assert r_plan.ledger.history == r_fleet.ledger.history, \
+        "uniform-fleet keystone broke: ledger differs from single-plan path"
+
+    # -- scenarios: uniform (one cohort) and the 3-cohort mix -------------
+    scenarios = [
+        as_fleet_plan(plan, N),                                # uniform
+        _fleet(one, tuple(i % 3 for i in range(N))),           # mixed
+    ]
+    for fleet in scenarios:
+        bound = fleet.bind(one)
+        bits_round = bound.total_round_bits()
+        # warm (own compile), then time a fresh driver call — symmetric
+        # cold measurement, same protocol realization (same key)
+        run_l2gd(key, params, grad_fn, hp, batch_fn, K,
+                 client_comp=fleet, mode="scan")
+        t0 = time.perf_counter()
+        r = run_l2gd(key, params, grad_fn, hp, batch_fn, K,
+                     client_comp=fleet, mode="scan")
+        dt = time.perf_counter() - t0
+        # conservation: ledger total == rounds * sum_i bits_i exactly
+        assert r.ledger.uplink_bits_per_client * N == \
+            r.ledger.rounds * bits_round, "fleet ledger bits not conserved"
+        sps = K / dt
+        emit(scenario_name("fleet", bound.mix, f"n{N}"), dt * 1e6 / K,
+             f"steps/s={sps:.0f} bits/round={bits_round:.0f} "
+             f"rounds={r.ledger.rounds} cohorts={bound.n_cohorts}",
+             steps_per_s=round(sps, 1), bits_per_round=bits_round,
+             rounds=r.ledger.rounds, n_clients=N)
+
+    common.merge_json(common.bench_json_path(), common.RESULTS[start:])
+
+
+if __name__ == "__main__":
+    run()

@@ -40,7 +40,25 @@ def timed(fn, *args, warmup: int = 1, iters: int = 5):
     return best * 1e6, out
 
 
+def scenario_name(prefix: str, *parts) -> str:
+    """Row name for a multi-scenario bench: ``prefix`` + one ``_``-joined
+    segment per distinguishing part (cohort mix, client count, ...), e.g.
+    ``scenario_name("fleet", "identity-natural-qsgd4n", "n8")`` ->
+    ``fleet_identity-natural-qsgd4n_n8``.  Names key the
+    BENCH_kernels.json baselines ``run.py --check`` compares against, so
+    every scenario a bench emits MUST land on a distinct name — two
+    scenarios sharing a name silently overwrite each other's baseline
+    (and :func:`emit` warns when a run re-emits one)."""
+    segs = [str(prefix)] + [str(p) for p in parts if p not in (None, "")]
+    return "_".join(segs)
+
+
 def emit(name: str, us_per_call: float, derived, **extra) -> None:
+    if any(r["name"] == name for r in RESULTS):
+        print(f"[warn] duplicate bench row name {name!r}: this row will "
+              "shadow the earlier one in the --check baseline; add the "
+              "distinguishing scenario parts via scenario_name()",
+              flush=True)
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
     RESULTS.append({"name": name, "us_per_call": round(us_per_call, 1),
                     "derived": str(derived),

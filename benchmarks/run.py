@@ -10,6 +10,7 @@
   sharded -- client-sharded rollout scaling             [system, DESIGN §9]
   async  -- arrival-ordered faulty rounds vs sync scan  [system, DESIGN §11]
   serve  -- base+delta serving: residency, TTFT         [system, DESIGN §12]
+  fleet  -- heterogeneous per-cohort plans, mixed fleet [system, DESIGN §13]
   roofline -- dry-run roofline table                    [deliverable g]
 
 Prints ``name,us_per_call,derived`` CSV lines; ``--json PATH``
@@ -32,8 +33,8 @@ import traceback
 
 from benchmarks import (bench_agg_reduce, bench_async, bench_fig3_sweep,
                         bench_fig4_compressors, bench_fig7_fedavg_recovery,
-                        bench_kernels, bench_roofline, bench_rollout,
-                        bench_serve, bench_sharded_rollout,
+                        bench_fleet, bench_kernels, bench_roofline,
+                        bench_rollout, bench_serve, bench_sharded_rollout,
                         bench_table2_bits, common)
 
 BENCHES = {
@@ -47,6 +48,7 @@ BENCHES = {
     "sharded": bench_sharded_rollout.run,
     "async": bench_async.run,
     "serve": bench_serve.run,
+    "fleet": bench_fleet.run,
     "roofline": bench_roofline.run,
 }
 

@@ -61,6 +61,19 @@ def _shard_map(f, *, mesh, in_specs, out_specs):
                      check_rep=False)
 
 
+def _resolve_uplink(comp, transport=None):
+    """Plan-or-fleet coercion for uplink arguments: single plans pass
+    through, plain compressors coerce via ``as_plan``, uniform fleets
+    unwrap to their one plan (the keystone: the engine then compiles the
+    LITERAL single-plan graph), mixed fleets return the FleetPlan itself.
+    The fl import is lazy (call time) — a top-level one would close the
+    core<->fl package-init cycle (DESIGN.md §13)."""
+    if isinstance(comp, CompressionPlan):
+        return comp
+    from repro.fl.fleet import resolve_uplink
+    return resolve_uplink(comp, transport)
+
+
 def masked_client_mean(tree_stacked, mask):
     """Mean over the leading client axis restricted to ``mask``'s
     participants: ``sum_i m_i x_i / sum_i m_i``.  ``mask=None`` is the
@@ -127,16 +140,30 @@ def compressed_average(key: jax.Array, params_stacked,
     deprecated shim; in the pjit runtime pass leafwise plans instead
     (raveling model-axis-sharded leaves forces a rematerialization,
     repro.core.flatbuf's sharding note).
+
+    ``client_comp`` may also be a :class:`repro.fl.fleet.FleetPlan`
+    (heterogeneous fleet, DESIGN.md §13): clients group by cohort at
+    trace time, each flat/packed cohort folds on its own O(d) fused
+    accumulator, cohort partial sums add and divide ONCE by the total
+    participant weight.  A uniform fleet unwraps to its single plan
+    before any of this — bit-exact with the historic path.  Client i
+    always uses key ``split(k_clients, n)[i]`` regardless of grouping.
     """
     transport = None
     if flat is not _UNSET:
         transport = _legacy_transport(flat, "compressed_average(..., flat=)")
-    up_plan = as_plan(client_comp, transport)
+    up_plan = _resolve_uplink(client_comp, transport)
     down_plan = as_plan(master_comp, transport)
     n = jax.tree_util.tree_leaves(params_stacked)[0].shape[0]
     k_clients, k_master = jax.random.split(key)
     client_keys = jax.random.split(k_clients, n)
-    if up_plan.transport in ("flat", "packed"):
+    if not isinstance(up_plan, CompressionPlan):
+        from repro.fl.fleet import fleet_mean
+        if up_plan.n_clients != n:
+            raise ValueError(f"fleet covers {up_plan.n_clients} clients; "
+                             f"params are stacked for {n}")
+        ybar = fleet_mean(up_plan, client_keys, params_stacked, mask)
+    elif up_plan.transport in ("flat", "packed"):
         # fused decode->reduce (DESIGN.md §10): encode-only vmap, then the
         # ONE-pass kernel accumulates the masked mean straight from the
         # packed codes — no per-client dequantized tree is materialized
@@ -349,20 +376,91 @@ def make_client_sharded_average(axis_name: str, n_clients: int,
     :func:`compressed_average` (same key schedule, encode→decode ==
     apply, the SAME fused reduce over the same gathered arrays) — the
     equivalence the sharded rollout's headline test pins.
+
+    ``client_comp`` may be a :class:`repro.fl.fleet.FleetPlan`.  A
+    uniform fleet unwraps to the single-plan path above (keystone).  A
+    MIXED fleet cannot group clients per shard (the shard's identity is
+    a traced ``axis_index``, but cohort grouping must be static), so
+    every shard encodes ALL of its local clients under EACH used cohort
+    plan, gathers each cohort's payload batch over ``axis_name``, and
+    weights client i by the STATIC 0/1 cohort-membership vector (× the
+    participation mask × the finite guard) before the per-cohort fused
+    fold — membership partitions the fleet, so each client contributes
+    through exactly one cohort and the folded total divides once by the
+    true participant weight.  The collective then moves every cohort's
+    payload for every client (simulation-only overhead; the LEDGER still
+    charges per-client ``round_bits(i)`` of the client's own plan —
+    wire accounting and simulator collectives are decoupled, §13).
     """
-    up_plan = as_plan(client_comp)
+    up = _resolve_uplink(client_comp)
     down_plan = as_plan(master_comp)
+
+    if isinstance(up, CompressionPlan):
+        up_plan = up
+
+        def average_fn(key, params_local, mask=None):
+            m = jax.tree_util.tree_leaves(params_local)[0].shape[0]
+            k_clients, k_master = jax.random.split(key)
+            # global key schedule, replicated; this shard's slice by index
+            ckd = jax.random.key_data(jax.random.split(k_clients, n_clients))
+            local_keys = jax.random.wrap_key_data(
+                jax.lax.dynamic_slice_in_dim(
+                    ckd, jax.lax.axis_index(axis_name) * m, m))
+            payload = jax.vmap(up_plan.encode)(local_keys, params_local)
+            ybar = _gather_reduce(up_plan, payload, (axis_name,),
+                                  batched=True, mask=mask)
+            return down_plan.apply(k_master, ybar)
+
+        return average_fn
+
+    from repro.core import flatbuf
+    fleet = up
+    if fleet.n_clients != n_clients:
+        raise ValueError(f"fleet covers {fleet.n_clients} clients; the "
+                         f"sharded engine runs {n_clients}")
 
     def average_fn(key, params_local, mask=None):
         m = jax.tree_util.tree_leaves(params_local)[0].shape[0]
         k_clients, k_master = jax.random.split(key)
-        # global key schedule, replicated; this shard's slice by index
         ckd = jax.random.key_data(jax.random.split(k_clients, n_clients))
         local_keys = jax.random.wrap_key_data(jax.lax.dynamic_slice_in_dim(
             ckd, jax.lax.axis_index(axis_name) * m, m))
-        payload = jax.vmap(up_plan.encode)(local_keys, params_local)
-        ybar = _gather_reduce(up_plan, payload, (axis_name,), batched=True,
-                              mask=mask)
+        base = jnp.ones((n_clients,), jnp.float32) if mask is None \
+            else mask.reshape(-1).astype(jnp.float32)
+        total, wsum = None, jnp.zeros((n_clients,), jnp.float32)
+        for c in fleet.used_cohorts:
+            plan_c = fleet.cohorts[c]
+            member = jnp.asarray(
+                [1.0 if a == c else 0.0 for a in fleet.assignment],
+                jnp.float32)
+            if plan_c.transport in ("flat", "packed"):
+                payload = jax.vmap(plan_c.encode)(local_keys, params_local)
+                gathered = _gather_payloads(payload, (axis_name,),
+                                            batched=True)
+                fin = flatbuf.payload_finite_mask(gathered)
+                gathered = flatbuf.sanitize_payload(gathered, fin)
+                w = member * base * fin
+                layout = gathered.layout
+                acc = flatbuf.reduce_payload_acc(gathered, w)
+                part = flatbuf.unravel(layout,
+                                       flatbuf.unbucketize(acc, layout.d))
+            else:
+                contrib = jax.vmap(lambda k, p: plan_c.apply(k, p))(
+                    local_keys, params_local)
+                gathered = _gather_payloads(contrib, (axis_name,),
+                                            batched=True)
+                fin = stacked_finite_mask(gathered)
+                w = member * base * fin
+                part = weighted_client_sum(gathered, w)
+            part = jax.tree_util.tree_map(
+                lambda a: a.astype(jnp.float32), part)
+            total = part if total is None else jax.tree_util.tree_map(
+                jnp.add, total, part)
+            wsum = wsum + w
+        denom = jnp.sum(wsum)
+        safe = jnp.where(denom > 0, denom, 1.0)
+        ybar = jax.tree_util.tree_map(
+            lambda s, a: (s / safe).astype(a.dtype), total, params_local)
         return down_plan.apply(k_master, ybar)
 
     return average_fn

@@ -54,9 +54,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import (masked_client_mean, stacked_finite_mask,
-                                    weighted_client_sum)
-from repro.core.codec import QSGDPayload, as_plan
+from repro.core.aggregation import (_resolve_uplink, masked_client_mean,
+                                    stacked_finite_mask, weighted_client_sum)
+from repro.core.codec import (CompressionPlan, NarrowQSGDPayload,
+                              QSGDPayload, as_plan)
 from repro.core.compressors import Identity
 from repro.core.l2gd import (L2GDHyper, L2GDState, aggregation_update,
                              draw_xi, local_update)
@@ -117,7 +118,7 @@ def fault_totals(trace: AsyncRolloutTrace) -> dict:
 
 
 def _is_fused(plan) -> bool:
-    return plan.transport in ("flat", "packed")
+    return getattr(plan, "transport", None) in ("flat", "packed")
 
 
 def init_async_state(params_stacked, client_comp,
@@ -127,18 +128,33 @@ def init_async_state(params_stacked, client_comp,
     The buffer's shape is the uplink plan's accumulator geometry: the
     bucketized wire accumulator for flat/packed transports (via
     ``eval_shape`` of the encode — no device work), one-model f32 leaves
-    for leafwise.  Chunked drivers create this ONCE and thread the
-    returned state across chunks (like ``L2GDState``)."""
-    up_plan = as_plan(client_comp)
+    for leafwise.  A MIXED :class:`repro.fl.fleet.FleetPlan` uplink also
+    buffers one-model f32 leaves — each cohort folds on its own wire
+    accumulator within the round, but the cross-cohort partial sums only
+    compose in model space (uniform fleets unwrap first and get their
+    plan's native geometry).  Chunked drivers create this ONCE and
+    thread the returned state across chunks (like ``L2GDState``)."""
+    up_plan = _resolve_uplink(client_comp)
     ns = fault_plan.n_slots
-    if _is_fused(up_plan):
+    if not isinstance(up_plan, CompressionPlan):
+        buf = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((ns,) + tuple(a.shape[1:]), jnp.float32),
+            params_stacked)
+    elif _is_fused(up_plan):
         one = jax.tree_util.tree_map(
             lambda a: jax.ShapeDtypeStruct(tuple(a.shape[1:]), a.dtype),
             params_stacked)
         pay = jax.eval_shape(
             lambda t: up_plan.encode(jax.random.PRNGKey(0), t), one)
-        acc = pay.codes.shape if isinstance(pay, QSGDPayload) \
-            else pay.exps.shape
+        if isinstance(pay, QSGDPayload):
+            acc = pay.codes.shape
+        elif isinstance(pay, NarrowQSGDPayload):
+            # the reduce widens narrow codes before folding, so the
+            # accumulator is the layout's bucket grid, not the packed
+            # sub-byte code shape
+            acc = (pay.layout.n_buckets, pay.layout.bucket)
+        else:
+            acc = pay.exps.shape
         buf = jnp.zeros((ns,) + tuple(acc), jnp.float32)
     else:
         buf = jax.tree_util.tree_map(
@@ -184,8 +200,19 @@ def _async_agg_fresh(st, agg, k, part, lat, drp, crs, *, n, q, grad_fn, hp,
     stale_w = agg.buf_w[sr]
 
     # ---- encode all n clients (the synchronous key schedule), guard ----
+    fleet = None if isinstance(up_plan, CompressionPlan) else up_plan
     fused = _is_fused(up_plan)
-    if fused:
+    if fleet is not None:
+        # mixed fleet (DESIGN.md §13): cohort-grouped encode; each
+        # cohort's quorum/straggler contributions fold on its own wire
+        # accumulator and compose as one-model f32 partial sums — the
+        # same structure as the leafwise tree buffer below, so the slot
+        # algebra is shared verbatim
+        from repro.fl.fleet import (fleet_encode, fleet_finite_mask,
+                                    fleet_weighted_sum)
+        cohort_batches = fleet_encode(fleet, client_keys, st.params)
+        fin = fleet_finite_mask(cohort_batches, n)
+    elif fused:
         payload = jax.vmap(up_plan.encode)(client_keys, st.params)
         fin = flatbuf.payload_finite_mask(payload)
         payload = flatbuf.sanitize_payload(payload, fin)
@@ -199,7 +226,13 @@ def _async_agg_fresh(st, agg, k, part, lat, drp, crs, *, n, q, grad_fn, hp,
     # ---- fold the quorum cohort + this round's matured slot ----
     tw = jnp.sum(w_fresh) + stale_w
     tw_safe = jnp.where(tw > 0, tw, 1.0)
-    if fused:
+    if fleet is not None:
+        fresh_sum = fleet_weighted_sum(cohort_batches, w_fresh)
+        stale_sum = jax.tree_util.tree_map(lambda a: a[sr], agg.buf)
+        ybar = jax.tree_util.tree_map(
+            lambda s, b, a: ((s + b) / tw_safe).astype(a.dtype),
+            fresh_sum, stale_sum, st.params)
+    elif fused:
         layout = payload.layout
         acc = flatbuf.reduce_payload_acc(payload, w_fresh)
         total = acc + agg.buf[sr]
@@ -239,7 +272,7 @@ def _async_agg_fresh(st, agg, k, part, lat, drp, crs, *, n, q, grad_fn, hp,
             st.cache)
 
     # ---- consume slot r, schedule the stragglers into future slots ----
-    if fused:
+    if fleet is None and fused:
         new_buf = agg.buf.at[sr].set(jnp.zeros_like(agg.buf[sr]))
     else:
         new_buf = jax.tree_util.tree_map(
@@ -251,7 +284,12 @@ def _async_agg_fresh(st, agg, k, part, lat, drp, crs, *, n, q, grad_fn, hp,
         w_a = late * (eff == a).astype(jnp.float32) * fin
         wt_a = w_a * jnp.float32(decay ** a)      # staleness at fold time
         slot = jnp.mod(agg.rnd + a, ns)           # never == sr for a in 1..D
-        if fused:
+        if fleet is not None:
+            acc_a = fleet_weighted_sum(cohort_batches, wt_a)
+            new_buf = jax.tree_util.tree_map(
+                lambda b, s: b.at[slot].add(s.astype(b.dtype)),
+                new_buf, acc_a)
+        elif fused:
             new_buf = new_buf.at[slot].add(
                 flatbuf.reduce_payload_acc(payload, wt_a))
         else:
@@ -372,8 +410,11 @@ def rollout_l2gd_async(key: jax.Array, state: L2GDState, hp: L2GDHyper,
     length = _rollout_length(batches, batch_axis, xi_trace, steps)
     hp = jax.tree_util.tree_map(jnp.asarray, hp)
     n = int(hp.n)
-    up_plan = as_plan(client_comp)
+    up_plan = _resolve_uplink(client_comp)   # plan, or a mixed FleetPlan
     down_plan = as_plan(master_comp)
+    if not isinstance(up_plan, CompressionPlan) and up_plan.n_clients != n:
+        raise ValueError(f"fleet covers {up_plan.n_clients} clients; "
+                         f"hp.n = {n}")
     if agg_state is None:
         agg_state = init_async_state(state.params, up_plan, fault_plan)
 

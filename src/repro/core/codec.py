@@ -407,6 +407,7 @@ class CompressionPlan:
     transport: str = "leafwise"
     specs: Any = None                   # one-model ShapeDtypeStruct pytree
     bucket: Optional[int] = None        # flat-engine bucket override
+    narrow: bool = False                # sub-byte QSGD wire (levels <= 7)
 
     def bind(self, params) -> "CompressionPlan":
         """Return a copy bound to ``params``' shapes (enables
@@ -425,7 +426,15 @@ class CompressionPlan:
                                      for k, leaf in zip(keys, leaves)),
                                treedef)
         from repro.core import flatbuf
-        return flatbuf.pack_tree(self.codec, key, tree, bucket=self.bucket)
+        payload = flatbuf.pack_tree(self.codec, key, tree, bucket=self.bucket)
+        if self.narrow:
+            # sub-byte wire: repack the int8 QSGD codes into width-bit
+            # fields (lossless — widen_tree_qsgd is the bit-exact
+            # inverse), so small-levels plans pay ~levels-worth of wire
+            # instead of a full byte per element.  nbits (and therefore
+            # round_bits / the ledger) reads the packed buffer.
+            payload = flatbuf.narrow_tree_qsgd(payload)
+        return payload
 
     def decode(self, payload):
         """Dequantize a Payload back to the pytree."""
@@ -469,7 +478,8 @@ class CompressionPlan:
 
 
 def make_plan(codec, params=None, *, transport: Optional[str] = None,
-              bucket: Optional[int] = None) -> CompressionPlan:
+              bucket: Optional[int] = None,
+              narrow: bool = False) -> CompressionPlan:
     """Build the once-per-model :class:`CompressionPlan`.
 
     Args:
@@ -483,6 +493,13 @@ def make_plan(codec, params=None, *, transport: Optional[str] = None,
         under pjit with model-axis-sharded params (DESIGN.md §7
         sharding table).
       bucket: flat-engine bucket override (defaults to the codec's).
+      narrow: carry QSGD codes as packed sub-byte fields on the wire
+        (flat/packed transport, ``levels <= 7``): 4 bits/code at
+        levels 2..7, 2 bits at levels 1 — lossless vs the int8 payload
+        (``flatbuf.widen_tree_qsgd`` round-trips bit-exactly), so
+        ``round_bits`` drops from ~8 to ~4 (or ~2) bits/element.  This
+        is what makes small qsgd levels a REAL bandwidth knob for the
+        fleet controller (DESIGN.md §13).
     """
     from repro.core import flatbuf
     if transport is None:
@@ -500,7 +517,20 @@ def make_plan(codec, params=None, *, transport: Optional[str] = None,
             f"levels={codec.levels} does not fit the flat engine's int8 "
             "wire payload; use transport='leafwise' (int16 codes) or "
             "levels <= 127")
-    plan = CompressionPlan(codec=codec, transport=transport, bucket=bucket)
+    if narrow:
+        if transport not in ("flat", "packed"):
+            raise ValueError("narrow=True needs the flat-engine payload "
+                             "(transport='flat' or 'packed'), not "
+                             f"{transport!r}")
+        if getattr(codec, "name", None) != "qsgd":
+            raise ValueError("narrow=True is a QSGD sub-byte repack; got "
+                             f"codec {getattr(codec, 'name', codec)!r}")
+        if codec.levels > 7:
+            raise ValueError(f"levels={codec.levels} does not fit a 4-bit "
+                             "narrow code (sign + 3 magnitude bits); use "
+                             "levels <= 7 or narrow=False")
+    plan = CompressionPlan(codec=codec, transport=transport, bucket=bucket,
+                           narrow=narrow)
     return plan.bind(params) if params is not None else plan
 
 
@@ -511,4 +541,10 @@ def as_plan(codec_or_plan, transport: Optional[str] = None,
     compressors keep working."""
     if isinstance(codec_or_plan, CompressionPlan):
         return codec_or_plan
+    if hasattr(codec_or_plan, "cohorts"):    # FleetPlan (duck-typed: no
+        # fl import from core at module scope — DESIGN.md §13)
+        raise TypeError(
+            "got a FleetPlan where a single CompressionPlan is expected; "
+            "only uplink arguments accept fleets (repro.fl.fleet."
+            "resolve_uplink) — the downlink C_M is one broadcast plan")
     return make_plan(codec_or_plan, params, transport=transport)

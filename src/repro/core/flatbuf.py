@@ -364,8 +364,11 @@ def widen_tree_qsgd(payload: NarrowQSGDPayload) -> QSGDPayload:
 
 def supports_fused_reduce(payload) -> bool:
     """True for stacked flat-engine payloads the one-pass server reduce
-    (:func:`reduce_payload_mean`) can consume directly."""
-    return isinstance(payload, (QSGDPayload, NaturalPayload)) \
+    (:func:`reduce_payload_mean`) can consume directly.  Narrow QSGD
+    payloads qualify: the reduce widens them to the exact int8 codes
+    first (lossless), then folds on the same O(d) accumulator."""
+    return isinstance(payload,
+                      (QSGDPayload, NaturalPayload, NarrowQSGDPayload)) \
         and getattr(payload, "layout", None) is not None
 
 
@@ -376,7 +379,7 @@ def payload_finite_mask(payload) -> jax.Array:
     sum over the client's buffer) or as biased-exponent code 255 (natural:
     ``(exp << 23)`` bitcasts to ±Inf) — both are O(n * wire) scans of the
     SMALL wire arrays, not of decoded f32 buffers."""
-    if isinstance(payload, QSGDPayload):
+    if isinstance(payload, (QSGDPayload, NarrowQSGDPayload)):
         ok = jnp.all(jnp.isfinite(payload.norms),
                      axis=tuple(range(1, payload.norms.ndim)))
     else:
@@ -394,7 +397,7 @@ def sanitize_payload(payload, finite_mask: jax.Array):
     weight alone cannot keep a poisoned payload out of the accumulator.
     For all-finite payloads the ``where`` selects every original element,
     so the sanitized payload is bit-identical to the input."""
-    if isinstance(payload, QSGDPayload):
+    if isinstance(payload, (QSGDPayload, NarrowQSGDPayload)):
         m = finite_mask.reshape((-1,) + (1,) * (payload.norms.ndim - 1))
         return dataclasses.replace(
             payload, norms=jnp.where(m > 0, payload.norms, 0.0))
@@ -411,7 +414,15 @@ def reduce_payload_acc(payload, weights) -> jax.Array:
     can fold arrival cohorts into ring-buffer slots and divide by the
     total weight only when a round completes.  ``weights`` is an (n,)
     float32 vector (staleness weights are arbitrary non-negative floats,
-    not just 0/1 masks); pass ``None`` for the unweighted sum."""
+    not just 0/1 masks); pass ``None`` for the unweighted sum.
+
+    Narrow (sub-byte wire) QSGD payloads widen to the bit-exact int8
+    codes first — ``unpack_bits``/``jnp.where`` are shape-generic, so the
+    widening maps over the stacked client axis unchanged — and then fold
+    on the identical kernel, so narrow and int8 wires reduce to the same
+    accumulator bits."""
+    if isinstance(payload, NarrowQSGDPayload):
+        payload = widen_tree_qsgd(payload)
     if isinstance(payload, QSGDPayload):
         return qsgd_reduce(payload.codes, payload.norms, weights,
                            levels=payload.levels)

@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import compressed_average
+from repro.core.aggregation import _resolve_uplink, compressed_average
 from repro.core.codec import _UNSET, _legacy_transport, as_plan
 from repro.core.compressors import Compressor, Identity
 
@@ -161,11 +161,13 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
       key:   PRNG key for compressor randomness.
       grad_fn: per-client ``(params_i, batch_i) -> (loss_i, grads_i)``.
       hp:    hyper-parameters.
-      client_comp / master_comp: the uplink C_i (identical across i, as in
-             the paper's experiments) and downlink C_M — each either a
-             :class:`repro.core.codec.CompressionPlan` or a plain
-             Compressor (coerced with auto transport: flat-buffer engine
-             where supported, the single-host default).
+      client_comp / master_comp: the uplink C_i and downlink C_M — each
+             either a :class:`repro.core.codec.CompressionPlan` or a
+             plain Compressor (coerced with auto transport: flat-buffer
+             engine where supported, the single-host default).
+             ``client_comp`` additionally accepts a :class:`repro.fl.
+             fleet.FleetPlan` (per-cohort C_i, DESIGN.md §13); a uniform
+             fleet unwraps to the single-plan path bit-exactly.
       average_fn: optional override of the compressed-average realization,
              ``(key, params_stacked) -> target`` — used by the beyond-paper
              wire-compressed shard_map aggregation (see repro.launch.steps).
@@ -198,7 +200,7 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
     transport = None
     if flat is not _UNSET:
         transport = _legacy_transport(flat, "l2gd_step(..., flat=)")
-    up_plan = as_plan(client_comp, transport)
+    up_plan = _resolve_uplink(client_comp, transport)
     down_plan = as_plan(master_comp, transport)
     if axis_name is not None and average_fn is None:
         raise ValueError(

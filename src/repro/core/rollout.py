@@ -65,7 +65,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import _shard_map, make_client_sharded_average
+from repro.core.aggregation import (_resolve_uplink, _shard_map,
+                                    make_client_sharded_average)
 from repro.core.codec import as_plan
 from repro.core.compressors import Identity
 from repro.core.l2gd import (L2GDHyper, L2GDState, draw_xi, init_state,
@@ -178,7 +179,11 @@ def rollout_l2gd(key: jax.Array, state: L2GDState, hp: L2GDHyper, batches,
       steps: rollout length; inferable from ``batches``/``xi_trace``.
       client_comp / master_comp: uplink/downlink codecs or
         :class:`~repro.core.codec.CompressionPlan`s (as in
-        :func:`~repro.core.l2gd.l2gd_step`).
+        :func:`~repro.core.l2gd.l2gd_step`); ``client_comp`` also takes
+        a :class:`repro.fl.fleet.FleetPlan` — per-cohort uplinks with
+        the static cohort assignment riding next to the participation
+        mask (uniform fleets unwrap to this path bit-exactly,
+        DESIGN.md §13).
       average_fn: optional aggregation override, forwarded to the step.
       unroll: ``lax.scan`` unroll factor.
       participation: optional client-sampling fraction f ∈ (0, 1]: every
@@ -323,7 +328,7 @@ def rollout_l2gd_sharded(key: jax.Array, state: L2GDState, hp: L2GDHyper,
         raise ValueError(f"state.params leading axis "
                          f"{leaves[0].shape[0]} != hp.n = {n}")
     hp = jax.tree_util.tree_map(jnp.asarray, hp)
-    up_plan = as_plan(client_comp)
+    up_plan = _resolve_uplink(client_comp)   # plan, or a mixed FleetPlan
     down_plan = as_plan(master_comp)
     average_fn = make_client_sharded_average(axis_name, n, up_plan,
                                              down_plan)

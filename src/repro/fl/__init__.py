@@ -1,6 +1,8 @@
 """FL runtime: the L2GD protocol driver, FedAvg/FedOpt baselines and the
 bits/n ledger reproducing the paper's communication accounting."""
-from repro.fl.ledger import BitsLedger
+from repro.fl.ledger import BitsLedger, per_client_uplink
+from repro.fl.fleet import FleetPlan, as_fleet_plan, resolve_uplink
+from repro.fl.controller import BandwidthBudgetController
 from repro.fl.faults import FaultPlan, geometric_latency_probs, fault_draws
 from repro.fl.l2gd_driver import L2GDRun, run_l2gd
 from repro.fl.fedavg import FedRun, run_fedavg, local_sgd_epochs

@@ -44,7 +44,7 @@ from repro.core.codec import _UNSET, CompressionPlan, make_plan
 from repro.core.rollout import (participant_count, participation_masks,
                                 rollout_l2gd)
 from repro.fl.faults import FaultPlan
-from repro.fl.ledger import BitsLedger
+from repro.fl.ledger import BitsLedger, per_client_uplink
 
 __all__ = ["L2GDRun", "run_l2gd"]
 
@@ -70,18 +70,31 @@ class L2GDRun:
 
 
 def _resolve_plans(client_comp, master_comp, plan, one_client):
+    """Resolve (uplink, downlink).  The uplink may be a
+    :class:`repro.fl.fleet.FleetPlan` — passed as ``client_comp`` or as
+    ``plan`` / ``plan[0]`` — whose cohorts are bound to the one-client
+    shapes here; a UNIFORM fleet unwraps to its single plan immediately
+    (keystone: the driver then runs the literal single-plan stack,
+    scalar ledger charge included).  The downlink is always one
+    broadcast plan."""
+    from repro.fl.fleet import FleetPlan, resolve_uplink
     if plan is None:
-        up_plan = make_plan(client_comp, one_client)
+        up_plan = client_comp \
+            if isinstance(client_comp, (CompressionPlan, FleetPlan)) \
+            else make_plan(client_comp, one_client)
         down_plan = make_plan(master_comp, one_client)
     elif isinstance(plan, (tuple, list)):
         up_plan, down_plan = plan
     else:
         up_plan, down_plan = plan, make_plan(master_comp, one_client)
-    if not isinstance(up_plan, CompressionPlan) \
+    if not isinstance(up_plan, (CompressionPlan, FleetPlan)) \
             or not isinstance(down_plan, CompressionPlan):
-        raise TypeError("plan must be a CompressionPlan or an "
-                        "(uplink, downlink) pair of CompressionPlans")
-    if up_plan.specs is None:
+        raise TypeError("plan must be a CompressionPlan (or a FleetPlan "
+                        "uplink) or an (uplink, downlink) pair — the "
+                        "downlink is always a single CompressionPlan")
+    if isinstance(up_plan, FleetPlan):
+        up_plan = resolve_uplink(up_plan.bind(one_client))
+    if isinstance(up_plan, CompressionPlan) and up_plan.specs is None:
         up_plan = up_plan.bind(one_client)
     if down_plan.specs is None:
         down_plan = down_plan.bind(one_client)
@@ -147,7 +160,11 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
     from ``client_comp`` / ``master_comp``.  Per round the ledger charges
     ``uplink_plan.round_bits()`` per client plus
     ``downlink_plan.round_bits()`` — both read from the payload spec
-    (DESIGN.md §3).
+    (DESIGN.md §3).  The uplink (``client_comp`` or ``plan``/``plan[0]``)
+    may be a :class:`repro.fl.fleet.FleetPlan`: per-cohort C_i on every
+    engine, with the ledger charging each round ``sum_i round_bits(i)/n``
+    per client (DESIGN.md §13); a uniform fleet is bit-exact with its
+    single plan.
 
     ``faults`` (optional :class:`repro.fl.faults.FaultPlan`) runs the
     protocol on the arrival-ordered async engine
@@ -202,8 +219,17 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
                                         one_client)
 
     # wire bits for one client's message / one broadcast: the payload
-    # spec is the single source of truth (no re-derivation here)
-    up_bits = up_plan.round_bits()
+    # spec is the single source of truth (no re-derivation here).  A
+    # mixed fleet charges a per-client VECTOR (round_bits_vector) that
+    # the ledger normalizes to its mean; uniform fleets were unwrapped
+    # to a single plan above and keep the historic scalar.
+    if isinstance(up_plan, CompressionPlan):
+        up_bits = up_plan.round_bits()
+    else:
+        if up_plan.n_clients != int(hp.n):
+            raise ValueError(f"fleet covers {up_plan.n_clients} clients; "
+                             f"hp.n = {int(hp.n)}")
+        up_bits = up_plan.round_bits_vector()
     down_bits = down_plan.round_bits()
 
     if xi_trace is not None:
@@ -246,6 +272,9 @@ def _run_host(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
         xis = xi_trace
 
     n = int(hp.n)
+    # the SAME normalization replay_xi_trace applies, so host-loop and
+    # replayed ledgers stay bit-identical for fleet vectors too
+    up_mean = per_client_uplink(up_bits, n)
     masks, scale = None, 1.0
     if participation is not None:
         s = participant_count(n, participation)
@@ -274,7 +303,7 @@ def _run_host(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
             run.n_local += 1
         elif xi_prev == 0:
             run.n_agg_comm += 1
-            run.ledger.record_round(scale * up_bits, scale * down_bits,
+            run.ledger.record_round(scale * up_mean, scale * down_bits,
                                     step=k)
         else:
             run.n_agg_cached += 1

@@ -34,13 +34,55 @@ The subset size is static (repro.core.rollout.participant_count — the
 same count the device mask sampler draws), so the replayed ledger still
 never sees the masks: the xi trace says WHEN a round happened, the
 static (s/n) * round_bits says HOW MUCH it cost.
+
+Heterogeneous fleets (DESIGN.md §13): under a mixed
+:class:`repro.fl.fleet.FleetPlan` clients carry DIFFERENT wire costs, so
+``uplink_bits_one_client`` also accepts a length-n per-client sequence
+(``FleetPlan.round_bits_vector()``).  :func:`per_client_uplink`
+normalizes either spelling to the per-client mean ``sum_i bits_i / n``
+once, and every charging rule above applies unchanged to that mean:
+
+  * full participation: a round adds ``sum_i bits_i / n`` per client, so
+    the fleet total ``n * uplink_bits_per_client`` after R rounds is
+    ``R * sum_i round_bits(i)`` EXACTLY — bits are conserved across any
+    cohort mix (the mixed-fleet keystone).
+  * sampled rounds charge ``(s/n) * mean`` — the subset is drawn
+    uniformly across the whole fleet (cohort-blind), so s/n of each
+    client's EXPECTED cost is the static charge; the ledger still never
+    sees the realized masks.
+
+A scalar stays the historic code path byte-for-byte (no sum/n detour),
+so uniform fleets — which unwrap to a single plan before the driver —
+charge identically to the single-plan stack.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Sequence, Union
 
-__all__ = ["BitsLedger"]
+__all__ = ["BitsLedger", "per_client_uplink"]
+
+#: a uniform per-client cost, or one cost per client (length n)
+UplinkBits = Union[float, Sequence[float]]
+
+
+def per_client_uplink(bits: UplinkBits, n_clients: int) -> float:
+    """Normalize an uplink cost to the per-client mean the ledger
+    charges: scalars pass through untouched (the historic single-plan
+    path), a length-n sequence — ``FleetPlan.round_bits_vector()`` —
+    becomes ``sum_i bits_i / n`` (summed left-to-right in client index
+    order, THE canonical association every charging site shares so host
+    loop and replay stay bit-identical)."""
+    if isinstance(bits, (int, float)):
+        return float(bits)
+    seq = [float(b) for b in bits]
+    if len(seq) != int(n_clients):
+        raise ValueError(f"per-client uplink bits cover {len(seq)} "
+                         f"clients, ledger has {n_clients}")
+    total = 0.0
+    for b in seq:
+        total += b
+    return total / int(n_clients)
 
 
 @dataclasses.dataclass
@@ -65,7 +107,7 @@ class BitsLedger:
             "bits_per_client": self.bits_per_client,
         })
 
-    def replay_xi_trace(self, xis, uplink_bits_one_client: float,
+    def replay_xi_trace(self, xis, uplink_bits_one_client: UplinkBits,
                         downlink_bits: float, *, xi_prev: int = 1,
                         start_step: int = 0,
                         participation: float | None = None) -> int:
@@ -80,9 +122,13 @@ class BitsLedger:
         round at s/n of a full round on both directions, where s =
         ``participant_count(n_clients, f)`` is the same static subset
         size the device mask sampler draws (module docstring, DESIGN.md
-        §9); ``None``/1.0 is full participation.  Returns the trace's
-        final xi — feed it back as ``xi_prev`` for the next chunk.
+        §9); ``None``/1.0 is full participation.
+        ``uplink_bits_one_client`` is a uniform scalar or a length-n
+        per-client vector — fleet charging, module docstring.  Returns
+        the trace's final xi — feed it back as ``xi_prev`` for the next
+        chunk.
         """
+        up_bits = per_client_uplink(uplink_bits_one_client, self.n_clients)
         scale = 1.0
         if participation is not None:
             from repro.core.rollout import participant_count
@@ -90,14 +136,14 @@ class BitsLedger:
                                       participation) / self.n_clients
         for i, xi in enumerate(int(x) for x in xis):
             if xi == 1 and xi_prev == 0:
-                self.record_round(scale * uplink_bits_one_client,
+                self.record_round(scale * up_bits,
                                   scale * downlink_bits,
                                   step=start_step + i)
             xi_prev = xi
         return xi_prev
 
     def replay_fault_trace(self, xis, sent, delivered,
-                           uplink_bits_one_client: float,
+                           uplink_bits_one_client: UplinkBits,
                            downlink_bits: float, *, xi_prev: int = 1,
                            start_step: int = 0,
                            charge_dropped: bool = True) -> int:
@@ -121,15 +167,20 @@ class BitsLedger:
 
         With no faults and full delivery this reduces to
         :meth:`replay_xi_trace` bit-for-bit (sent == delivered == s every
-        round).  Returns the final xi, like :meth:`replay_xi_trace`.
+        round).  ``uplink_bits_one_client`` accepts the fleet's
+        per-client vector exactly as :meth:`replay_xi_trace` does (the
+        event counts are cohort-blind, so each counted payload charges
+        the fleet-mean cost).  Returns the final xi, like
+        :meth:`replay_xi_trace`.
         """
         n = self.n_clients
+        up_bits = per_client_uplink(uplink_bits_one_client, n)
         for i, xi in enumerate(int(x) for x in xis):
             if xi == 1 and xi_prev == 0:
                 up_count = int(sent[i]) if charge_dropped \
                     else int(delivered[i])
                 self.record_round(
-                    (up_count / n) * uplink_bits_one_client,
+                    (up_count / n) * up_bits,
                     (int(sent[i]) / n) * downlink_bits,
                     step=start_step + i)
             xi_prev = xi

@@ -109,6 +109,22 @@ def cache_specs(cfg: ArchConfig, batch: int, capacity: int):
 # step builders
 # ---------------------------------------------------------------------------
 
+def _uplink_plan(client_comp, shapes):
+    """Uplink coercion shared by the step/rollout builders: plain
+    compressors get the builders' historic leafwise default, ready
+    CompressionPlans pass through (bound if needed), and a
+    :class:`repro.fl.fleet.FleetPlan` binds every cohort to the model
+    shapes and unwraps if uniform (DESIGN.md §13 keystone — the builder
+    then emits the literal single-plan graph)."""
+    if hasattr(client_comp, "cohorts"):      # FleetPlan (lazy fl import)
+        from repro.fl.fleet import resolve_uplink
+        return resolve_uplink(client_comp.bind(shapes))
+    if isinstance(client_comp, CompressionPlan):
+        return client_comp if client_comp.specs is not None \
+            else client_comp.bind(shapes)
+    return make_plan(client_comp, shapes, transport="leafwise")
+
+
 def build_average_fn(*args, uplink="wire", kind: str = None, **kwargs):
     """Aggregation realization for :func:`build_train_step`'s
     ``average_fn`` hook.
@@ -173,6 +189,12 @@ def build_train_step(cfg: ArchConfig, hp: L2GDHyper,
     :func:`build_average_fn` for the beyond-paper shard_map variants
     (stochastic-bf16 wire / packed payload, §Perf).
 
+    ``client_comp`` may also be a ready :class:`CompressionPlan` or a
+    :class:`repro.fl.fleet.FleetPlan` (heterogeneous cohorts, DESIGN.md
+    §13) — fleets bind to the model shapes here and uniform fleets
+    unwrap to the single-plan graph.  The same holds for every rollout
+    builder below.
+
     ``plans`` (optional) is an (uplink, downlink) pair of
     :class:`CompressionPlan`s; by default both compressors get
     ``transport="leafwise"`` plans: this step lowers under pjit with
@@ -190,7 +212,7 @@ def build_train_step(cfg: ArchConfig, hp: L2GDHyper,
     outer jit decides."""
     if plans is None:
         shapes = param_shapes(cfg)
-        plans = (make_plan(client_comp, shapes, transport="leafwise"),
+        plans = (_uplink_plan(client_comp, shapes),
                  make_plan(master_comp, shapes, transport="leafwise"))
     up_plan, down_plan = plans
 
@@ -236,7 +258,7 @@ def build_rollout_fn(cfg: ArchConfig, hp: L2GDHyper,
     from repro.core.rollout import rollout_l2gd
     if plans is None:
         shapes = param_shapes(cfg)
-        plans = (make_plan(client_comp, shapes, transport="leafwise"),
+        plans = (_uplink_plan(client_comp, shapes),
                  make_plan(master_comp, shapes, transport="leafwise"))
     up_plan, down_plan = plans
 
@@ -284,7 +306,7 @@ def build_async_rollout_fn(cfg: ArchConfig, hp: L2GDHyper,
         fault_plan = FaultPlan()
     if plans is None:
         shapes = param_shapes(cfg)
-        plans = (make_plan(client_comp, shapes, transport="leafwise"),
+        plans = (_uplink_plan(client_comp, shapes),
                  make_plan(master_comp, shapes, transport="leafwise"))
     up_plan, down_plan = plans
 
@@ -328,16 +350,20 @@ def build_sharded_rollout_fn(cfg: ArchConfig, hp: L2GDHyper, *, mesh,
     ``BitsLedger.replay_xi_trace(trace.xis, ...,
     participation=participation)``.
 
-    Plans are pinned to ``transport="leafwise"``: each model is whole on
-    its device (no model-axis sharding), and the leafwise payload keeps
-    the all_gather free of the flat engine's cross-leaf ravel.
+    Plans for plain compressors are pinned to ``transport="leafwise"``:
+    each model is whole on its device (no model-axis sharding), and the
+    leafwise payload keeps the all_gather free of the flat engine's
+    cross-leaf ravel.  A :class:`repro.fl.fleet.FleetPlan`
+    ``client_comp`` keeps each cohort's own transport (the engine
+    gathers every cohort's payload and weights by static membership
+    masks — DESIGN.md §13).
 
     ``donate=True`` (default) jits the rollout with the state carry
     donated, exactly as :func:`build_rollout_fn` (each device's param
     shard is aliased input->output across the chunk)."""
     from repro.core.rollout import rollout_l2gd_sharded
     shapes = param_shapes(cfg)
-    up_plan = make_plan(client_comp, shapes, transport="leafwise")
+    up_plan = _uplink_plan(client_comp, shapes)
     down_plan = make_plan(master_comp, shapes, transport="leafwise")
 
     def grad_fn(params_i, batch_i):

@@ -48,13 +48,15 @@ def plan_spec(plan: CompressionPlan) -> dict:
     kwargs = {f.name: getattr(comp, f.name)
               for f in dataclasses.fields(comp) if f.init}
     return {"codec": comp.name, "kwargs": kwargs,
-            "transport": plan.transport, "bucket": plan.bucket}
+            "transport": plan.transport, "bucket": plan.bucket,
+            "narrow": plan.narrow}
 
 
 def plan_from_spec(spec: dict) -> CompressionPlan:
     comp = make_compressor(spec["codec"], **spec.get("kwargs", {}))
     return codec_mod.make_plan(comp, transport=spec["transport"],
-                               bucket=spec.get("bucket"))
+                               bucket=spec.get("bucket"),
+                               narrow=spec.get("narrow", False))
 
 
 class DeltaModelStore:
@@ -85,19 +87,35 @@ class DeltaModelStore:
                     f"levels={levels!r}")
         self._key = key if key is not None else jax.random.PRNGKey(0)
         self._payloads: Dict[str, Any] = {}
+        self._tenant_plans: Dict[str, CompressionPlan] = {}
 
     # -- ingestion ----------------------------------------------------------
-    def add_tenant(self, tenant, params) -> None:
-        """Encode ``params − base`` under the plan and store the payload."""
+    def add_tenant(self, tenant, params, *, plan=None) -> None:
+        """Encode ``params − base`` under the plan and store the payload.
+
+        ``plan`` (optional) overrides the store default for THIS tenant —
+        the serving face of a heterogeneous fleet (DESIGN.md §13): a
+        phone-cohort tenant can stay at 4-bit narrow residency while a
+        desktop cohort keeps int8.  Overridden tenants store exactly what
+        their own plan encodes (including its ``narrow`` flag); the
+        store-level ``narrow`` repack applies only to default-plan
+        tenants (it is a QSGD repack — an arbitrary override codec has
+        no narrow form)."""
         tid = str(tenant)
         if tid in self._payloads:
             raise ValueError(f"tenant {tid!r} already stored")
         delta = jax.tree.map(lambda x, b: (x - b).astype(jnp.float32),
                              params, self.base)
         k = jax.random.fold_in(self._key, len(self._payloads))
-        payload = self.plan.encode(k, delta)
-        if self.narrow:
-            payload = flatbuf.narrow_tree_qsgd(payload)
+        if plan is not None:
+            tplan = as_plan(plan).bind(self.base)
+            self._tenant_plans[tid] = tplan
+            payload = tplan.encode(k, delta)
+        else:
+            payload = self.plan.encode(k, delta)
+            if self.narrow and not isinstance(payload,
+                                              flatbuf.NarrowQSGDPayload):
+                payload = flatbuf.narrow_tree_qsgd(payload)
         self._payloads[tid] = payload
 
     @classmethod
@@ -106,15 +124,31 @@ class DeltaModelStore:
                     narrow: bool = False) -> "DeltaModelStore":
         """Ingest client-stacked training params (leading client axis, the
         layout every trainer/checkpoint in this repo uses): base is the
-        client mean, tenant i's delta is ``x_i − mean(x)``."""
+        client mean, tenant i's delta is ``x_i − mean(x)``.
+
+        ``plan`` may be a :class:`repro.fl.fleet.FleetPlan` (the SAME
+        cohort table the trainer used): tenant i is ingested under
+        ``fleet.plan_for(i)`` — cohort-of-client-0's plan becomes the
+        store default, the other cohorts ride per-tenant overrides."""
         n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
         base = jax.tree.map(lambda a: jnp.mean(a, axis=0), stacked)
+        fleet = plan if hasattr(plan, "cohorts") else None
+        if fleet is not None:
+            if fleet.n_clients != n:
+                raise ValueError(f"fleet covers {fleet.n_clients} clients; "
+                                 f"params are stacked for {n}")
+            plan = fleet.plan_for(0)
         store = cls(base, plan, key=key, narrow=narrow)
         ids = [str(i) for i in range(n)] if ids is None else list(ids)
         if len(ids) != n:
             raise ValueError(f"{len(ids)} ids for {n} client slices")
         for i, tid in enumerate(ids):
-            store.add_tenant(tid, jax.tree.map(lambda a: a[i], stacked))
+            override = None
+            if fleet is not None \
+                    and fleet.cohort_of(i) != fleet.cohort_of(0):
+                override = fleet.plan_for(i)
+            store.add_tenant(tid, jax.tree.map(lambda a: a[i], stacked),
+                             plan=override)
         return store
 
     @classmethod
@@ -138,10 +172,17 @@ class DeltaModelStore:
     def payload(self, tenant):
         return self._payloads[str(tenant)]
 
+    def tenant_plan(self, tenant) -> CompressionPlan:
+        """The plan tenant's payload was encoded under: its override if
+        one was given to :meth:`add_tenant`, else the store default."""
+        return self._tenant_plans.get(str(tenant), self.plan)
+
     def materialize(self, tenant):
         """Decode one tenant's params: base + decode(payload), cast back to
         the base dtype leafwise.  Deterministic — decode has no rng."""
-        delta = decode_payload(self._payloads[str(tenant)], self.plan.codec)
+        tid = str(tenant)
+        delta = decode_payload(self._payloads[tid],
+                               self.tenant_plan(tid).codec)
         return jax.tree.map(lambda b, d: (b + d.astype(jnp.float32))
                             .astype(b.dtype), self.base, delta)
 
@@ -163,6 +204,21 @@ class DeltaModelStore:
             return 0.0
         return len(self._payloads) / (self.total_bits() / _BITS_PER_GB)
 
+    def models_per_gb_by_cohort(self) -> Dict[str, float]:
+        """:meth:`models_per_gb` split by cohort — tenants group by their
+        plan's :func:`repro.fl.fleet.cohort_label` (override or default),
+        and each cohort's density counts the shared base once in ITS
+        total (the number a cohort-only deployment would see), so the
+        per-cohort figures bracket the blended :meth:`models_per_gb`."""
+        from repro.fl.fleet import cohort_label
+        groups: Dict[str, List[float]] = {}
+        for tid, payload in self._payloads.items():
+            label = cohort_label(self.tenant_plan(tid))
+            groups.setdefault(label, []).append(float(payload.nbits))
+        base = self.base_bits()
+        return {label: len(bits) / ((base + sum(bits)) / _BITS_PER_GB)
+                for label, bits in groups.items()}
+
     def dense_models_per_gb(self, bits_per_param: float = 16.0) -> float:
         """Models/GB if every tenant were resident dense at
         ``bits_per_param`` (16 = bf16 reference, 32 = this repo's actual
@@ -181,6 +237,10 @@ class DeltaModelStore:
             "key": self._key,
             "ids": list(self._payloads),
             "payloads": list(self._payloads.values()),
+            # per-tenant plan overrides, as (ids, specs) parallel lists
+            "tenant_plan_ids": list(self._tenant_plans),
+            "tenant_plan_specs": [plan_spec(p)
+                                  for p in self._tenant_plans.values()],
         })
 
     @classmethod
@@ -190,4 +250,9 @@ class DeltaModelStore:
                     key=jnp.asarray(t["key"], jnp.uint32),
                     narrow=bool(t["narrow"]))
         store._payloads = dict(zip(t["ids"], t["payloads"]))
+        # pre-override stores have no tenant plan table (back-compat)
+        store._tenant_plans = {
+            tid: plan_from_spec(spec).bind(store.base)
+            for tid, spec in zip(t.get("tenant_plan_ids", ()),
+                                 t.get("tenant_plan_specs", ()))}
         return store

@@ -1,0 +1,578 @@
+"""Heterogeneous-fleet plans (DESIGN.md §13).
+
+The two keystones, test-pinned:
+
+  * UNIFORM fleet (every client in one cohort) is BIT-EXACT with the
+    single-plan path — every codec x transport x engine, forced xi
+    traces and partial participation included.  The unwrap is
+    structural (``resolve_uplink`` returns the single plan and the
+    engine compiles the literal historic graph), so these assertions
+    are ``array_equal``, not allclose.
+  * MIXED fleets conserve ledger bits: a full-participation round
+    charges exactly ``sum_i round_bits(i) / n`` per client, so the
+    fleet total after R rounds is ``R * sum_i round_bits(i)`` to the
+    bit, for arbitrary (xi, participation, cohort-assignment) traces
+    (property-tested against a hand-counted per-client sum).
+
+Plus: the FleetPlan API surface, the mixed-fleet aggregation against a
+hand-built per-client reference, the narrow sub-byte wire, the
+bandwidth-budget controller's determinism/budget contract, the
+fleet-aware DeltaModelStore, and the run_l2gd driver integration.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep — deterministic stub fallback
+    from _hypothesis_stub import given, settings, strategies as st
+
+from conftest import DIM as D, N_CLIENTS as N, quad_batch, quad_grad_fn, \
+    zero_params
+from repro.core import (Identity, compressed_average, init_state,
+                        make_compressor, make_hyper, make_plan,
+                        participant_count, rollout_l2gd,
+                        rollout_l2gd_sharded)
+from repro.core.async_engine import rollout_l2gd_async
+from repro.core.codec import CompressionPlan, as_plan
+from repro.fl import run_l2gd
+from repro.fl.controller import BandwidthBudgetController, qsgd_level_plan
+from repro.fl.fleet import (FleetPlan, as_fleet_plan, cohort_label,
+                            fleet_mean, resolve_uplink)
+from repro.fl.ledger import BitsLedger, per_client_uplink
+from repro.launch.mesh import make_client_mesh
+
+BATCH = quad_batch()
+ONE = {"w": jnp.zeros((D,), jnp.float32)}
+
+
+def _hp(p=0.5):
+    return make_hyper(eta=0.3, lam=1.0, p=p, n=N)
+
+
+def _mixed_fleet(params=ONE, assignment=(0, 1, 2, 2)):
+    """The canonical 3-cohort mix: identity-leafwise / natural-flat /
+    narrow qsgd4-packed."""
+    cohorts = (make_plan(Identity(), params, transport="leafwise"),
+               make_plan(make_compressor("natural"), params,
+                         transport="flat"),
+               make_plan(make_compressor("qsgd", levels=4), params,
+                         transport="packed", narrow=True))
+    return FleetPlan(cohorts=cohorts, assignment=assignment)
+
+
+# ---------------------------------------------------------------------------
+# FleetPlan API
+# ---------------------------------------------------------------------------
+
+def test_fleet_plan_api():
+    fleet = _mixed_fleet()
+    assert fleet.n_clients == N and fleet.n_cohorts == 3
+    assert fleet.used_cohorts == (0, 1, 2)
+    assert not fleet.is_uniform
+    assert fleet.cohort_of(3) == 2
+    assert fleet.plan_for(1) is fleet.cohorts[1]
+    assert fleet.clients_of(2) == (2, 3)
+    assert fleet.mix == "identity-natural-qsgd4n"
+    vec = fleet.round_bits_vector()
+    assert len(vec) == N
+    assert vec[2] == vec[3] == fleet.round_bits(2)
+    assert fleet.total_round_bits() == sum(vec)
+    with pytest.raises(ValueError, match="no single uniform plan"):
+        fleet.uniform_plan
+
+
+def test_fleet_plan_validation():
+    plan = make_plan(Identity(), ONE)
+    with pytest.raises(ValueError, match="at least one cohort"):
+        FleetPlan(cohorts=(), assignment=())
+    with pytest.raises(TypeError, match="not a CompressionPlan"):
+        FleetPlan(cohorts=(Identity(),), assignment=(0,))
+    with pytest.raises(ValueError, match="assigned to cohort"):
+        FleetPlan(cohorts=(plan,), assignment=(0, 1))
+    with pytest.raises(ValueError, match="names for"):
+        FleetPlan(cohorts=(plan,), assignment=(0,), names=("a", "b"))
+
+
+def test_as_fleet_plan_and_resolve():
+    plan = make_plan(make_compressor("qsgd"), ONE, transport="flat")
+    fleet = as_fleet_plan(plan, N)
+    assert fleet.is_uniform and fleet.n_clients == N
+    # the keystone unwrap is STRUCTURAL: the very same plan object
+    assert resolve_uplink(fleet) is plan
+    assert as_fleet_plan(fleet, N) is fleet
+    with pytest.raises(ValueError, match="covers"):
+        as_fleet_plan(fleet, N + 1)
+    mixed = _mixed_fleet()
+    assert resolve_uplink(mixed) is mixed
+    # a fleet is rejected where a single plan is required (downlink)
+    with pytest.raises(TypeError, match="FleetPlan"):
+        as_plan(mixed)
+
+
+def test_cohort_labels():
+    assert cohort_label(make_plan(Identity(), ONE)) == "identity"
+    assert cohort_label(make_plan(make_compressor("qsgd", levels=4), ONE,
+                                  transport="packed", narrow=True)) == \
+        "qsgd4n"
+    assert cohort_label(make_plan(make_compressor("natural"), ONE)) == \
+        "natural"
+
+
+# ---------------------------------------------------------------------------
+# uniform-fleet keystone: every codec x transport x engine, bit-exact
+# ---------------------------------------------------------------------------
+
+_KEYSTONE_PLANS = [
+    ("identity", "leafwise", {}),
+    ("qsgd", "leafwise", {}),
+    ("qsgd", "flat", {}),
+    ("qsgd", "packed", {}),
+    ("natural", "flat", {}),
+    ("natural", "packed", {}),
+    ("qsgd4n", "packed", {"levels": 4, "narrow": True}),
+]
+
+
+def _keystone_plan(name, transport, opts):
+    opts = dict(opts)
+    narrow = opts.pop("narrow", False)
+    codec = make_compressor(name.rstrip("0123456789n"), **opts)
+    return make_plan(codec, ONE, transport=transport, narrow=narrow)
+
+
+@pytest.mark.parametrize("name,transport,opts", _KEYSTONE_PLANS)
+@pytest.mark.parametrize("participation", [None, 0.5])
+def test_uniform_keystone_stacked(name, transport, opts, participation):
+    plan = _keystone_plan(name, transport, opts)
+    xi = jnp.asarray([0, 1, 0, 0, 1, 1], jnp.int32)  # forced trace
+    outs = []
+    for comp in (plan, as_fleet_plan(plan, N)):
+        st, tr = rollout_l2gd(
+            jax.random.PRNGKey(1), init_state(zero_params()), _hp(), BATCH,
+            xi, grad_fn=quad_grad_fn, client_comp=comp, master_comp=plan,
+            batch_axis=None, participation=participation)
+        outs.append((st.params["w"], tr.xis))
+    np.testing.assert_array_equal(np.asarray(outs[0][0]),
+                                  np.asarray(outs[1][0]))
+    np.testing.assert_array_equal(np.asarray(outs[0][1]),
+                                  np.asarray(outs[1][1]))
+
+
+@pytest.mark.parametrize("name,transport,opts", _KEYSTONE_PLANS)
+@pytest.mark.parametrize("participation", [None, 0.5])
+def test_uniform_keystone_async(name, transport, opts, participation):
+    plan = _keystone_plan(name, transport, opts)
+    batches = jnp.broadcast_to(BATCH, (6,) + BATCH.shape)
+    outs = []
+    for comp in (plan, as_fleet_plan(plan, N)):
+        st, ag, tr = rollout_l2gd_async(
+            jax.random.PRNGKey(2), init_state(zero_params()), _hp(),
+            batches, grad_fn=quad_grad_fn, client_comp=comp,
+            master_comp=plan, participation=participation)
+        outs.append(st.params["w"])
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(outs[1]))
+
+
+@pytest.mark.parametrize("name,transport,opts",
+                         [("qsgd", "flat", {}), ("natural", "packed", {}),
+                          ("identity", "leafwise", {})])
+@pytest.mark.parametrize("participation", [None, 0.5])
+def test_uniform_keystone_sharded(name, transport, opts, participation):
+    plan = _keystone_plan(name, transport, opts)
+    mesh = make_client_mesh(1)
+    outs = []
+    for comp in (plan, as_fleet_plan(plan, N)):
+        st, tr = rollout_l2gd_sharded(
+            jax.random.PRNGKey(3), init_state(zero_params()), _hp(), BATCH,
+            mesh=mesh, grad_fn=quad_grad_fn, steps=6, client_comp=comp,
+            master_comp=plan, participation=participation, batch_axis=None)
+        outs.append(st.params["w"])
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(outs[1]))
+
+
+# ---------------------------------------------------------------------------
+# mixed-fleet aggregation vs a hand-built per-client reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mask", [None, (1.0, 0.0, 1.0, 1.0)])
+def test_mixed_fleet_mean_matches_reference(mask):
+    fleet = _mixed_fleet()
+    stacked = {"w": jax.random.normal(jax.random.PRNGKey(5), (N, D))}
+    keys = jax.random.split(jax.random.PRNGKey(6), N)
+    m = None if mask is None else jnp.asarray(mask, jnp.float32)
+    got = fleet_mean(fleet, keys, stacked, m)
+    # reference: decode client i with ITS plan and key, plain masked mean
+    contribs = [fleet.plan_for(i).apply(
+        keys[i], jax.tree_util.tree_map(lambda a: a[i], stacked))
+        for i in range(N)]
+    sel = [c for i, c in enumerate(contribs)
+           if mask is None or mask[i] > 0]
+    ref = jax.tree_util.tree_map(
+        lambda *xs: sum(x.astype(jnp.float32) for x in xs) / len(sel), *sel)
+    np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(ref["w"]),
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_mixed_compressed_average_uses_client_key_schedule():
+    """Client i's randomness is split(k_clients, n)[i] regardless of
+    cohort grouping: compressed_average(fleet) == fleet_mean on the same
+    derived keys."""
+    fleet = _mixed_fleet()
+    stacked = {"w": jax.random.normal(jax.random.PRNGKey(8), (N, D))}
+    key = jax.random.PRNGKey(9)
+    down = make_plan(Identity(), ONE)
+    got = compressed_average(key, stacked, fleet, down)
+    k_clients, k_master = jax.random.split(key)
+    ref = fleet_mean(fleet, jax.random.split(k_clients, N), stacked)
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(ref["w"]))
+
+
+def test_mixed_fleet_sharded_matches_stacked():
+    """1-device mesh: the encode-all + static-membership-mask sharded
+    fold computes the same mixed mean as the stacked cohort grouping
+    (same key schedule; f32 association may differ by grouping order)."""
+    fleet = _mixed_fleet()
+    kw = dict(grad_fn=quad_grad_fn, steps=6, client_comp=fleet,
+              master_comp=Identity(), batch_axis=None)
+    st_sh, tr_sh = rollout_l2gd_sharded(
+        jax.random.PRNGKey(4), init_state(zero_params()), _hp(), BATCH,
+        mesh=make_client_mesh(1), **kw)
+    st_st, tr_st = rollout_l2gd(
+        jax.random.PRNGKey(4), init_state(zero_params()), _hp(), BATCH, **kw)
+    np.testing.assert_array_equal(np.asarray(tr_sh.xis),
+                                  np.asarray(tr_st.xis))
+    np.testing.assert_allclose(np.asarray(st_sh.params["w"]),
+                               np.asarray(st_st.params["w"]),
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_mixed_fleet_async_runs_finite():
+    fleet = _mixed_fleet()
+    batches = jnp.broadcast_to(BATCH, (6,) + BATCH.shape)
+    st, ag, tr = rollout_l2gd_async(
+        jax.random.PRNGKey(11), init_state(zero_params()), _hp(), batches,
+        grad_fn=quad_grad_fn, client_comp=fleet, master_comp=Identity(),
+        participation=0.5)
+    assert bool(jnp.all(jnp.isfinite(st.params["w"])))
+    n_rounds = int(np.sum((np.asarray(tr.xis)[1:] == 1)
+                          & (np.asarray(tr.xis)[:-1] == 0)))
+    assert n_rounds >= 0  # trace surface intact
+
+
+def test_fleet_size_mismatch_raises():
+    fleet = _mixed_fleet(assignment=(0, 1, 2))  # 3 clients, params have N
+    stacked = zero_params()
+    with pytest.raises(ValueError, match="covers 3 clients"):
+        compressed_average(jax.random.PRNGKey(0), stacked, fleet,
+                           make_plan(Identity(), ONE))
+
+
+# ---------------------------------------------------------------------------
+# narrow sub-byte wire
+# ---------------------------------------------------------------------------
+
+def test_narrow_wire_lossless_and_cheaper():
+    x = {"w": jax.random.normal(jax.random.PRNGKey(12), (D,))}
+    wide = make_plan(make_compressor("qsgd", levels=4), x, transport="flat")
+    narrow = make_plan(make_compressor("qsgd", levels=4), x,
+                       transport="flat", narrow=True)
+    k = jax.random.PRNGKey(13)
+    np.testing.assert_array_equal(
+        np.asarray(wide.decode(wide.encode(k, x))["w"]),
+        np.asarray(narrow.decode(narrow.encode(k, x))["w"]))
+    assert narrow.round_bits() < wide.round_bits()
+
+
+def test_narrow_validation():
+    with pytest.raises(ValueError, match="narrow=True needs"):
+        make_plan(make_compressor("qsgd", levels=4), ONE,
+                  transport="leafwise", narrow=True)
+    with pytest.raises(ValueError, match="QSGD"):
+        make_plan(make_compressor("natural"), ONE, transport="flat",
+                  narrow=True)
+    with pytest.raises(ValueError, match="levels"):
+        make_plan(make_compressor("qsgd", levels=15), ONE, transport="flat",
+                  narrow=True)
+
+
+# ---------------------------------------------------------------------------
+# fleet ledger accounting
+# ---------------------------------------------------------------------------
+
+def test_per_client_uplink_scalar_passthrough():
+    assert per_client_uplink(123.5, N) == 123.5
+    assert per_client_uplink((10.0, 20.0, 30.0, 40.0), N) == 25.0
+    with pytest.raises(ValueError, match="cover"):
+        per_client_uplink((1.0, 2.0), N)
+
+
+def test_mixed_fleet_conserves_ledger_bits():
+    """Full participation, R rounds: fleet total == R * sum_i bits_i to
+    the bit (the mixed-fleet keystone)."""
+    fleet = _mixed_fleet().bind(ONE)
+    vec = fleet.round_bits_vector()
+    led = BitsLedger(n_clients=N)
+    xis = [0, 1, 0, 0, 1, 1, 0, 1]  # 3 rounds
+    led.replay_xi_trace(xis, vec, 0.0)
+    assert led.rounds == 3
+    assert led.uplink_bits_per_client * N == 3 * sum(vec)
+
+
+@settings(max_examples=30)
+@given(st.lists(st.integers(0, 1), min_size=1, max_size=24),
+       st.sampled_from([None, 0.25, 0.5, 1.0]),
+       st.lists(st.integers(0, 2), min_size=N, max_size=N))
+def test_fleet_ledger_replay_property(xis, participation, assignment):
+    """Arbitrary (xi, participation, cohort-assignment) traces replay to
+    a hand-counted per-client sum — including the s == n (participation
+    1.0) and single-cohort degenerate edges the strategy can draw."""
+    fleet = _mixed_fleet(assignment=tuple(assignment)).bind(ONE)
+    vec = fleet.round_bits_vector()
+    led = BitsLedger(n_clients=N)
+    led.replay_xi_trace(xis, vec, 100.0, participation=participation)
+    # hand count, charging with the IDENTICAL arithmetic (left-to-right
+    # per-client sum, one scale multiply per round)
+    scale = 1.0 if participation is None \
+        else participant_count(N, participation) / N
+    mean = per_client_uplink(vec, N)
+    exp_up, exp_down, rounds, prev = 0.0, 0.0, 0, 1
+    for xi in xis:
+        if xi == 1 and prev == 0:
+            exp_up += scale * mean
+            exp_down += scale * 100.0
+            rounds += 1
+        prev = xi
+    assert led.rounds == rounds
+    assert led.uplink_bits_per_client == exp_up
+    assert led.downlink_bits_per_client == exp_down
+
+
+@settings(max_examples=20)
+@given(st.lists(st.integers(0, 1), min_size=2, max_size=16),
+       st.lists(st.integers(0, N), min_size=16, max_size=16),
+       st.booleans())
+def test_fleet_fault_trace_replay_property(xis, counts, charge_dropped):
+    """replay_fault_trace charges the fleet-mean per counted payload —
+    hand-counted parity for arbitrary event counts."""
+    fleet = _mixed_fleet().bind(ONE)
+    vec = fleet.round_bits_vector()
+    sent = counts[:len(xis)] + [N] * max(0, len(xis) - len(counts))
+    delivered = [min(s, N - 1) for s in sent]
+    led = BitsLedger(n_clients=N)
+    led.replay_fault_trace(xis, sent, delivered, vec, 64.0,
+                           charge_dropped=charge_dropped)
+    mean = per_client_uplink(vec, N)
+    exp_up, prev = 0.0, 1
+    for i, xi in enumerate(xis):
+        if xi == 1 and prev == 0:
+            cnt = sent[i] if charge_dropped else delivered[i]
+            exp_up += (cnt / N) * mean
+        prev = xi
+    assert led.uplink_bits_per_client == exp_up
+
+
+def test_driver_mixed_fleet_ledger_and_modes():
+    """run_l2gd accepts a FleetPlan uplink: scan and host modes charge
+    identically, and the charge is rounds * sum_i bits_i / n."""
+    fleet = _mixed_fleet()
+    runs = {}
+    for mode in ("scan", "host"):
+        runs[mode] = run_l2gd(
+            jax.random.PRNGKey(14), zero_params(), quad_grad_fn, _hp(),
+            lambda k: BATCH, 10, client_comp=fleet,
+            master_comp=Identity(), mode=mode)
+    vec = fleet.bind(ONE).round_bits_vector()
+    for mode, r in runs.items():
+        assert r.ledger.uplink_bits_per_client == \
+            r.ledger.rounds * (sum(vec) / N), mode
+    assert runs["scan"].ledger.uplink_bits_per_client == \
+        runs["host"].ledger.uplink_bits_per_client
+    np.testing.assert_array_equal(
+        np.asarray(runs["scan"].state.params["w"]),
+        np.asarray(runs["host"].state.params["w"]))
+
+
+def test_driver_uniform_fleet_keystone():
+    plan = make_plan(make_compressor("qsgd"), ONE, transport="flat")
+    kw = dict(master_comp=Identity(), mode="scan")
+    r_plan = run_l2gd(jax.random.PRNGKey(15), zero_params(), quad_grad_fn,
+                      _hp(), lambda k: BATCH, 8, client_comp=plan, **kw)
+    r_fleet = run_l2gd(jax.random.PRNGKey(15), zero_params(), quad_grad_fn,
+                       _hp(), lambda k: BATCH, 8,
+                       client_comp=as_fleet_plan(plan, N), **kw)
+    assert r_plan.ledger.uplink_bits_per_client == \
+        r_fleet.ledger.uplink_bits_per_client
+    np.testing.assert_array_equal(np.asarray(r_plan.state.params["w"]),
+                                  np.asarray(r_fleet.state.params["w"]))
+
+
+# ---------------------------------------------------------------------------
+# bandwidth-budget controller
+# ---------------------------------------------------------------------------
+
+def _budget_fleet():
+    """Two adjustable qsgd cohorts + one fixed natural cohort."""
+    cohorts = (make_plan(make_compressor("qsgd", levels=127), ONE,
+                         transport="flat"),
+               make_plan(make_compressor("qsgd", levels=127), ONE,
+                         transport="packed"),
+               make_plan(make_compressor("natural"), ONE, transport="flat"))
+    return FleetPlan(cohorts=cohorts, assignment=(0, 1, 2, 2))
+
+
+def test_controller_deterministic_and_within_budget():
+    fleet = _budget_fleet()
+    floor = dataclasses.replace(
+        fleet, cohorts=(qsgd_level_plan(fleet.cohorts[0], 1),
+                        qsgd_level_plan(fleet.cohorts[1], 1),
+                        fleet.cohorts[2]))
+    budget = (floor.total_round_bits() + fleet.total_round_bits()) / 2
+    ctrl = BandwidthBudgetController(budget_bits_per_round=budget)
+    out1 = ctrl.next_fleet(fleet)
+    out2 = ctrl.next_fleet(fleet)
+    # pure function of (budget, fleet, history): replays identically
+    assert [cohort_label(p) for p in out1.cohorts] == \
+        [cohort_label(p) for p in out2.cohorts]
+    assert out1.assignment == fleet.assignment
+    assert out1.total_round_bits() <= budget
+    # fixed cohort untouched
+    assert out1.cohorts[2] is fleet.cohorts[2]
+    # adjustable cohorts are on the menu and narrow when sub-byte
+    for c in (0, 1):
+        levels = out1.cohorts[c].codec.levels
+        assert levels in ctrl.levels_menu
+        assert out1.cohorts[c].narrow == (levels <= 7)
+
+
+def test_controller_budget_monotone():
+    fleet = _budget_fleet()
+    costs = []
+    for mult in (0.4, 1.0, 3.0):
+        ctrl = BandwidthBudgetController(
+            budget_bits_per_round=mult * fleet.total_round_bits())
+        costs.append(ctrl.next_fleet(fleet).total_round_bits())
+    assert costs == sorted(costs)
+    # a huge budget tops every adjustable cohort out at the menu max
+    big = BandwidthBudgetController(
+        budget_bits_per_round=100 * fleet.total_round_bits())
+    out = big.next_fleet(fleet)
+    assert out.cohorts[0].codec.levels == big.levels_menu[-1]
+    assert out.cohorts[1].codec.levels == big.levels_menu[-1]
+
+
+def test_controller_ledger_feedback():
+    fleet = _budget_fleet()
+    budget = fleet.total_round_bits()
+    ctrl = BandwidthBudgetController(budget_bits_per_round=budget)
+    # underspent history rolls the allowance forward deterministically
+    led = BitsLedger(n_clients=N)
+    led.record_round(0.25 * budget / N, 0.0)
+    assert ctrl.allowance(led) == budget * 2 - 0.25 * budget
+    rich = ctrl.next_fleet(fleet, led)
+    poor_led = BitsLedger(n_clients=N)
+    poor_led.record_round(2.0 * budget / N, 0.0)  # overspent: tightens
+    poor = ctrl.next_fleet(fleet, poor_led)
+    assert poor.total_round_bits() <= rich.total_round_bits()
+
+
+def test_controller_validation_and_fixed_fleet():
+    with pytest.raises(ValueError, match="positive"):
+        BandwidthBudgetController(budget_bits_per_round=0.0)
+    with pytest.raises(ValueError, match="ascending"):
+        BandwidthBudgetController(1.0, levels_menu=(7, 3))
+    with pytest.raises(ValueError, match="int8"):
+        BandwidthBudgetController(1.0, levels_menu=(1, 255))
+    # nothing adjustable -> the fleet comes back unchanged
+    fixed = FleetPlan(
+        cohorts=(make_plan(Identity(), ONE),
+                 make_plan(make_compressor("natural"), ONE,
+                           transport="flat")),
+        assignment=(0, 1, 1, 0))
+    ctrl = BandwidthBudgetController(budget_bits_per_round=1.0)
+    assert ctrl.next_fleet(fixed) is fixed
+
+
+# ---------------------------------------------------------------------------
+# fleet-aware DeltaModelStore
+# ---------------------------------------------------------------------------
+
+def test_store_fleet_ingest_and_cohort_density(tmp_path):
+    from repro.serve.store import DeltaModelStore
+    big = {"w": jnp.zeros((512,), jnp.float32)}
+    stacked = {"w": jax.random.normal(jax.random.PRNGKey(16), (N, 512))}
+    cohorts = (make_plan(make_compressor("qsgd", levels=127), big,
+                         transport="flat"),
+               make_plan(make_compressor("qsgd", levels=4), big,
+                         transport="flat", narrow=True))
+    fleet = FleetPlan(cohorts=cohorts, assignment=(0, 1, 1, 0))
+    store = DeltaModelStore.from_params(stacked, fleet)
+    assert len(store) == N
+    assert cohort_label(store.tenant_plan("0")) == "qsgd127"
+    assert cohort_label(store.tenant_plan("1")) == "qsgd4n"
+    by_cohort = store.models_per_gb_by_cohort()
+    assert set(by_cohort) == {"qsgd127", "qsgd4n"}
+    assert by_cohort["qsgd4n"] > by_cohort["qsgd127"]  # narrow is denser
+    for i in range(N):
+        assert bool(jnp.all(jnp.isfinite(store.materialize(i)["w"])))
+    # persistence round-trips the per-tenant plan table bit-exactly
+    path = str(tmp_path / "fleet_store.ckpt")
+    store.save(path)
+    loaded = DeltaModelStore.load(path)
+    assert loaded.models_per_gb_by_cohort() == by_cohort
+    for i in range(N):
+        np.testing.assert_array_equal(np.asarray(store.materialize(i)["w"]),
+                                      np.asarray(loaded.materialize(i)["w"]))
+
+
+def test_store_add_tenant_override():
+    from repro.serve.store import DeltaModelStore
+    base = {"w": jnp.zeros((128,), jnp.float32)}
+    store = DeltaModelStore(
+        base, make_plan(make_compressor("qsgd", levels=127), base,
+                        transport="flat"))
+    x = {"w": jnp.ones((128,), jnp.float32)}
+    store.add_tenant("dense", x)
+    store.add_tenant("phone", x,
+                     plan=make_plan(make_compressor("qsgd", levels=4), base,
+                                    transport="flat", narrow=True))
+    assert store.tenant_plan("dense") is store.plan
+    assert store.tenant_bits("phone") < store.tenant_bits("dense")
+    assert bool(jnp.all(jnp.isfinite(store.materialize("phone")["w"])))
+
+
+# ---------------------------------------------------------------------------
+# launch-layer builders accept fleets
+# ---------------------------------------------------------------------------
+
+def test_build_rollout_fn_fleet():
+    import dataclasses as dc
+    from repro.configs.base import get_config
+    from repro.launch.steps import build_rollout_fn, param_shapes
+    from repro.models import init_params
+    from repro.core import init_state as init_l2gd_state
+
+    cfg = dc.replace(get_config("stablelm-1.6b").reduced(), vocab_size=32)
+    n, steps = 2, 4
+    shapes = param_shapes(cfg)
+    fleet = FleetPlan(
+        cohorts=(make_plan(make_compressor("natural"), shapes,
+                           transport="flat"),
+                 make_plan(make_compressor("qsgd", levels=4), shapes,
+                           transport="packed", narrow=True)),
+        assignment=(0, 1))
+    keys = jax.random.split(jax.random.PRNGKey(0), n)
+    params = jax.vmap(lambda k: init_params(k, cfg))(keys)
+    hp = make_hyper(eta=0.05, lam=0.5, p=0.4, n=n)
+    roll = build_rollout_fn(cfg, hp, fleet, length=steps)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (steps, n, 2, 8), 0,
+                              cfg.vocab_size)
+    key_data = jax.random.key_data(jax.random.PRNGKey(2))
+    st, trace = jax.jit(roll)(init_l2gd_state(params), {"tokens": toks},
+                              key_data)
+    assert bool(jnp.all(jnp.isfinite(trace.losses)))
+    for leaf in jax.tree_util.tree_leaves(st.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
