@@ -1,0 +1,117 @@
+"""Checkpoint subsystem benchmark (DESIGN.md §14): what a snapshot
+costs the training loop, and what delta checkpoints save on disk.
+
+Before emitting the async row the bench ASSERTS the PR-9 acceptance
+bound — the async ``save()`` call blocks the caller for < 10% of a
+fully synchronous sharded commit — so the perf row can never outlive
+the property it advertises.
+
+Rows (merged into BENCH_kernels.json):
+
+  ckpt_save_sync        — one blocking sharded commit (pack + write +
+                          fsync + latest-pointer flip), ~16 MB tree
+  ckpt_save_async_block — caller-visible cost of the SAME save issued
+                          async: just the host snapshot memcpy; the
+                          derived field records the blocked fraction
+  ckpt_restore          — eager sharded restore of the latest step
+  ckpt_restore_lazy     — lazy restore (zero-copy views into the shard
+                          buffers; leaves materialize on use)
+  ckpt_delta_pack       — encode the stacked client params as
+                          per-client codec payloads vs the global model
+                          (natural, packed); derived records the
+                          delta-vs-dense on-disk bytes ratio    [gated]
+
+The ``*_pack`` row rides the tier-2 ``--check`` regression gate.
+
+Run: PYTHONPATH=src python -m benchmarks.run --only ckpt [--json PATH]
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit, timed
+from repro.checkpoint import CheckpointManager
+from repro.checkpoint.resume import delta_pack_stacked
+from repro.core import make_compressor
+from repro.core.codec import make_plan
+
+N_CLIENTS = 8
+ITERS = 4
+
+
+def _tree():
+    """~16 MB stacked-params snapshot stand-in: a couple of big leaves
+    plus the small scalars a real rollout snapshot carries."""
+    k0, k1 = jax.random.split(jax.random.PRNGKey(0))
+    return {"w": jax.random.normal(k0, (N_CLIENTS, 1024, 512),
+                                   jnp.float32),
+            "b": jax.random.normal(k1, (N_CLIENTS, 4096), jnp.float32),
+            "step": jnp.int32(123)}
+
+
+def _time_saves(mgr, tree, *, wait):
+    """Min caller-blocked seconds over ITERS commits (distinct steps so
+    every commit writes a fresh directory; the manager is drained
+    between iterations so async commits never queue behind each other)."""
+    best = float("inf")
+    for i in range(ITERS):
+        t0 = time.perf_counter()
+        mgr.save(i + (0 if wait else ITERS), tree, wait=wait)
+        best = min(best, time.perf_counter() - t0)
+        mgr.wait_until_finished()
+    return best
+
+
+def run():
+    start = len(common.RESULTS)
+    tree = jax.block_until_ready(_tree())
+    nbytes = sum(l.nbytes for l in jax.tree_util.tree_leaves(tree))
+
+    with tempfile.TemporaryDirectory(prefix="bench_ckpt_") as td:
+        with CheckpointManager(td, max_to_keep=2) as mgr:
+            mgr.save(10_000, tree, wait=True)          # warmup both paths
+            sync_s = _time_saves(mgr, tree, wait=True)
+            async_s = _time_saves(mgr, tree, wait=False)
+            frac = async_s / sync_s
+            # acceptance bound BEFORE the rows exist: async must hand
+            # control back after the snapshot memcpy alone
+            assert frac < 0.10, (
+                f"async save() blocked {async_s * 1e3:.1f} ms = "
+                f"{frac:.1%} of the {sync_s * 1e3:.1f} ms sync commit "
+                "(acceptance bound: < 10%)")
+            emit("ckpt_save_sync", sync_s * 1e6,
+                 f"{nbytes / sync_s / 2**30:.2f}GiB/s",
+                 tree_mb=round(nbytes / 2**20, 1))
+            emit("ckpt_save_async_block", async_s * 1e6,
+                 f"{frac:.1%}_of_sync", tree_mb=round(nbytes / 2**20, 1))
+
+            restore_us, _ = timed(lambda: mgr.restore(), iters=ITERS)
+            lazy_us, lazy_tree = timed(lambda: mgr.restore(lazy=True),
+                                       iters=ITERS)
+            assert np.array_equal(np.asarray(lazy_tree["w"]),
+                                  np.asarray(tree["w"]))
+            emit("ckpt_restore", restore_us,
+                 f"{nbytes / (restore_us / 1e6) / 2**30:.2f}GiB/s")
+            emit("ckpt_restore_lazy", lazy_us,
+                 f"{restore_us / max(lazy_us, 1e-9):.1f}x_vs_eager")
+
+    # delta checkpoint payloads vs dense storage (DESIGN.md §12/§14)
+    params = {k: tree[k] for k in ("w", "b")}
+    base = jax.tree.map(lambda a: jnp.mean(a, axis=0), params)
+    plan = make_plan(make_compressor("natural"), base, transport="packed")
+    pack_us, block = timed(
+        lambda: delta_pack_stacked(params, base, plan), iters=ITERS)
+    delta_bytes = sum(p.nbits for p in block["payloads"]) / 8
+    dense_bytes = sum(l.nbytes for l in jax.tree_util.tree_leaves(params))
+    emit("ckpt_delta_pack", pack_us,
+         f"{dense_bytes / delta_bytes:.2f}x_smaller",
+         delta_mb=round(delta_bytes / 2**20, 2),
+         dense_mb=round(dense_bytes / 2**20, 2))
+
+    common.merge_json(common.bench_json_path(), common.RESULTS[start:])

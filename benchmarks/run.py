@@ -11,6 +11,7 @@
   async  -- arrival-ordered faulty rounds vs sync scan  [system, DESIGN §11]
   serve  -- base+delta serving: residency, TTFT         [system, DESIGN §12]
   fleet  -- heterogeneous per-cohort plans, mixed fleet [system, DESIGN §13]
+  ckpt   -- async sharded checkpointing, delta storage  [system, DESIGN §14]
   roofline -- dry-run roofline table                    [deliverable g]
 
 Prints ``name,us_per_call,derived`` CSV lines; ``--json PATH``
@@ -31,10 +32,11 @@ import os
 import sys
 import traceback
 
-from benchmarks import (bench_agg_reduce, bench_async, bench_fig3_sweep,
-                        bench_fig4_compressors, bench_fig7_fedavg_recovery,
-                        bench_fleet, bench_kernels, bench_roofline,
-                        bench_rollout, bench_serve, bench_sharded_rollout,
+from benchmarks import (bench_agg_reduce, bench_async, bench_checkpoint,
+                        bench_fig3_sweep, bench_fig4_compressors,
+                        bench_fig7_fedavg_recovery, bench_fleet,
+                        bench_kernels, bench_roofline, bench_rollout,
+                        bench_serve, bench_sharded_rollout,
                         bench_table2_bits, common)
 
 BENCHES = {
@@ -49,6 +51,7 @@ BENCHES = {
     "async": bench_async.run,
     "serve": bench_serve.run,
     "fleet": bench_fleet.run,
+    "ckpt": bench_checkpoint.run,
     "roofline": bench_roofline.run,
 }
 

@@ -1,213 +1,63 @@
-"""msgpack-based pytree checkpointing (orbax is not available offline).
+"""Async, sharded, resumable checkpointing (DESIGN.md §14).
 
-Arrays are stored as (dtype, shape, raw bytes); the pytree structure is
-serialized by flattening with jax.tree_util and storing the treedef's
-string-keyed path skeleton.  Round-trips dicts / lists / tuples /
-NamedTuples-as-tuples of jnp/np arrays and python scalars, plus every
-registered codec Payload dataclass (repro.core.codec — wire arrays,
-static meta, and the FlatLayout/treedef statics) BIT-EXACTLY, so the
-serving delta store persists compressed tenants in the same pack format
-the training checkpoints use (DESIGN.md §12).
+The package splits into four layers:
 
-Payload serialization notes:
+  * :mod:`repro.checkpoint.io` — durable container files: magic +
+    length + CRC-32 header, tmp→fsync→rename→dir-fsync writes,
+    :class:`CheckpointCorruptError` on validation failure (the PR-9
+    durability bugfix: the historic ``save`` fsynced nothing).
+  * :mod:`repro.checkpoint.pack` — pytree <-> msgpack marker format
+    (arrays, scalars, tuples, codec Payloads, treedefs/FlatLayouts),
+    with reserved-marker key ESCAPING (user dicts containing
+    ``"__arr__"``-style keys round-trip exactly now) and a zero-copy
+    ``np_views`` unpack mode.
+  * :mod:`repro.checkpoint.manager` — :class:`CheckpointManager`:
+    step-tagged sharded directories, background-thread commit (``save``
+    blocks for one host memcpy and returns a Future), atomic ``latest``
+    pointer with a header-validating fallback scan, retention pruning.
+  * :mod:`repro.checkpoint.resume` — :class:`CheckpointPolicy` and the
+    rollout snapshot format ``run_l2gd`` uses for bit-exact mid-scan
+    resume, plus compressed-delta (codec Payload) param storage.
 
-  * the class registry is seeded lazily from ``repro.core.codec.Payload``
-    and extensible via :func:`register_payload_class` for out-of-core
-    payload dataclasses;
-  * ``jax.tree_util`` treedefs (TreePayload / FlatLayout statics) are
-    stored as an int-leaf skeleton with tuple markers preserved, so
-    dict/list/tuple structures reconstruct exactly (the one structure
-    msgpack alone collapses is tuple -> list);
-  * static dtypes serialize as their numpy names, shapes as lists
-    restored to tuples — reconstructed payloads compare equal as pytrees
-    and their wire arrays compare bit-equal (property-tested per payload
-    type in tests/test_serve.py).
+The historic single-file API (``save`` / ``restore`` / ``save_state`` /
+``restore_state``) is unchanged in signature and now durable: writes go
+through the container header + fsync pipeline, reads validate and still
+accept headerless legacy files.  ``restore(lazy=True)`` returns
+read-only numpy views instead of device arrays.
 """
 from __future__ import annotations
 
-import dataclasses
-import os
 from typing import Any
 
-import jax
-import jax.numpy as jnp
-import msgpack
-import numpy as np
+from .io import (CheckpointCorruptError, MAGIC, header_valid, read_durable,
+                 write_durable)
+from .manager import (CheckpointManager, all_steps, latest_step,
+                      restore_sharded, save_sharded, step_dir)
+from .pack import (pack_bytes, register_payload_class, unpack_bytes)
+from .resume import (CheckpointPolicy, RolloutSnapshot,
+                     load_rollout_checkpoint)
 
 __all__ = ["save", "restore", "save_state", "restore_state",
-           "register_payload_class"]
-
-_ARR = "__arr__"
-_SCALAR = "__scalar__"
-_TUPLE = "__tuple__"
-_PAYLOAD = "__payload__"
-_LAYOUT = "__layout__"
-_TREEDEF = "__treedef__"
-
-# name -> dataclass; seeded from repro.core.codec on first use so the
-# checkpoint module stays importable without pulling the codec layer in
-_PAYLOAD_CLASSES: dict = {}
-
-
-def register_payload_class(cls) -> type:
-    """Register a payload dataclass for checkpoint round-trips (the codec
-    payloads are pre-registered; serving-side formats call this)."""
-    _PAYLOAD_CLASSES[cls.__name__] = cls
-    return cls
-
-
-def _payload_classes() -> dict:
-    if not _PAYLOAD_CLASSES:
-        from repro.core.codec import Payload
-        for cls in Payload:
-            _PAYLOAD_CLASSES.setdefault(cls.__name__, cls)
-    return _PAYLOAD_CLASSES
-
-
-def _is_payload(obj) -> bool:
-    return dataclasses.is_dataclass(obj) and not isinstance(obj, type) \
-        and type(obj).__name__ in _payload_classes() \
-        and type(obj) is _payload_classes()[type(obj).__name__]
-
-
-# -- treedef <-> int-leaf skeleton (tuples preserved via marker dicts) ------
-
-def _pack_structure(obj: Any):
-    if isinstance(obj, dict):
-        return {k: _pack_structure(v) for k, v in obj.items()}
-    if isinstance(obj, tuple):
-        return {_TUPLE: [_pack_structure(v) for v in obj]}
-    if isinstance(obj, list):
-        return [_pack_structure(v) for v in obj]
-    return obj
-
-
-def _unpack_structure(obj: Any):
-    if isinstance(obj, dict):
-        if _TUPLE in obj and len(obj) == 1:
-            return tuple(_unpack_structure(v) for v in obj[_TUPLE])
-        return {k: _unpack_structure(v) for k, v in obj.items()}
-    if isinstance(obj, list):
-        return [_unpack_structure(v) for v in obj]
-    return obj
-
-
-def _pack_treedef(treedef):
-    skeleton = jax.tree_util.tree_unflatten(
-        treedef, list(range(treedef.num_leaves)))
-    return {_TREEDEF: True, "skeleton": _pack_structure(skeleton)}
-
-
-def _unpack_treedef(obj):
-    skeleton = _unpack_structure(obj["skeleton"])
-    return jax.tree_util.tree_structure(skeleton)
-
-
-def _pack_layout(layout):
-    return {_LAYOUT: True,
-            "treedef": _pack_treedef(layout.treedef),
-            "shapes": [list(s) for s in layout.shapes],
-            "dtypes": [str(np.dtype(dt)) for dt in layout.dtypes],
-            "offsets": list(layout.offsets),
-            "d": int(layout.d), "bucket": int(layout.bucket)}
-
-
-def _unpack_layout(obj):
-    from repro.core.flatbuf import FlatLayout
-    return FlatLayout(treedef=_unpack_treedef(obj["treedef"]),
-                      shapes=tuple(tuple(s) for s in obj["shapes"]),
-                      dtypes=tuple(np.dtype(dt) for dt in obj["dtypes"]),
-                      offsets=tuple(int(o) for o in obj["offsets"]),
-                      d=int(obj["d"]), bucket=int(obj["bucket"]))
-
-
-def _pack_payload(obj):
-    from repro.core.flatbuf import FlatLayout
-    fields = {}
-    for f in dataclasses.fields(obj):
-        v = getattr(obj, f.name)
-        if v is None:
-            fields[f.name] = {_SCALAR: True, "v": None}
-        elif isinstance(v, FlatLayout):
-            fields[f.name] = _pack_layout(v)
-        elif f.name == "treedef":
-            fields[f.name] = _pack_treedef(v)
-        elif f.name == "shape":
-            fields[f.name] = {_TUPLE: [int(s) for s in v]}
-        elif f.name == "dtype":
-            fields[f.name] = {_SCALAR: True, "v": str(np.dtype(v))}
-        elif f.name == "leaves":           # TreePayload: nested payloads
-            fields[f.name] = {_TUPLE: [_pack(p) for p in v]}
-        else:
-            fields[f.name] = _pack(v)
-    return {_PAYLOAD: type(obj).__name__, "fields": fields}
-
-
-def _unpack_payload(obj):
-    cls = _payload_classes().get(obj[_PAYLOAD])
-    if cls is None:
-        raise TypeError(f"unknown payload class {obj[_PAYLOAD]!r} in "
-                        "checkpoint; register it via "
-                        "repro.checkpoint.register_payload_class")
-    fields = {}
-    for name, v in obj["fields"].items():
-        if isinstance(v, dict) and v.get(_LAYOUT):
-            fields[name] = _unpack_layout(v)
-        elif isinstance(v, dict) and v.get(_TREEDEF):
-            fields[name] = _unpack_treedef(v)
-        elif name == "shape" and isinstance(v, dict) and _TUPLE in v:
-            fields[name] = tuple(int(s) for s in v[_TUPLE])
-        elif name == "dtype":
-            fields[name] = None if v["v"] is None else np.dtype(v["v"])
-        elif name == "leaves":
-            fields[name] = tuple(_unpack(p) for p in v[_TUPLE])
-        else:
-            fields[name] = _unpack(v)
-    return cls(**fields)
-
-
-def _pack(obj: Any):
-    if _is_payload(obj):
-        return _pack_payload(obj)
-    if isinstance(obj, (jnp.ndarray, np.ndarray)) or hasattr(obj, "__array__"):
-        a = np.asarray(obj)
-        return {_ARR: True, "dtype": str(a.dtype), "shape": list(a.shape),
-                "data": a.tobytes()}
-    if isinstance(obj, dict):
-        return {k: _pack(v) for k, v in obj.items()}
-    if isinstance(obj, (list, tuple)):
-        return [_pack(v) for v in obj]
-    if isinstance(obj, (int, float, bool, str)) or obj is None:
-        return {_SCALAR: True, "v": obj}
-    raise TypeError(f"cannot checkpoint {type(obj)}")
-
-
-def _unpack(obj: Any):
-    if isinstance(obj, dict):
-        if obj.get(_ARR):
-            a = np.frombuffer(obj["data"], dtype=obj["dtype"])
-            return jnp.asarray(a.reshape(obj["shape"]))
-        if _SCALAR in obj:
-            return obj["v"]
-        if _PAYLOAD in obj:
-            return _unpack_payload(obj)
-        return {k: _unpack(v) for k, v in obj.items()}
-    if isinstance(obj, list):
-        return [_unpack(v) for v in obj]
-    return obj
+           "register_payload_class",
+           "CheckpointCorruptError", "CheckpointManager",
+           "CheckpointPolicy", "RolloutSnapshot",
+           "save_sharded", "restore_sharded", "latest_step", "all_steps",
+           "load_rollout_checkpoint"]
 
 
 def save(path: str, tree: Any) -> None:
-    tmp = path + ".tmp"
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    with open(tmp, "wb") as f:
-        f.write(msgpack.packb(_pack(tree), use_bin_type=True))
-    os.replace(tmp, path)
+    """Durably write one pytree as a single container file."""
+    write_durable(path, pack_bytes(tree))
 
 
-def restore(path: str) -> Any:
-    with open(path, "rb") as f:
-        return _unpack(msgpack.unpackb(f.read(), raw=False, strict_map_key=False))
+def restore(path: str, *, lazy: bool = False) -> Any:
+    """Read + validate one checkpoint file.
+
+    ``lazy=True`` returns read-only numpy views over the file buffer
+    (zero further copies) instead of device arrays.  Raises
+    :class:`CheckpointCorruptError` on a truncated/bit-flipped file;
+    headerless files from the pre-container format still load."""
+    return unpack_bytes(read_durable(path), np_views=lazy)
 
 
 def save_state(path: str, params, extra: dict | None = None) -> None:

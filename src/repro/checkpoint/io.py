@@ -1,0 +1,130 @@
+"""Durable file primitives for the checkpoint subsystem (DESIGN.md §14).
+
+Every checkpoint artifact on disk — a whole-tree file, a shard, the
+``meta`` skeleton, the ``latest`` pointer — is a *container*: a 20-byte
+header (magic, payload length, CRC-32) followed by the payload bytes.
+Writes go through :func:`write_durable`:
+
+    tmp write -> flush -> fsync(file) -> os.replace -> fsync(directory)
+
+so a crash at ANY point leaves either the previous file intact or the
+new file complete — never a torn file under the final name.  The
+historic ``checkpoint.save`` skipped both fsyncs: a power cut after the
+rename could surface a truncated/empty file that ``restore`` then
+msgpack-crashed on (the PR-9 bugfix).  Reads go through
+:func:`read_durable`, which validates magic, length and CRC and raises
+:class:`CheckpointCorruptError` (with the failing check named) instead
+of an opaque msgpack error; headerless files written by the pre-header
+format are still accepted (``allow_legacy``) so old checkpoints remain
+readable.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+
+__all__ = ["CheckpointCorruptError", "MAGIC", "write_durable",
+           "read_durable", "fsync_dir", "header_valid"]
+
+#: 8-byte container magic; the trailing digit versions the header layout.
+MAGIC = b"RPCKPT01"
+_HEADER = struct.Struct("<8sQI")     # magic, payload nbytes, crc32(payload)
+HEADER_BYTES = _HEADER.size
+
+
+class CheckpointCorruptError(Exception):
+    """A checkpoint file failed validation (bad magic / truncated /
+    CRC mismatch / unreadable).  Carries ``path`` and ``reason``."""
+
+    def __init__(self, path: str, reason: str):
+        self.path, self.reason = path, reason
+        super().__init__(f"corrupt checkpoint {path!r}: {reason}")
+
+
+def fsync_dir(path: str) -> None:
+    """fsync a DIRECTORY so a rename into it is durable (POSIX requires
+    syncing the parent dir for the new directory entry to survive a
+    crash).  Platforms without O_DIRECTORY degrade to a no-op."""
+    flags = os.O_RDONLY | getattr(os, "O_DIRECTORY", 0)
+    try:
+        fd = os.open(path, flags)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def write_durable(path: str, payload: bytes) -> None:
+    """Atomically and durably write one container file.
+
+    The payload lands under ``path`` with the header prepended; the
+    temp file is fsynced BEFORE the rename and the parent directory
+    after it — the two syncs ``checkpoint.save`` historically skipped.
+    A concurrent crash leaves at worst a ``path + ".tmp"`` orphan, which
+    readers never look at."""
+    directory = os.path.dirname(os.path.abspath(path))
+    os.makedirs(directory, exist_ok=True)
+    tmp = path + ".tmp"
+    header = _HEADER.pack(MAGIC, len(payload), zlib.crc32(payload))
+    with open(tmp, "wb") as f:
+        f.write(header)
+        f.write(payload)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    fsync_dir(directory)
+
+
+def read_durable(path: str, *, allow_legacy: bool = True) -> bytes:
+    """Read + validate one container file; returns the payload bytes.
+
+    Raises :class:`CheckpointCorruptError` naming the failed check
+    (missing / empty / truncated header / truncated payload / CRC).  A
+    file that does not start with :data:`MAGIC` is, when
+    ``allow_legacy``, returned whole — the pre-header msgpack format —
+    and rejected otherwise."""
+    try:
+        with open(path, "rb") as f:
+            raw = f.read()
+    except FileNotFoundError:
+        raise
+    except OSError as e:
+        raise CheckpointCorruptError(path, f"unreadable: {e}") from e
+    if len(raw) == 0:
+        raise CheckpointCorruptError(path, "empty file")
+    if not raw.startswith(MAGIC):
+        if allow_legacy:
+            return raw
+        raise CheckpointCorruptError(path, "bad magic (not a checkpoint "
+                                           "container)")
+    if len(raw) < HEADER_BYTES:
+        raise CheckpointCorruptError(path, "truncated header")
+    _, nbytes, crc = _HEADER.unpack_from(raw)
+    payload = raw[HEADER_BYTES:]
+    if len(payload) != nbytes:
+        raise CheckpointCorruptError(
+            path, f"truncated payload: header says {nbytes} bytes, "
+                  f"file carries {len(payload)}")
+    if zlib.crc32(payload) != crc:
+        raise CheckpointCorruptError(path, "CRC mismatch")
+    return payload
+
+
+def header_valid(path: str) -> bool:
+    """Cheap validity probe: header parses and the file size matches the
+    declared payload length — WITHOUT reading/CRC-ing the payload.  Used
+    by the latest-pointer fallback scan to skip half-written shards; the
+    full CRC still runs on restore."""
+    try:
+        size = os.path.getsize(path)
+        with open(path, "rb") as f:
+            head = f.read(HEADER_BYTES)
+    except OSError:
+        return False
+    if len(head) < HEADER_BYTES or not head.startswith(MAGIC):
+        return False
+    _, nbytes, _ = _HEADER.unpack_from(head)
+    return size == HEADER_BYTES + nbytes

@@ -1,0 +1,266 @@
+"""Step-tagged, sharded, async checkpoint manager (DESIGN.md §14).
+
+On-disk layout under one ``root``::
+
+    root/
+      latest                    # durable container: msgpack {"step": N}
+      step_0000000042/
+        meta.ckpt               # packed skeleton; arrays are __ref__ markers
+        shard_00000.ckpt        # raw concatenated leaf bytes (64B-aligned)
+        shard_00001.ckpt
+      .tmp-step_0000000050/     # in-flight commit; readers never look here
+
+Commit protocol: every file is written via ``write_durable`` (tmp ->
+fsync -> rename -> dir fsync) into a ``.tmp-step_N`` staging directory,
+the staging directory is renamed to its final ``step_N`` name (the
+commit point), the root directory is fsynced, and only then is the
+``latest`` pointer rewritten.  A SIGKILL at any instant leaves either
+the previous ``latest`` resolving a fully-committed step, or the new
+step committed with a stale pointer — ``latest_step`` falls back to a
+descending directory scan (validating headers cheaply) when the pointer
+is missing, corrupt, or dangling, so the newest *complete* step always
+wins.
+
+:class:`CheckpointManager` runs the pack/write/fsync pipeline on a
+single background worker thread: ``save`` blocks only for the host
+snapshot (one defensive memcpy of the leaves — jax CPU arrays surface
+as zero-copy views whose buffers the scan may later donate) and returns
+a ``Future``.  One worker keeps commits FIFO, so ``latest`` is
+monotone in step order.
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, List, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+from .io import (CheckpointCorruptError, header_valid, fsync_dir,
+                 read_durable, write_durable)
+from .pack import ArraySink, pack_tree, unpack_tree
+
+__all__ = ["CheckpointManager", "save_sharded", "restore_sharded",
+           "latest_step", "all_steps", "step_dir"]
+
+_META = "meta.ckpt"
+_LATEST = "latest"
+_STEP_RE = re.compile(r"^step_(\d{10})$")
+#: default shard size bound; small trees land in a single shard
+DEFAULT_SHARD_BYTES = 128 << 20
+
+
+def step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step_{int(step):010d}")
+
+
+def _shard_name(i: int) -> str:
+    return f"shard_{i:05d}.ckpt"
+
+
+def save_sharded(dirpath: str, tree: Any,
+                 shard_bytes: int = DEFAULT_SHARD_BYTES) -> None:
+    """Write one tree as meta + shard containers into ``dirpath``.
+
+    Leaf bytes are packed greedily into ≤ ``shard_bytes`` shards (one
+    oversized leaf gets its own shard; leaves are never split); the
+    skeleton with ``__ref__`` markers lands in ``meta.ckpt``."""
+    sink = ArraySink(shard_bytes)
+    skeleton = pack_tree(tree, sink=sink)
+    blobs = sink.shard_blobs()
+    os.makedirs(dirpath, exist_ok=True)
+    for i, blob in enumerate(blobs):
+        write_durable(os.path.join(dirpath, _shard_name(i)), blob)
+    meta = msgpack.packb({"skeleton": skeleton, "nshards": len(blobs)},
+                         use_bin_type=True)
+    write_durable(os.path.join(dirpath, _META), meta)
+
+
+def restore_sharded(dirpath: str, *, lazy: bool = False):
+    """Restore a :func:`save_sharded` directory.
+
+    ``lazy=True`` returns READ-ONLY numpy views over the shard buffers
+    (one file read per shard, zero further copies — the per-leaf
+    zero-copy restore path); the default materializes jax arrays leaf
+    by leaf, shard buffers loaded on first touch so peak host memory is
+    bounded by the tree + one pass of shard files, not 2× the tree."""
+    meta_path = os.path.join(dirpath, _META)
+    meta = msgpack.unpackb(read_durable(meta_path, allow_legacy=False),
+                           raw=False, strict_map_key=False)
+    cache: dict = {}
+
+    def buffers(i: int) -> bytes:
+        if i not in cache:
+            if not 0 <= i < meta["nshards"]:
+                raise CheckpointCorruptError(
+                    meta_path, f"skeleton references shard {i} but meta "
+                               f"declares {meta['nshards']} shards")
+            cache[i] = read_durable(os.path.join(dirpath, _shard_name(i)),
+                                    allow_legacy=False)
+        return cache[i]
+
+    return unpack_tree(meta["skeleton"], buffers=buffers, np_views=lazy)
+
+
+def _dir_complete(dirpath: str) -> bool:
+    """Cheap completeness probe: meta header parses and every shard it
+    declares is present with a self-consistent header (no CRC pass)."""
+    meta_path = os.path.join(dirpath, _META)
+    if not header_valid(meta_path):
+        return False
+    try:
+        meta = msgpack.unpackb(read_durable(meta_path, allow_legacy=False),
+                               raw=False, strict_map_key=False)
+    except (CheckpointCorruptError, ValueError, msgpack.UnpackException):
+        return False
+    return all(header_valid(os.path.join(dirpath, _shard_name(i)))
+               for i in range(meta["nshards"]))
+
+
+def all_steps(root: str) -> List[int]:
+    """Committed steps under ``root``, ascending (complete dirs only)."""
+    try:
+        names = os.listdir(root)
+    except OSError:
+        return []
+    steps = []
+    for name in names:
+        m = _STEP_RE.match(name)
+        if m and _dir_complete(os.path.join(root, name)):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(root: str) -> Optional[int]:
+    """Resolve the newest complete step: the ``latest`` pointer when it
+    is valid and its target complete, else a descending dir scan."""
+    try:
+        payload = read_durable(os.path.join(root, _LATEST),
+                               allow_legacy=False)
+        step = int(msgpack.unpackb(payload, raw=False)["step"])
+        if _dir_complete(step_dir(root, step)):
+            return step
+    except (FileNotFoundError, CheckpointCorruptError, ValueError,
+            KeyError, TypeError, msgpack.UnpackException):
+        pass
+    steps = all_steps(root)
+    return steps[-1] if steps else None
+
+
+def _host_snapshot(tree: Any) -> Any:
+    """Copy every array leaf to host memory the caller cannot mutate.
+
+    ``np.asarray`` of a jax CPU array is a zero-copy view of the device
+    buffer — unsafe to hand to a background thread when the scan may
+    donate/reuse that buffer — so array leaves are always copied.  This
+    memcpy is the ONLY part of an async save that blocks the caller."""
+    def snap(x):
+        if hasattr(x, "__array__"):
+            return np.asarray(x).copy()
+        return x
+    return jax.tree_util.tree_map(snap, tree)
+
+
+class CheckpointManager:
+    """Async, sharded, step-tagged checkpoints with an atomic ``latest``
+    pointer and optional retention pruning.
+
+    ``save`` snapshots synchronously (one memcpy) and commits on a
+    single background worker; ``wait=True`` or :meth:`wait_until_finished`
+    joins the pipeline.  ``max_to_keep=N`` prunes the oldest committed
+    steps after each commit (``None`` keeps everything)."""
+
+    def __init__(self, root: str, *, max_to_keep: Optional[int] = None,
+                 shard_bytes: int = DEFAULT_SHARD_BYTES):
+        if max_to_keep is not None and max_to_keep < 1:
+            raise ValueError(f"max_to_keep must be >= 1, got {max_to_keep}")
+        self.root = os.path.abspath(root)
+        self.max_to_keep = max_to_keep
+        self.shard_bytes = int(shard_bytes)
+        os.makedirs(self.root, exist_ok=True)
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pending: List[Future] = []
+
+    # -- write path ---------------------------------------------------------
+
+    def save(self, step: int, tree: Any, *, wait: bool = False) -> Future:
+        """Snapshot ``tree`` now; commit it as ``step`` in the background.
+
+        Returns the commit ``Future`` (its result is the step dir path).
+        The caller may mutate/donate the original arrays immediately."""
+        snapshot = _host_snapshot(tree)
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="ckpt-commit")
+        fut = self._pool.submit(self._commit, int(step), snapshot)
+        self._pending.append(fut)
+        self._pending = [f for f in self._pending if not f.done()] + \
+            ([fut] if fut.done() else [])
+        if wait:
+            fut.result()
+        return fut
+
+    def _commit(self, step: int, snapshot: Any) -> str:
+        final = step_dir(self.root, step)
+        staging = os.path.join(self.root, f".tmp-step_{step:010d}")
+        if os.path.isdir(staging):
+            shutil.rmtree(staging)
+        save_sharded(staging, snapshot, self.shard_bytes)
+        if os.path.isdir(final):          # re-commit of the same step
+            shutil.rmtree(final)
+        os.replace(staging, final)        # the commit point
+        fsync_dir(self.root)
+        write_durable(os.path.join(self.root, _LATEST),
+                      msgpack.packb({"step": step}, use_bin_type=True))
+        self._prune(keep=step)
+        return final
+
+    def _prune(self, keep: int) -> None:
+        if self.max_to_keep is None:
+            return
+        steps = all_steps(self.root)
+        for old in steps[:-self.max_to_keep]:
+            if old != keep:
+                shutil.rmtree(step_dir(self.root, old), ignore_errors=True)
+
+    # -- read path ----------------------------------------------------------
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.root)
+
+    def all_steps(self) -> List[int]:
+        return all_steps(self.root)
+
+    def restore(self, step: Optional[int] = None, *, lazy: bool = False):
+        """Restore ``step`` (default: the newest complete one)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no complete checkpoint under {self.root!r}")
+        return restore_sharded(step_dir(self.root, int(step)), lazy=lazy)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def wait_until_finished(self) -> None:
+        """Join every in-flight commit (re-raising the first failure)."""
+        pending, self._pending = self._pending, []
+        for fut in pending:
+            fut.result()
+
+    def close(self) -> None:
+        self.wait_until_finished()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -1,0 +1,329 @@
+"""Pytree <-> msgpack packing for the checkpoint subsystem.
+
+Arrays are stored as (dtype, shape, raw bytes); the pytree structure is
+serialized by flattening with jax.tree_util and storing the treedef's
+string-keyed path skeleton.  Round-trips dicts / lists / tuples /
+NamedTuples-as-tuples of jnp/np arrays and python scalars, plus every
+registered codec Payload dataclass (repro.core.codec — wire arrays,
+static meta, and the FlatLayout/treedef statics) BIT-EXACTLY, so the
+serving delta store persists compressed tenants in the same pack format
+the training checkpoints use (DESIGN.md §12/§14).
+
+Reserved-marker escaping (PR-9 bugfix): the pack format marks arrays /
+scalars / payloads with sentinel dict keys (``"__arr__"``, ...).  A USER
+dict that happens to carry one of those keys used to be silently
+misinterpreted on restore — ``{"__scalar__": 5}`` round-tripped to
+``5``, ``{"__tuple__": [1, 2]}`` to ``(1, 2)``.  The packer now escapes
+every string key that is reserved *or already escaped* with the
+``"__esc__"`` prefix and the unpacker strips it, so arbitrary dicts
+round-trip exactly (pinned in tests/test_checkpoint.py).
+
+Two orthogonal modes on top of the plain inline format:
+
+  * ``sink=`` (pack): array leaf bytes are appended to an
+    :class:`ArraySink` (which assigns 64-byte-aligned offsets into
+    size-bounded shards) and the skeleton carries ``__ref__`` markers —
+    the sharded on-disk layout of :mod:`repro.checkpoint.manager`.
+  * ``np_views=True`` (unpack): array leaves come back as READ-ONLY
+    ``np.frombuffer`` views over the source buffers — zero additional
+    copies beyond the file read, so restoring a stacked-client LM
+    checkpoint never doubles peak host memory (the caller converts to
+    device arrays leaf by leaf, or feeds the views straight into jit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["pack_tree", "unpack_tree", "pack_bytes", "unpack_bytes",
+           "ArraySink", "register_payload_class", "RESERVED_KEYS"]
+
+_ARR = "__arr__"
+_SCALAR = "__scalar__"
+_TUPLE = "__tuple__"
+_PAYLOAD = "__payload__"
+_LAYOUT = "__layout__"
+_TREEDEF = "__treedef__"
+_REF = "__ref__"
+_ESC = "__esc__"
+
+#: every marker key the unpacker dispatches on; user dict keys colliding
+#: with these (or starting with the escape prefix) are escaped on pack
+RESERVED_KEYS = frozenset({_ARR, _SCALAR, _TUPLE, _PAYLOAD, _LAYOUT,
+                           _TREEDEF, _REF, _ESC})
+
+#: alignment of array offsets inside a shard (a cache line: keeps the
+#: zero-copy frombuffer views aligned for every dtype in the repo)
+_ALIGN = 64
+
+# name -> dataclass; seeded from repro.core.codec on first use so the
+# checkpoint module stays importable without pulling the codec layer in
+_PAYLOAD_CLASSES: dict = {}
+
+
+def register_payload_class(cls) -> type:
+    """Register a payload dataclass for checkpoint round-trips (the codec
+    payloads are pre-registered; serving-side formats call this)."""
+    _PAYLOAD_CLASSES[cls.__name__] = cls
+    return cls
+
+
+def _payload_classes() -> dict:
+    if not _PAYLOAD_CLASSES:
+        from repro.core.codec import Payload
+        for cls in Payload:
+            _PAYLOAD_CLASSES.setdefault(cls.__name__, cls)
+    return _PAYLOAD_CLASSES
+
+
+def _is_payload(obj) -> bool:
+    return dataclasses.is_dataclass(obj) and not isinstance(obj, type) \
+        and type(obj).__name__ in _payload_classes() \
+        and type(obj) is _payload_classes()[type(obj).__name__]
+
+
+def _esc_key(k):
+    if isinstance(k, str) and (k in RESERVED_KEYS or k.startswith(_ESC)):
+        return _ESC + k
+    return k
+
+
+def _unesc_key(k):
+    if isinstance(k, str) and k.startswith(_ESC):
+        return k[len(_ESC):]
+    return k
+
+
+# -- shard sink -------------------------------------------------------------
+
+class ArraySink:
+    """Greedy size-bounded shard builder for the sharded pack mode.
+
+    Leaf byte strings are appended in traversal order; a shard closes
+    when adding the next leaf would push a non-empty shard past
+    ``shard_bytes`` (one leaf larger than the bound gets a shard of its
+    own — arrays are never split).  Offsets are ``_ALIGN``-padded so the
+    restore-side ``np.frombuffer`` views are aligned."""
+
+    def __init__(self, shard_bytes: int):
+        if int(shard_bytes) <= 0:
+            raise ValueError(f"shard_bytes must be > 0, got {shard_bytes}")
+        self.shard_bytes = int(shard_bytes)
+        self.shards: List[List[bytes]] = [[]]
+        self._sizes: List[int] = [0]
+
+    def add(self, data: bytes) -> dict:
+        """Place one leaf; returns its ``{shard, offset, nbytes}`` ref."""
+        size = self._sizes[-1]
+        pad = (-size) % _ALIGN
+        if self.shards[-1] and size + pad + len(data) > self.shard_bytes:
+            self.shards.append([])
+            self._sizes.append(0)
+            size = pad = 0
+        if pad:
+            self.shards[-1].append(b"\0" * pad)
+            size += pad
+        self.shards[-1].append(data)
+        self._sizes[-1] = size + len(data)
+        return {"shard": len(self.shards) - 1, "offset": size,
+                "nbytes": len(data)}
+
+    def shard_blobs(self) -> List[bytes]:
+        return [b"".join(chunks) for chunks in self.shards]
+
+
+# -- treedef <-> int-leaf skeleton (tuples preserved via marker dicts) ------
+
+def _pack_structure(obj: Any):
+    if isinstance(obj, dict):
+        return {_esc_key(k): _pack_structure(v) for k, v in obj.items()}
+    if isinstance(obj, tuple):
+        return {_TUPLE: [_pack_structure(v) for v in obj]}
+    if isinstance(obj, list):
+        return [_pack_structure(v) for v in obj]
+    return obj
+
+
+def _unpack_structure(obj: Any):
+    if isinstance(obj, dict):
+        if _TUPLE in obj and len(obj) == 1:
+            return tuple(_unpack_structure(v) for v in obj[_TUPLE])
+        return {_unesc_key(k): _unpack_structure(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_unpack_structure(v) for v in obj]
+    return obj
+
+
+def _pack_treedef(treedef):
+    skeleton = jax.tree_util.tree_unflatten(
+        treedef, list(range(treedef.num_leaves)))
+    return {_TREEDEF: True, "skeleton": _pack_structure(skeleton)}
+
+
+def _unpack_treedef(obj):
+    skeleton = _unpack_structure(obj["skeleton"])
+    return jax.tree_util.tree_structure(skeleton)
+
+
+def _pack_layout(layout):
+    return {_LAYOUT: True,
+            "treedef": _pack_treedef(layout.treedef),
+            "shapes": [list(s) for s in layout.shapes],
+            "dtypes": [str(np.dtype(dt)) for dt in layout.dtypes],
+            "offsets": list(layout.offsets),
+            "d": int(layout.d), "bucket": int(layout.bucket)}
+
+
+def _unpack_layout(obj):
+    from repro.core.flatbuf import FlatLayout
+    return FlatLayout(treedef=_unpack_treedef(obj["treedef"]),
+                      shapes=tuple(tuple(s) for s in obj["shapes"]),
+                      dtypes=tuple(np.dtype(dt) for dt in obj["dtypes"]),
+                      offsets=tuple(int(o) for o in obj["offsets"]),
+                      d=int(obj["d"]), bucket=int(obj["bucket"]))
+
+
+def _pack_payload(obj, sink):
+    from repro.core.flatbuf import FlatLayout
+    fields = {}
+    for f in dataclasses.fields(obj):
+        v = getattr(obj, f.name)
+        if v is None:
+            fields[f.name] = {_SCALAR: True, "v": None}
+        elif isinstance(v, FlatLayout):
+            fields[f.name] = _pack_layout(v)
+        elif f.name == "treedef":
+            fields[f.name] = _pack_treedef(v)
+        elif f.name == "shape":
+            fields[f.name] = {_TUPLE: [int(s) for s in v]}
+        elif f.name == "dtype":
+            fields[f.name] = {_SCALAR: True, "v": str(np.dtype(v))}
+        elif f.name == "leaves":           # TreePayload: nested payloads
+            fields[f.name] = {_TUPLE: [pack_tree(p, sink=sink) for p in v]}
+        else:
+            fields[f.name] = pack_tree(v, sink=sink)
+    return {_PAYLOAD: type(obj).__name__, "fields": fields}
+
+
+def _unpack_payload(obj, buffers, np_views):
+    cls = _payload_classes().get(obj[_PAYLOAD])
+    if cls is None:
+        raise TypeError(f"unknown payload class {obj[_PAYLOAD]!r} in "
+                        "checkpoint; register it via "
+                        "repro.checkpoint.register_payload_class")
+    fields = {}
+    for name, v in obj["fields"].items():
+        if isinstance(v, dict) and v.get(_LAYOUT):
+            fields[name] = _unpack_layout(v)
+        elif isinstance(v, dict) and v.get(_TREEDEF):
+            fields[name] = _unpack_treedef(v)
+        elif name == "shape" and isinstance(v, dict) and _TUPLE in v:
+            fields[name] = tuple(int(s) for s in v[_TUPLE])
+        elif name == "dtype":
+            fields[name] = None if v["v"] is None else np.dtype(v["v"])
+        elif name == "leaves":
+            fields[name] = tuple(unpack_tree(p, buffers=buffers,
+                                             np_views=np_views)
+                                 for p in v[_TUPLE])
+        else:
+            fields[name] = unpack_tree(v, buffers=buffers,
+                                       np_views=np_views)
+    return cls(**fields)
+
+
+# -- the recursive pack/unpack ----------------------------------------------
+
+def pack_tree(obj: Any, sink: Optional[ArraySink] = None):
+    """Pack one pytree into the msgpack-ready marker structure.
+
+    With ``sink`` the array bytes land in the sink's shards and the
+    returned skeleton carries ``__ref__`` markers; without, bytes are
+    inline (the whole-tree single-file format)."""
+    if _is_payload(obj):
+        return _pack_payload(obj, sink)
+    if isinstance(obj, (np.ndarray,)) or hasattr(obj, "__array__"):
+        a = np.asarray(obj)
+        meta = {"dtype": str(a.dtype), "shape": list(a.shape)}
+        if sink is None:
+            return {_ARR: True, "data": a.tobytes(), **meta}
+        return {_REF: True, **sink.add(a.tobytes()), **meta}
+    if isinstance(obj, dict):
+        return {_esc_key(k): pack_tree(v, sink=sink)
+                for k, v in obj.items()}
+    if isinstance(obj, tuple):
+        return {_TUPLE: [pack_tree(v, sink=sink) for v in obj]}
+    if isinstance(obj, list):
+        return [pack_tree(v, sink=sink) for v in obj]
+    if isinstance(obj, (int, float, bool, str, bytes)) or obj is None:
+        return {_SCALAR: True, "v": obj}
+    raise TypeError(f"cannot checkpoint {type(obj)}")
+
+
+def _as_array(data, dtype: str, shape, np_views: bool):
+    a = np.frombuffer(data, dtype=np.dtype(dtype)).reshape(shape)
+    if np_views:
+        return a                      # read-only view over the buffer
+    from jax import dtypes as jax_dtypes
+    if jax_dtypes.canonicalize_dtype(a.dtype) != a.dtype:
+        return np.array(a)   # e.g. f64 with jax x64 disabled: jnp.asarray
+        #                      would silently truncate — keep an exact
+        #                      host copy instead
+    import jax.numpy as jnp
+    return jnp.asarray(a)
+
+
+def unpack_tree(obj: Any, *, buffers: Optional[Callable] = None,
+                np_views: bool = False):
+    """Inverse of :func:`pack_tree`.
+
+    ``buffers(shard_idx) -> bytes-like`` resolves ``__ref__`` markers
+    (the sharded format); ``np_views=True`` returns read-only numpy
+    views instead of device arrays (zero-copy restore)."""
+    if isinstance(obj, dict):
+        if obj.get(_ARR):
+            return _as_array(obj["data"], obj["dtype"], obj["shape"],
+                             np_views)
+        if obj.get(_REF):
+            if buffers is None:
+                raise ValueError("checkpoint skeleton carries shard refs "
+                                 "but no shard buffers were provided")
+            buf = buffers(int(obj["shard"]))
+            a = np.frombuffer(buf, dtype=np.dtype(obj["dtype"]),
+                              count=int(np.prod(obj["shape"], dtype=np.int64))
+                              if obj["shape"] else 1,
+                              offset=int(obj["offset"]))
+            a = a.reshape(obj["shape"])
+            if np_views:
+                return a
+            import jax.numpy as jnp
+            return jnp.asarray(a)
+        if _SCALAR in obj:
+            return obj["v"]
+        if _TUPLE in obj and len(obj) == 1:
+            return tuple(unpack_tree(v, buffers=buffers, np_views=np_views)
+                         for v in obj[_TUPLE])
+        if _PAYLOAD in obj:
+            return _unpack_payload(obj, buffers, np_views)
+        return {_unesc_key(k): unpack_tree(v, buffers=buffers,
+                                           np_views=np_views)
+                for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [unpack_tree(v, buffers=buffers, np_views=np_views)
+                for v in obj]
+    return obj
+
+
+def pack_bytes(tree: Any) -> bytes:
+    """Whole tree -> one msgpack blob (the single-file format payload)."""
+    import msgpack
+    return msgpack.packb(pack_tree(tree), use_bin_type=True)
+
+
+def unpack_bytes(payload: bytes, *, np_views: bool = False):
+    import msgpack
+    return unpack_tree(
+        msgpack.unpackb(payload, raw=False, strict_map_key=False),
+        np_views=np_views)

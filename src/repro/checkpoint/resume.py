@@ -1,0 +1,302 @@
+"""Resumable-rollout snapshot format + :class:`CheckpointPolicy` (DESIGN.md §14).
+
+A rollout checkpoint captures everything ``run_l2gd`` needs to continue
+a chunked scan mid-run:
+
+    (L2GDState, AsyncAggState?, RNG key, ledger state, realized xi
+     trace, loss/eval traces, branch counters, a config signature)
+
+Bit-exactness invariant (the PR-9 keystone, tests/test_resume.py): the
+determinism contract keys EVERY stream — xi, compressor noise,
+participation masks, fault draws — by the GLOBAL step counter carried
+in ``L2GDState.step`` (and the round clock in ``AsyncAggState.rnd``),
+so chunk boundaries are invisible to the trajectory.  Restoring a chunk
+-boundary snapshot and continuing therefore reproduces the uninterrupted
+run array-for-array: same final params, same ledger history, same loss
+trace.  That only holds when the snapshot stores params EXACTLY, so the
+resume path requires ``mode="dense"``.
+
+``mode="delta"`` stores per-client params as codec Payloads against the
+global model (``state.cache``) — the serving layout of DESIGN.md §12,
+~9 bits/param instead of 32 on disk.  Lossy codecs make the restored
+params approximate, so delta checkpoints are for storage/serving
+(:meth:`repro.serve.store.DeltaModelStore.from_checkpoint` adopts the
+payloads directly, never materializing dense tenants); resuming from
+one is refused unless ``allow_lossy=True`` is passed explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .manager import DEFAULT_SHARD_BYTES, CheckpointManager
+
+__all__ = ["CheckpointPolicy", "RolloutSnapshot", "rollout_signature",
+           "pack_snapshot", "unpack_snapshot", "load_rollout_checkpoint",
+           "delta_pack_stacked", "delta_unpack_stacked"]
+
+FORMAT = "l2gd-rollout/v1"
+_MODES = ("dense", "delta")
+
+
+@dataclasses.dataclass
+class CheckpointPolicy:
+    """When/where/how ``run_l2gd`` snapshots a rollout.
+
+    Args:
+      manager: a :class:`CheckpointManager` or a root directory path
+        (a manager is built lazily from ``max_to_keep``/``shard_bytes``).
+      every_n_chunks: snapshot cadence, in scan chunks; the final chunk
+        boundary is always snapshotted regardless.
+      mode: ``"dense"`` (bit-exact resume — the default) or ``"delta"``
+        (per-client codec Payloads vs the global model; storage format,
+        lossy under lossy codecs — module docstring).
+      delta_plan: CompressionPlan/Compressor for delta mode.
+      wait: block the training loop until each commit lands (default:
+        async — ``save`` costs one host memcpy).
+    """
+
+    manager: Union[CheckpointManager, str]
+    every_n_chunks: int = 1
+    mode: str = "dense"
+    delta_plan: Any = None
+    wait: bool = False
+    max_to_keep: Optional[int] = None
+    shard_bytes: int = DEFAULT_SHARD_BYTES
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"unknown checkpoint mode {self.mode!r}; "
+                             f"have {_MODES}")
+        if int(self.every_n_chunks) < 1:
+            raise ValueError("every_n_chunks must be >= 1, "
+                             f"got {self.every_n_chunks}")
+        if self.mode == "delta" and self.delta_plan is None:
+            raise ValueError("mode='delta' needs delta_plan=")
+
+    def resolve(self) -> CheckpointManager:
+        if not isinstance(self.manager, CheckpointManager):
+            self.manager = CheckpointManager(
+                str(self.manager), max_to_keep=self.max_to_keep,
+                shard_bytes=self.shard_bytes)
+        return self.manager
+
+
+@dataclasses.dataclass
+class RolloutSnapshot:
+    """One unpacked rollout checkpoint (see :func:`pack_snapshot`)."""
+
+    key: np.ndarray          # raw key data of the run's PRNG key
+    done: int                # steps completed at the snapshot
+    xi_prev: int             # host xi carry at the chunk boundary
+    signature: dict          # config signature (rollout_signature)
+    state: Any               # L2GDState
+    agg: Any                 # AsyncAggState | None (faulty runs)
+    ledger_state: dict       # BitsLedger.state_dict()
+    losses: List[tuple]
+    evals: List[tuple]
+    n_local: int
+    n_agg_comm: int
+    n_agg_cached: int
+    xis: np.ndarray          # realized xi trace for steps [0, done)
+    fault_stats: Optional[dict]
+    mode: str = "dense"
+
+
+def _key_array(key) -> np.ndarray:
+    """Raw uint32 key data for either a typed PRNG key or the historic
+    raw-array ``jax.random.PRNGKey`` form."""
+    try:
+        return np.asarray(jax.random.key_data(key))
+    except (TypeError, ValueError, AttributeError):
+        return np.asarray(key)
+
+
+def rollout_signature(*, steps: int, n: int, up_bits, down_bits: float,
+                      participation: Optional[float],
+                      faults) -> dict:
+    """The config facts a resumed run must agree on.  Everything else
+    that shapes the trajectory (codecs, hypers, batches) is covered
+    transitively: a divergence there changes params/ledger and the
+    keystone test catches it; these are the facts we can check CHEAPLY
+    before burning a single step."""
+    if isinstance(up_bits, (int, float)):
+        up = float(up_bits)
+    else:                              # fleet per-client vector
+        up = [float(b) for b in np.asarray(up_bits).ravel()]
+    return {
+        "format": FORMAT,
+        "steps": int(steps),
+        "n": int(n),
+        "up_bits": up,
+        "down_bits": float(down_bits),
+        "participation": None if participation is None
+        else float(participation),
+        "engine": "scan" if faults is None else "async",
+        "faults": None if faults is None else json.dumps(
+            dataclasses.asdict(faults), sort_keys=True),
+    }
+
+
+# -- delta params block (DESIGN.md §12 storage layout) ----------------------
+
+def delta_pack_stacked(params_stacked, base, plan,
+                       key: Optional[jax.Array] = None) -> dict:
+    """Encode client-stacked params as per-client payloads vs ``base``.
+
+    Client i's delta ``(x_i - base)`` (f32, the serve-store convention)
+    is encoded under ``fold_in(key, i)`` — deterministic, so the same
+    params always produce the same payload bytes."""
+    from repro.core.codec import as_plan, plan_spec
+    bound = as_plan(plan).bind(base)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n = int(jax.tree_util.tree_leaves(params_stacked)[0].shape[0])
+    payloads = []
+    for i in range(n):
+        delta = jax.tree.map(
+            lambda x, b: (x[i] - b).astype(jnp.float32),
+            params_stacked, base)
+        payloads.append(bound.encode(jax.random.fold_in(key, i), delta))
+    return {"plan": plan_spec(bound), "n": n, "payloads": payloads}
+
+
+def delta_unpack_stacked(block: dict, base):
+    """Materialize the stacked params of :func:`delta_pack_stacked`
+    (approximate under lossy codecs — module docstring)."""
+    from repro.core.codec import decode_payload, plan_from_spec
+    plan = plan_from_spec(block["plan"]).bind(base)
+    clients = []
+    for payload in block["payloads"]:
+        delta = decode_payload(payload, plan.codec)
+        clients.append(jax.tree.map(
+            lambda b, d: (b + d.astype(jnp.float32)).astype(b.dtype),
+            base, delta))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *clients)
+
+
+# -- snapshot <-> checkpoint tree -------------------------------------------
+
+def pack_snapshot(*, key, done: int, xi_prev: int, state, ledger, run,
+                  xis: np.ndarray, signature: dict, agg=None,
+                  mode: str = "dense", delta_plan=None) -> dict:
+    """Assemble the checkpoint tree for one chunk boundary.
+
+    ``run`` is the driver's :class:`~repro.fl.l2gd_driver.L2GDRun` at
+    the boundary (losses/evals/counters up to ``done``); ``xis`` the
+    realized xi trace so far."""
+    from repro.core.rollout import state_to_tree
+    st = state_to_tree(state)
+    if mode == "delta":
+        params_block = {"mode": "delta",
+                        "delta": delta_pack_stacked(st["params"],
+                                                    st["cache"], delta_plan)}
+    else:
+        params_block = {"mode": "dense", "dense": st["params"]}
+    agg_tree = None
+    if agg is not None:
+        from repro.core.async_engine import agg_state_to_tree
+        agg_tree = agg_state_to_tree(agg)
+    return {
+        "format": FORMAT,
+        "key": _key_array(key),
+        "done": int(done),
+        "xi_prev": int(xi_prev),
+        "signature": dict(signature),
+        "state": {"params": params_block, "cache": st["cache"],
+                  "xi_prev": st["xi_prev"], "step": st["step"]},
+        "agg": agg_tree,
+        "ledger": ledger.state_dict(),
+        "run": {
+            "loss_steps": np.asarray([s for s, _ in run.losses], np.int64),
+            "loss_vals": np.asarray([v for _, v in run.losses], np.float64),
+            "eval_steps": np.asarray([s for s, _ in run.evals], np.int64),
+            "eval_vals": np.asarray([v for _, v in run.evals], np.float64),
+            "n_local": int(run.n_local),
+            "n_agg_comm": int(run.n_agg_comm),
+            "n_agg_cached": int(run.n_agg_cached),
+            "xis": np.asarray(xis, np.int32),
+            "fault_stats": None if run.fault_stats is None
+            else {k: int(v) for k, v in run.fault_stats.items()},
+        },
+    }
+
+
+def unpack_snapshot(tree: dict, *, allow_lossy: bool = False
+                    ) -> RolloutSnapshot:
+    from repro.core.rollout import state_from_tree
+    if not isinstance(tree, dict) or tree.get("format") != FORMAT:
+        raise ValueError(f"not a rollout checkpoint (format="
+                         f"{tree.get('format') if isinstance(tree, dict) else tree!r})")
+    params_block = tree["state"]["params"]
+    mode = params_block["mode"]
+    if mode == "dense":
+        params = params_block["dense"]
+    else:
+        if not allow_lossy:
+            raise ValueError(
+                "checkpoint stores params as LOSSY codec deltas "
+                "(mode='delta'); resuming from it is approximate, not "
+                "bit-exact — pass allow_lossy=True to proceed anyway")
+        params = delta_unpack_stacked(params_block["delta"],
+                                      tree["state"]["cache"])
+    state = state_from_tree({"params": params,
+                             "cache": tree["state"]["cache"],
+                             "xi_prev": tree["state"]["xi_prev"],
+                             "step": tree["state"]["step"]})
+    agg = None
+    if tree.get("agg") is not None:
+        from repro.core.async_engine import agg_state_from_tree
+        agg = agg_state_from_tree(tree["agg"])
+    r = tree["run"]
+    return RolloutSnapshot(
+        key=np.asarray(tree["key"]),
+        done=int(tree["done"]), xi_prev=int(tree["xi_prev"]),
+        signature=tree["signature"], state=state, agg=agg,
+        ledger_state=tree["ledger"],
+        losses=[(int(s), float(v)) for s, v in
+                zip(np.asarray(r["loss_steps"]), np.asarray(r["loss_vals"]))],
+        evals=[(int(s), float(v)) for s, v in
+               zip(np.asarray(r["eval_steps"]), np.asarray(r["eval_vals"]))],
+        n_local=int(r["n_local"]), n_agg_comm=int(r["n_agg_comm"]),
+        n_agg_cached=int(r["n_agg_cached"]),
+        xis=np.asarray(r["xis"], np.int32),
+        fault_stats=r["fault_stats"], mode=mode)
+
+
+def load_rollout_checkpoint(source, step: Optional[int] = None, *,
+                            allow_lossy: bool = False) -> RolloutSnapshot:
+    """Load a rollout snapshot from a manager / root path / policy.
+
+    ``step=None`` resolves the newest complete step (the ``latest``
+    pointer with its fallback scan)."""
+    if isinstance(source, CheckpointPolicy):
+        mgr = source.resolve()
+    elif isinstance(source, CheckpointManager):
+        mgr = source
+    else:
+        mgr = CheckpointManager(str(source))
+    return unpack_snapshot(mgr.restore(step), allow_lossy=allow_lossy)
+
+
+def validate_resume(snapshot: RolloutSnapshot, signature: dict,
+                    key) -> None:
+    """Refuse a resume whose config signature or PRNG key differs from
+    the checkpoint's — continuing would silently fork the trajectory."""
+    mismatches = []
+    stored = snapshot.signature
+    for field, want in signature.items():
+        have = stored.get(field)
+        if have != want:
+            mismatches.append(f"{field}: checkpoint={have!r} run={want!r}")
+    if not np.array_equal(snapshot.key, _key_array(key)):
+        mismatches.append("key: checkpoint was written under a different "
+                          "PRNG key")
+    if mismatches:
+        raise ValueError("cannot resume — checkpoint/run config mismatch: "
+                         + "; ".join(mismatches))

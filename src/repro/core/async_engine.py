@@ -66,7 +66,8 @@ from repro.core.rollout import (_rollout_length, participant_count,
 from repro.fl.faults import FaultPlan, fault_draws
 
 __all__ = ["AsyncAggState", "AsyncRolloutTrace", "EVENT_FIELDS",
-           "init_async_state", "rollout_l2gd_async", "fault_totals"]
+           "init_async_state", "rollout_l2gd_async", "fault_totals",
+           "agg_state_to_tree", "agg_state_from_tree"]
 
 #: columns of ``AsyncRolloutTrace.events`` (K, 8) int32, per step:
 #:   sent      — alive participants that transmitted this round
@@ -115,6 +116,21 @@ def fault_totals(trace: AsyncRolloutTrace) -> dict:
     ``L2GDRun.fault_stats``)."""
     ev = np.asarray(trace.events)
     return {name: int(ev[:, i].sum()) for i, name in enumerate(EVENT_FIELDS)}
+
+
+def agg_state_to_tree(agg: AsyncAggState) -> dict:
+    """:class:`AsyncAggState` as a plain dict pytree (checkpoint form).
+    ``rnd`` is the round clock slot indices are computed modulo, so a
+    restored buffer matures stragglers on exactly the original rounds."""
+    return {"buf": agg.buf, "buf_w": agg.buf_w, "buf_cnt": agg.buf_cnt,
+            "rnd": agg.rnd}
+
+
+def agg_state_from_tree(tree: dict) -> AsyncAggState:
+    return AsyncAggState(buf=tree["buf"],
+                         buf_w=jnp.asarray(tree["buf_w"], jnp.float32),
+                         buf_cnt=jnp.asarray(tree["buf_cnt"], jnp.int32),
+                         rnd=jnp.asarray(tree["rnd"], jnp.int32))
 
 
 def _is_fused(plan) -> bool:

@@ -60,6 +60,7 @@ __all__ = [
     "NarrowQSGDPayload", "CompressionPlan", "make_plan", "as_plan",
     "TRANSPORTS", "index_bits", "pack_bits", "unpack_bits",
     "natural_split", "natural_merge", "decode_payload",
+    "plan_spec", "plan_from_spec",
 ]
 
 TRANSPORTS = ("leafwise", "flat", "packed")
@@ -532,6 +533,28 @@ def make_plan(codec, params=None, *, transport: Optional[str] = None,
     plan = CompressionPlan(codec=codec, transport=transport, bucket=bucket,
                            narrow=narrow)
     return plan.bind(params) if params is not None else plan
+
+
+def plan_spec(plan: CompressionPlan) -> dict:
+    """Serializable recipe for a plan built from a registry compressor
+    (name + constructor kwargs + transport/bucket) — enough for
+    :func:`plan_from_spec` to rebuild an equivalent plan on load.  The
+    persistence face of the plan API: the serve store and the delta
+    checkpoints both stamp payloads with this spec."""
+    comp = plan.codec
+    kwargs = {f.name: getattr(comp, f.name)
+              for f in dataclasses.fields(comp) if f.init}
+    return {"codec": comp.name, "kwargs": kwargs,
+            "transport": plan.transport, "bucket": plan.bucket,
+            "narrow": plan.narrow}
+
+
+def plan_from_spec(spec: dict) -> CompressionPlan:
+    from repro.core.compressors import make_compressor
+    comp = make_compressor(spec["codec"], **spec.get("kwargs", {}))
+    return make_plan(comp, transport=spec["transport"],
+                     bucket=spec.get("bucket"),
+                     narrow=spec.get("narrow", False))
 
 
 def as_plan(codec_or_plan, transport: Optional[str] = None,

@@ -75,7 +75,7 @@ from repro.core.l2gd import (L2GDHyper, L2GDState, draw_xi, init_state,
 __all__ = ["RolloutTrace", "rollout_l2gd", "rollout_l2gd_grid",
            "rollout_l2gd_sharded", "hyper_grid", "participant_count",
            "draw_participation_mask", "participation_masks",
-           "sharded_state_specs"]
+           "sharded_state_specs", "state_to_tree", "state_from_tree"]
 
 
 class RolloutTrace(NamedTuple):
@@ -410,6 +410,25 @@ def rollout_l2gd_grid(key: jax.Array, params_stacked, hp_grid: L2GDHyper,
     if jit:
         fn = jax.jit(fn)
     return fn(hp_grid)
+
+
+def state_to_tree(state: L2GDState) -> dict:
+    """:class:`L2GDState` as a plain dict pytree — the checkpoint form.
+
+    ``state.step`` is the global step counter every RNG stream is keyed
+    by (xi, noise, participation, faults — module docstring), which is
+    exactly why a restored state continues BIT-EXACTLY: the streams are
+    functions of ``(key, step)``, never of how the run was chunked."""
+    return {"params": state.params, "cache": state.cache,
+            "xi_prev": state.xi_prev, "step": state.step}
+
+
+def state_from_tree(tree: dict) -> L2GDState:
+    """Inverse of :func:`state_to_tree` (scalars re-normalized to the
+    int32 device scalars the scan carry expects)."""
+    return L2GDState(params=tree["params"], cache=tree["cache"],
+                     xi_prev=jnp.asarray(tree["xi_prev"], jnp.int32),
+                     step=jnp.asarray(tree["step"], jnp.int32))
 
 
 def hyper_grid(ps, lams, eta, n: int):

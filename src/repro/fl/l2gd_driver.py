@@ -123,7 +123,10 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
              packed_uplink=_UNSET, mode: str = "scan",
              chunk: Optional[int] = None, xi_trace=None,
              participation: Optional[float] = None,
-             faults: Optional[FaultPlan] = None) -> L2GDRun:
+             faults: Optional[FaultPlan] = None,
+             checkpoint_policy=None, resume_from=None,
+             resume_step: Optional[int] = None,
+             allow_lossy_resume: bool = False) -> L2GDRun:
     """Run Algorithm 1 for ``steps`` iterations.
 
     batch_fn(step) -> per-client batch pytree (leading client axis n);
@@ -177,6 +180,21 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
     ``faults.charge_dropped``) and ``run.fault_stats`` totals the event
     counters.  With ``FaultPlan()`` (the null plan) the run is bit-exact
     with ``faults=None``.
+
+    Checkpoint/resume (DESIGN.md §14, scan mode only):
+    ``checkpoint_policy`` (a :class:`repro.checkpoint.CheckpointPolicy`)
+    snapshots ``(state, AsyncAggState, key, ledger, traces, counters)``
+    every ``every_n_chunks`` chunk boundaries (plus the final one) via
+    the async sharded :class:`~repro.checkpoint.CheckpointManager` — the
+    scan blocks only for the host snapshot memcpy.  ``resume_from`` (a
+    manager, root path, or policy; ``resume_step`` picks a step, default
+    latest) restores a snapshot and continues: because every RNG stream
+    is keyed by the global step carried in ``state.step`` (the
+    determinism contract above), the resumed run is BIT-EXACT with the
+    uninterrupted one — params, ledger history, losses, xi trace (the
+    PR-9 keystone, tests/test_resume.py).  A config/key mismatch raises
+    ``ValueError`` before any step runs; delta-mode (lossy) checkpoints
+    are refused unless ``allow_lossy_resume=True``.
 
     Deprecated shims: ``packed_uplink=`` maps to
     ``plan=make_plan(client_comp, one_client, transport="packed")``;
@@ -241,6 +259,35 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
         run.xis = np.zeros((0,), np.int32)
         return run
 
+    signature = None
+    if checkpoint_policy is not None or resume_from is not None:
+        if mode != "scan":
+            raise ValueError("checkpoint_policy=/resume_from= require "
+                             "mode='scan' (the host loop has no chunk "
+                             "boundaries to snapshot at)")
+        from repro.checkpoint.resume import rollout_signature
+        signature = rollout_signature(
+            steps=steps, n=int(hp.n), up_bits=up_bits, down_bits=down_bits,
+            participation=participation, faults=faults)
+
+    resume = None
+    if resume_from is not None:
+        from repro.checkpoint.resume import (load_rollout_checkpoint,
+                                             validate_resume)
+        resume = load_rollout_checkpoint(resume_from, step=resume_step,
+                                         allow_lossy=allow_lossy_resume)
+        validate_resume(resume, signature, key)
+        state = resume.state
+        run.state = state
+        run.ledger = BitsLedger.from_state_dict(resume.ledger_state)
+        run.losses = list(resume.losses)
+        run.evals = list(resume.evals)
+        run.n_local = resume.n_local
+        run.n_agg_comm = resume.n_agg_comm
+        run.n_agg_cached = resume.n_agg_cached
+        run.fault_stats = None if resume.fault_stats is None \
+            else dict(resume.fault_stats)
+
     if mode == "host":
         _run_host(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
                   down_plan, up_bits, down_bits, eval_fn, eval_every, jit,
@@ -248,12 +295,30 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
     elif faults is not None:
         _run_scan_async(run, key, state, grad_fn, hp, batch_fn, steps,
                         up_plan, down_plan, up_bits, down_bits, eval_fn,
-                        eval_every, chunk, xi_trace, participation, faults)
+                        eval_every, chunk, xi_trace, participation, faults,
+                        checkpoint_policy, signature, resume)
     else:
         _run_scan(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
                   down_plan, up_bits, down_bits, eval_fn, eval_every, chunk,
-                  xi_trace, participation)
+                  xi_trace, participation,
+                  checkpoint_policy, signature, resume)
     return run
+
+
+def _checkpoint_chunk(policy, signature, key, done, xi_prev, state, agg,
+                      run, xis_all) -> None:
+    """Snapshot one chunk boundary under the policy's manager.  The
+    RETURNED scan carries are snapshotted (the driver's jit does not
+    donate them) and the manager copies them to host synchronously, so
+    the background commit never races the next chunk."""
+    from repro.checkpoint.resume import pack_snapshot
+    tree = pack_snapshot(key=key, done=done, xi_prev=xi_prev, state=state,
+                         ledger=run.ledger, run=run,
+                         xis=np.concatenate(xis_all) if xis_all
+                         else np.zeros((0,), np.int32),
+                         signature=signature, agg=agg, mode=policy.mode,
+                         delta_plan=policy.delta_plan)
+    policy.resolve().save(done, tree, wait=policy.wait)
 
 
 def _run_host(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
@@ -318,10 +383,11 @@ def _run_host(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
 
 def _run_scan(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
               down_plan, up_bits, down_bits, eval_fn, eval_every, chunk,
-              xi_trace, participation):
+              xi_trace, participation, policy=None, signature=None,
+              resume=None):
     """Chunked wrapper over the scanned rollout: the chunk boundary is
     the only place the host touches device data (trace fetch, ledger
-    replay, eval_fn)."""
+    replay, eval_fn, checkpoint snapshot)."""
     const = _constant_batches(batch_fn, steps)
     if chunk is None:
         if eval_fn is not None:
@@ -348,6 +414,11 @@ def _run_scan(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
     done = 0
     xi_prev = 1  # Algorithm 1 input: xi_{-1} = 1
     xis_all = []
+    if resume is not None:
+        done, xi_prev = resume.done, resume.xi_prev
+        if resume.xis.size:
+            xis_all.append(resume.xis)
+    chunks_done = 0
     while done < steps:
         length = min(chunk, steps - done)
         if const:
@@ -376,13 +447,20 @@ def _run_scan(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
         done += length
         if eval_fn is not None and done % eval_every == 0:
             run.evals.append((done, float(eval_fn(state.params))))
+        chunks_done += 1
+        if policy is not None and (chunks_done % policy.every_n_chunks == 0
+                                   or done == steps):
+            _checkpoint_chunk(policy, signature, key, done, xi_prev, state,
+                              None, run, xis_all)
     run.state = state
-    run.xis = np.concatenate(xis_all)
+    run.xis = np.concatenate(xis_all) if xis_all \
+        else np.zeros((0,), np.int32)
 
 
 def _run_scan_async(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
                     down_plan, up_bits, down_bits, eval_fn, eval_every,
-                    chunk, xi_trace, participation, faults):
+                    chunk, xi_trace, participation, faults, policy=None,
+                    signature=None, resume=None):
     """The faulty twin of :func:`_run_scan`: chunked
     :func:`repro.core.async_engine.rollout_l2gd_async` dispatches, with
     the server's delay buffer (``AsyncAggState``) threaded across chunks
@@ -408,8 +486,13 @@ def _run_scan_async(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
     chunk = max(1, min(int(chunk), steps))
 
     # build the (empty) delay buffer ONCE, eagerly: passing None for the
-    # first chunk and an array-carry for the rest would recompile
-    agg = init_async_state(state.params, up_plan, faults)
+    # first chunk and an array-carry for the rest would recompile.  A
+    # resume restores the checkpointed buffer instead — in-flight
+    # stragglers mature on their original rounds (agg.rnd is the clock)
+    if resume is not None and resume.agg is not None:
+        agg = resume.agg
+    else:
+        agg = init_async_state(state.params, up_plan, faults)
 
     rolled = {}
 
@@ -426,6 +509,14 @@ def _run_scan_async(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
     done = 0
     xi_prev = 1  # Algorithm 1 input: xi_{-1} = 1
     xis_all = []
+    if resume is not None:
+        done, xi_prev = resume.done, resume.xi_prev
+        if resume.xis.size:
+            xis_all.append(resume.xis)
+        if resume.fault_stats is not None:
+            totals.update({k: int(v)
+                           for k, v in resume.fault_stats.items()})
+    chunks_done = 0
     while done < steps:
         length = min(chunk, steps - done)
         if const:
@@ -458,6 +549,13 @@ def _run_scan_async(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
         done += length
         if eval_fn is not None and done % eval_every == 0:
             run.evals.append((done, float(eval_fn(state.params))))
+        chunks_done += 1
+        if policy is not None and (chunks_done % policy.every_n_chunks == 0
+                                   or done == steps):
+            run.fault_stats = dict(totals)
+            _checkpoint_chunk(policy, signature, key, done, xi_prev, state,
+                              agg, run, xis_all)
     run.state = state
-    run.xis = np.concatenate(xis_all)
+    run.xis = np.concatenate(xis_all) if xis_all \
+        else np.zeros((0,), np.int32)
     run.fault_stats = totals

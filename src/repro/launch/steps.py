@@ -30,7 +30,8 @@ from repro.models import (decode_step, forward, init_caches, init_params,
 __all__ = ["input_specs", "state_specs", "cache_specs", "build_train_step",
            "build_rollout_fn", "build_async_rollout_fn",
            "build_sharded_rollout_fn", "build_average_fn",
-           "build_prefill_step", "build_serve_step", "stacked_param_shapes"]
+           "build_prefill_step", "build_serve_step", "stacked_param_shapes",
+           "checkpointed_rollout"]
 
 _I32 = jnp.int32
 
@@ -383,6 +384,47 @@ def build_sharded_rollout_fn(cfg: ArchConfig, hp: L2GDHyper, *, mesh,
     if donate:
         return jax.jit(rollout, donate_argnums=(0,))
     return rollout
+
+
+def checkpointed_rollout(rollout_fn, manager, *, length: int,
+                         every: int = 1, start_step: int = 0,
+                         wait: bool = False):
+    """Wrap a built rollout function with async checkpoint commits.
+
+    Works with both carry shapes: :func:`build_rollout_fn` /
+    :func:`build_sharded_rollout_fn` (``(state, batches, key_data) ->
+    (state, trace)``) and :func:`build_async_rollout_fn` (``(state, agg,
+    batches, key_data) -> (state, agg, trace)``).  Every ``every``-th
+    dispatch, the RETURNED carries — never the inputs, which the
+    builders' ``donate_argnums`` consume — are committed to ``manager``
+    (a :class:`repro.checkpoint.CheckpointManager` or root path) tagged
+    with the cumulative step count (``start_step + dispatches *
+    length``); ``save`` blocks only for the host snapshot memcpy.  The
+    wrapper exposes ``.step`` (steps committed so far is the nearest
+    lower multiple) and passes the rollout output through unchanged."""
+    from repro.checkpoint import CheckpointManager
+    from repro.core.rollout import state_to_tree
+    if not isinstance(manager, CheckpointManager):
+        manager = CheckpointManager(str(manager))
+    if int(every) < 1:
+        raise ValueError(f"every must be >= 1, got {every}")
+
+    def wrapper(*args):
+        out = rollout_fn(*args)
+        wrapper.step += int(length)
+        wrapper.dispatches += 1
+        if wrapper.dispatches % every == 0:
+            tree = {"state": state_to_tree(out[0])}
+            if len(out) == 3:            # async engine: agg carry too
+                from repro.core.async_engine import agg_state_to_tree
+                tree["agg"] = agg_state_to_tree(out[1])
+            manager.save(wrapper.step, tree, wait=wait)
+        return out
+
+    wrapper.step = int(start_step)
+    wrapper.dispatches = 0
+    wrapper.manager = manager
+    return wrapper
 
 
 def build_prefill_step(cfg: ArchConfig):

@@ -54,9 +54,24 @@ def main() -> None:
     ap.add_argument("--compressor", default="natural")
     ap.add_argument("--master-compressor", default=None)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint destination: a file path (legacy "
+                         "single-file save at the end), or — with "
+                         "--ckpt-every/--resume — a CheckpointManager "
+                         "root directory of step-tagged snapshots")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="snapshot the rollout every N scan chunks into "
+                         "the --ckpt directory (async sharded commits; "
+                         "0 disables)")
+    ap.add_argument("--ckpt-keep", type=int, default=0,
+                    help="retain only the newest N snapshots (0 = all)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume bit-exactly from the latest snapshot "
+                         "under --ckpt")
     ap.add_argument("--log-every", type=int, default=20)
     args = ap.parse_args()
+    if (args.ckpt_every or args.resume) and not args.ckpt:
+        ap.error("--ckpt-every/--resume need --ckpt (the manager root)")
 
     base = get_config(args.arch) if args.full else get_config(args.arch).reduced()
     cfg = build(base, {"n_layers": args.layers, "d_model": args.d_model,
@@ -92,10 +107,23 @@ def main() -> None:
     hp = L2GDHyper(eta=args.eta, lam=args.lam, p=args.p, n=n)
     comp = make_compressor(args.compressor)
     mcomp = make_compressor(args.master_compressor or args.compressor)
+    policy = None
+    if args.ckpt_every:
+        policy = checkpoint.CheckpointPolicy(
+            args.ckpt, every_n_chunks=args.ckpt_every,
+            max_to_keep=args.ckpt_keep or None)
+    resume_from = args.ckpt if args.resume else None
+    if resume_from is not None:
+        step = checkpoint.latest_step(resume_from)
+        print(f"resuming from {resume_from} step {step}", flush=True)
+
     t0 = time.time()
     run = run_l2gd(jax.random.PRNGKey(args.seed + 3), params, grad_fn, hp,
                    batch_fn, args.steps, client_comp=comp, master_comp=mcomp,
-                   seed=args.seed + 4)
+                   seed=args.seed + 4, checkpoint_policy=policy,
+                   resume_from=resume_from)
+    if policy is not None:
+        policy.resolve().close()   # join the in-flight commits
     dt = time.time() - t0
 
     losses = run.losses
@@ -109,11 +137,16 @@ def main() -> None:
           f"bits/n={run.ledger.bits_per_client:.3e}  "
           f"local={run.n_local} aggC={run.n_agg_comm} aggK={run.n_agg_cached}")
 
-    if args.ckpt:
+    if args.ckpt and not (args.ckpt_every or args.resume):
+        # legacy single-file path; manager-mode runs already committed
+        # step-tagged snapshots during the rollout
         checkpoint.save_state(args.ckpt, run.state.params,
                               {"arch": cfg.name, "steps": args.steps,
                                "bits_per_client": run.ledger.bits_per_client})
         print(f"checkpoint -> {args.ckpt}")
+    elif args.ckpt_every:
+        print(f"checkpoints -> {args.ckpt} "
+              f"(latest step {checkpoint.latest_step(args.ckpt)})")
 
 
 if __name__ == "__main__":

@@ -22,7 +22,6 @@ dataclasses round-trip bit-exactly through ``repro.checkpoint``
 checkpoint a training driver could also read."""
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -30,33 +29,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint
-from repro.core import codec as codec_mod
 from repro.core import flatbuf
-from repro.core.codec import CompressionPlan, as_plan, decode_payload
-from repro.core.compressors import make_compressor
+from repro.core.codec import (CompressionPlan, as_plan, decode_payload,
+                              plan_from_spec, plan_spec)
 
 __all__ = ["DeltaModelStore", "plan_spec", "plan_from_spec"]
 
 _BITS_PER_GB = 8.0 * 1024 ** 3
-
-
-def plan_spec(plan: CompressionPlan) -> dict:
-    """Serializable recipe for a plan built from a registry compressor
-    (name + constructor kwargs + transport/bucket) — enough for
-    :func:`plan_from_spec` to rebuild an equivalent plan on load."""
-    comp = plan.codec
-    kwargs = {f.name: getattr(comp, f.name)
-              for f in dataclasses.fields(comp) if f.init}
-    return {"codec": comp.name, "kwargs": kwargs,
-            "transport": plan.transport, "bucket": plan.bucket,
-            "narrow": plan.narrow}
-
-
-def plan_from_spec(spec: dict) -> CompressionPlan:
-    comp = make_compressor(spec["codec"], **spec.get("kwargs", {}))
-    return codec_mod.make_plan(comp, transport=spec["transport"],
-                               bucket=spec.get("bucket"),
-                               narrow=spec.get("narrow", False))
 
 
 class DeltaModelStore:
@@ -152,10 +131,51 @@ class DeltaModelStore:
         return store
 
     @classmethod
-    def from_checkpoint(cls, path: str, plan, **kwargs) -> "DeltaModelStore":
-        """Ingest a federated training checkpoint (stacked params saved by
-        ``checkpoint.save_state``)."""
-        stacked, _extra = checkpoint.restore_state(path)
+    def from_checkpoint(cls, path: str, plan=None,
+                        **kwargs) -> "DeltaModelStore":
+        """Ingest a federated training checkpoint.
+
+        Three source shapes (DESIGN.md §14):
+
+          * a ``checkpoint.save_state`` file of stacked params — the
+            historic path; ``plan`` re-encodes every client as a delta;
+          * a :class:`~repro.checkpoint.CheckpointManager` root or step
+            directory holding a DENSE rollout snapshot — the stacked
+            params are extracted and re-encoded under ``plan``;
+          * the same, holding a DELTA rollout snapshot — the per-client
+            codec payloads (already deltas vs the global model) are
+            ADOPTED directly with base = the snapshot's cache: no dense
+            tenant params are ever materialized, and ``plan`` may be
+            omitted (the stored plan spec rebuilds it).
+        """
+        import os
+        from repro.checkpoint.manager import latest_step, step_dir
+        from repro.checkpoint.resume import FORMAT
+        if os.path.isdir(path):
+            root = path
+            step = latest_step(root)
+            snap_dir = path if step is None else step_dir(root, step)
+            tree = checkpoint.restore_sharded(snap_dir)
+            if not (isinstance(tree, dict) and tree.get("format") == FORMAT):
+                raise ValueError(f"{snap_dir!r} is not a rollout "
+                                 "checkpoint directory")
+            params_block = tree["state"]["params"]
+            if params_block["mode"] == "delta":
+                block = params_block["delta"]
+                base = tree["state"]["cache"]
+                stored = plan_from_spec(block["plan"]) if plan is None \
+                    else as_plan(plan)
+                store = cls(base, stored, **kwargs)
+                for i, payload in enumerate(block["payloads"]):
+                    store._payloads[str(i)] = payload
+                return store
+            stacked = params_block["dense"]
+        else:
+            stacked, _extra = checkpoint.restore_state(path)
+        if plan is None:
+            raise ValueError("plan= is required to ingest dense "
+                             "checkpoint params (only delta rollout "
+                             "checkpoints carry their own plan spec)")
         return cls.from_params(stacked, plan, **kwargs)
 
     # -- read path ----------------------------------------------------------

@@ -1,0 +1,383 @@
+"""Checkpoint subsystem tests (DESIGN.md §14).
+
+Covers the PR-9 bugfixes — durable container writes with corrupt-file
+detection, reserved-marker key escaping, zero-copy lazy restore — plus
+the sharded format, the async CheckpointManager (latest-pointer
+atomicity, kill-mid-save fallback, retention pruning) and the
+compressed-delta param block."""
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.checkpoint.io import (MAGIC, CheckpointCorruptError, header_valid,
+                                 read_durable, write_durable)
+from repro.checkpoint.manager import (CheckpointManager, latest_step,
+                                      restore_sharded, save_sharded,
+                                      step_dir)
+from repro.checkpoint.pack import ArraySink, pack_tree, unpack_tree
+from repro.checkpoint.resume import (delta_pack_stacked,
+                                     delta_unpack_stacked)
+from repro.core.codec import make_plan
+from repro.core.compressors import make_compressor
+
+
+def _tree_equal(a, b):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    if ta != tb:
+        return False
+    for x, y in zip(la, lb):
+        xa, ya = np.asarray(x), np.asarray(y)
+        if xa.dtype != ya.dtype or not np.array_equal(xa, ya):
+            return False
+    return True
+
+
+# -- durable container (satellite 1) ----------------------------------------
+
+def test_container_header_and_roundtrip(tmp_path):
+    p = str(tmp_path / "a.ckpt")
+    write_durable(p, b"hello world")
+    with open(p, "rb") as f:
+        raw = f.read()
+    assert raw.startswith(MAGIC)
+    assert read_durable(p) == b"hello world"
+    assert header_valid(p)
+    assert not os.path.exists(p + ".tmp")   # tmp consumed by the rename
+
+
+def test_corrupt_detection_truncated(tmp_path):
+    p = str(tmp_path / "a.ckpt")
+    write_durable(p, b"x" * 100)
+    with open(p, "rb") as f:
+        raw = f.read()
+    with open(p, "wb") as f:
+        f.write(raw[:-7])                    # torn tail
+    assert not header_valid(p)
+    with pytest.raises(CheckpointCorruptError, match="truncated payload"):
+        read_durable(p)
+
+
+def test_corrupt_detection_bitflip(tmp_path):
+    p = str(tmp_path / "a.ckpt")
+    write_durable(p, b"y" * 64)
+    with open(p, "r+b") as f:
+        f.seek(struct.calcsize("<8sQI") + 10)
+        f.write(b"\xff")
+    assert header_valid(p)                   # size still consistent...
+    with pytest.raises(CheckpointCorruptError, match="CRC"):
+        read_durable(p)                      # ...but the CRC catches it
+
+
+def test_corrupt_detection_empty(tmp_path):
+    p = str(tmp_path / "a.ckpt")
+    open(p, "wb").close()
+    with pytest.raises(CheckpointCorruptError, match="empty"):
+        read_durable(p)
+    with pytest.raises(CheckpointCorruptError):
+        checkpoint.restore(p)
+
+
+def test_legacy_headerless_file_still_loads(tmp_path):
+    """Pre-container checkpoints (raw msgpack, no header) stay readable."""
+    import msgpack
+    p = str(tmp_path / "legacy.ckpt")
+    tree = {"w": jnp.arange(6.0).reshape(2, 3), "k": 3}
+    with open(p, "wb") as f:
+        f.write(msgpack.packb(pack_tree(tree), use_bin_type=True))
+    out = checkpoint.restore(p)
+    assert _tree_equal(out, tree)
+    with pytest.raises(CheckpointCorruptError, match="magic"):
+        read_durable(p, allow_legacy=False)
+
+
+# -- reserved-marker escaping (satellite 2) ---------------------------------
+
+RESERVED_TREES = [
+    {"__scalar__": 5},
+    {"__tuple__": [1, 2]},
+    {"__arr__": True, "dtype": "float32", "shape": [2], "data": b"xx"},
+    {"__payload__": "QSGDPayload", "fields": {}},
+    {"__esc__already": 1, "__esc____scalar__": 2},
+    {"__treedef__": {"a": 1}, "__layout__": None, "__ref__": 0},
+    {"outer": {"__scalar__": {"__tuple__": [3, (4, 5)]}}},
+]
+
+
+@pytest.mark.parametrize("tree", RESERVED_TREES,
+                         ids=[f"reserved{i}" for i in
+                              range(len(RESERVED_TREES))])
+def test_reserved_key_dicts_roundtrip(tmp_path, tree):
+    """User dicts carrying marker keys used to be silently misread on
+    restore ({"__scalar__": 5} came back as the bare 5); the escape
+    layer round-trips them exactly now."""
+    p = str(tmp_path / "r.ckpt")
+    checkpoint.save(p, tree)
+    assert checkpoint.restore(p) == tree
+
+
+def test_reserved_keys_roundtrip_sharded(tmp_path):
+    d = str(tmp_path / "shard")
+    tree = {"__arr__": {"w": jnp.ones((3,))}, "__esc__x": 2}
+    save_sharded(d, tree)
+    out = restore_sharded(d)
+    assert set(out) == {"__arr__", "__esc__x"}
+    assert np.array_equal(np.asarray(out["__arr__"]["w"]), np.ones(3))
+
+
+# -- edge cases (satellite 4) -----------------------------------------------
+
+def test_empty_tree_roundtrip(tmp_path):
+    p = str(tmp_path / "e.ckpt")
+    checkpoint.save(p, {})
+    assert checkpoint.restore(p) == {}
+
+
+def test_zero_length_arrays(tmp_path):
+    p = str(tmp_path / "z.ckpt")
+    tree = {"empty": jnp.zeros((0,)), "empty2d": jnp.zeros((3, 0)),
+            "full": jnp.ones((2,))}
+    checkpoint.save(p, tree)
+    out = checkpoint.restore(p)
+    assert out["empty"].shape == (0,)
+    assert out["empty2d"].shape == (3, 0)
+    d = str(tmp_path / "zs")
+    save_sharded(d, tree)
+    assert restore_sharded(d)["empty2d"].shape == (3, 0)
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "int8", "uint8", "int32",
+                                   "float64"])
+def test_dtypes_roundtrip_bitexact(tmp_path, dtype):
+    p = str(tmp_path / "d.ckpt")
+    if dtype == "bfloat16":
+        a = jnp.asarray([1.5, -2.25, 3e-2, 65504.0], jnp.bfloat16)
+    elif dtype == "float64":
+        a = np.asarray([1.1, -2.7e300, np.pi])
+    else:
+        a = np.arange(-4, 4).astype(dtype)
+    checkpoint.save(p, {"a": a})
+    out = np.asarray(checkpoint.restore(p)["a"])
+    assert str(out.dtype) == dtype
+    assert np.array_equal(out, np.asarray(a))
+
+
+def test_non_string_dict_keys(tmp_path):
+    p = str(tmp_path / "k.ckpt")
+    tree = {0: jnp.ones((2,)), 7: "seven", "s": {1: 2}}
+    checkpoint.save(p, tree)
+    out = checkpoint.restore(p)
+    assert set(out) == {0, 7, "s"}
+    assert out[7] == "seven" and out["s"] == {1: 2}
+
+
+def test_tuple_and_payload_roundtrip(tmp_path):
+    """Codec payloads still round-trip bit-exactly through the new pack
+    layer (the serve store depends on this)."""
+    p = str(tmp_path / "p.ckpt")
+    plan = make_plan(make_compressor("qsgd"),
+                     {"w": jnp.ones((8,))}, transport="packed")
+    payload = plan.encode(jax.random.PRNGKey(0), {"w": jnp.ones((8,))})
+    tree = {"pay": payload, "tup": (1, (2, 3)), "lst": [4, 5]}
+    checkpoint.save(p, tree)
+    out = checkpoint.restore(p)
+    assert out["tup"] == (1, (2, 3)) and out["lst"] == [4, 5]
+    assert type(out["pay"]) is type(payload)
+    for a, b in zip(jax.tree_util.tree_leaves(payload),
+                    jax.tree_util.tree_leaves(out["pay"])):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- zero-copy / lazy restore (satellite 3) ---------------------------------
+
+def test_lazy_restore_returns_readonly_views(tmp_path):
+    p = str(tmp_path / "l.ckpt")
+    tree = {"w": jnp.arange(12.0).reshape(3, 4),
+            "b": jnp.asarray([1, 2], jnp.int8)}
+    checkpoint.save(p, tree)
+    out = checkpoint.restore(p, lazy=True)
+    for leaf in jax.tree_util.tree_leaves(out):
+        assert isinstance(leaf, np.ndarray)
+        assert not isinstance(leaf, jax.Array)
+        assert not leaf.flags.writeable      # view over the file buffer
+        assert not leaf.flags.owndata        # zero-copy: no materialization
+    assert np.array_equal(out["w"], np.arange(12.0).reshape(3, 4))
+
+
+def test_lazy_restore_sharded(tmp_path):
+    d = str(tmp_path / "ls")
+    tree = {"w": np.arange(64, dtype=np.float32),
+            "v": np.arange(10, dtype=np.int8)}
+    save_sharded(d, tree, shard_bytes=128)   # forces multiple shards
+    out = restore_sharded(d, lazy=True)
+    for leaf in jax.tree_util.tree_leaves(out):
+        assert not leaf.flags.owndata and not leaf.flags.writeable
+    assert _tree_equal(out, tree)
+
+
+def test_lazy_views_bitexact_bf16(tmp_path):
+    p = str(tmp_path / "bf.ckpt")
+    a = jnp.asarray(np.linspace(-3, 3, 17), jnp.bfloat16)
+    checkpoint.save(p, {"a": a})
+    v = checkpoint.restore(p, lazy=True)["a"]
+    assert str(v.dtype) == "bfloat16"
+    assert np.array_equal(v, np.asarray(a))
+
+
+# -- sharded format ---------------------------------------------------------
+
+def test_array_sink_packing():
+    sink = ArraySink(shard_bytes=100)
+    refs = [sink.add(b"a" * 60), sink.add(b"b" * 60), sink.add(b"c" * 300)]
+    # 60+60 > 100 -> second leaf opens shard 1; oversized third leaf
+    # never splits, it gets its own shard
+    assert [r["shard"] for r in refs] == [0, 1, 2]
+    assert all(r["offset"] % 64 == 0 for r in refs)
+    blobs = sink.shard_blobs()
+    assert blobs[2] == b"c" * 300
+
+
+def test_sharded_multi_shard_equality(tmp_path):
+    d = str(tmp_path / "ms")
+    rng = np.random.default_rng(0)
+    tree = {f"w{i}": rng.normal(size=(33,)).astype(np.float32)
+            for i in range(6)}
+    save_sharded(d, tree, shard_bytes=256)
+    names = sorted(os.listdir(d))
+    assert sum(n.startswith("shard_") for n in names) > 1
+    assert _tree_equal(restore_sharded(d), tree)
+
+
+def test_sharded_missing_shard_is_corrupt(tmp_path):
+    d = str(tmp_path / "miss")
+    save_sharded(d, {"w": np.ones(4, np.float32)})
+    os.remove(os.path.join(d, "shard_00000.ckpt"))
+    with pytest.raises((CheckpointCorruptError, FileNotFoundError)):
+        restore_sharded(d)
+
+
+# -- manager ----------------------------------------------------------------
+
+def _tree(step):
+    return {"params": {"w": jnp.full((4, 3), float(step))},
+            "step": int(step)}
+
+
+def test_manager_save_restore_latest(tmp_path):
+    with CheckpointManager(str(tmp_path / "ck")) as mgr:
+        fut = mgr.save(5, _tree(5))
+        mgr.save(10, _tree(10), wait=True)
+        fut.result()
+        assert mgr.all_steps() == [5, 10]
+        assert mgr.latest_step() == 10
+        assert _tree_equal(mgr.restore(), _tree(10))
+        assert _tree_equal(mgr.restore(5), _tree(5))
+
+
+def test_manager_async_future(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"))
+    fut = mgr.save(1, _tree(1))
+    path = fut.result()                      # commit ran on the worker
+    assert os.path.isdir(path)
+    mgr.close()
+
+
+def test_manager_pruning(tmp_path):
+    with CheckpointManager(str(tmp_path / "ck"), max_to_keep=2) as mgr:
+        for s in (1, 2, 3, 4):
+            mgr.save(s, _tree(s), wait=True)
+        assert mgr.all_steps() == [3, 4]
+
+
+def test_manager_snapshot_isolated_from_caller_mutation(tmp_path):
+    """save() snapshots synchronously: mutating the source array after
+    save returns must not corrupt the committed bytes."""
+    mgr = CheckpointManager(str(tmp_path / "ck"))
+    arr = np.ones((16,), np.float32)
+    fut = mgr.save(1, {"w": arr})
+    arr[:] = -1.0                            # caller reuses the buffer
+    fut.result()
+    assert np.array_equal(np.asarray(mgr.restore(1)["w"]), np.ones(16))
+    mgr.close()
+
+
+def test_kill_mid_save_latest_resolves_previous_step(tmp_path):
+    """A SIGKILL mid-commit leaves a .tmp staging dir and/or a torn step
+    dir; the latest pointer (or its fallback scan) must still resolve
+    the previous good step."""
+    root = str(tmp_path / "ck")
+    with CheckpointManager(root) as mgr:
+        mgr.save(7, _tree(7), wait=True)
+    # crash scenario A: staging dir left behind -> ignored by readers
+    os.makedirs(os.path.join(root, ".tmp-step_0000000009"))
+    # crash scenario B: step dir committed torn (meta truncated)
+    torn = step_dir(root, 9)
+    os.makedirs(torn)
+    with open(os.path.join(torn, "meta.ckpt"), "wb") as f:
+        f.write(b"RPCKPT01garbage")
+    assert latest_step(root) == 7
+    assert _tree_equal(CheckpointManager(root).restore(), _tree(7))
+
+
+def test_stale_latest_pointer_falls_back_to_scan(tmp_path):
+    root = str(tmp_path / "ck")
+    with CheckpointManager(root) as mgr:
+        mgr.save(3, _tree(3), wait=True)
+        mgr.save(6, _tree(6), wait=True)
+    # pointer corrupted on disk -> descending scan finds newest complete
+    with open(os.path.join(root, "latest"), "wb") as f:
+        f.write(b"\x00\x01")
+    assert latest_step(root) == 6
+    # pointer dangling (names a deleted step) -> same fallback
+    write_durable(os.path.join(root, "latest"),
+                  __import__("msgpack").packb({"step": 99}))
+    assert latest_step(root) == 6
+
+
+def test_latest_step_empty_root(tmp_path):
+    assert latest_step(str(tmp_path / "nothing")) is None
+    with pytest.raises(FileNotFoundError):
+        CheckpointManager(str(tmp_path / "nothing2")).restore()
+
+
+# -- compressed-delta params block ------------------------------------------
+
+def test_delta_block_smaller_than_dense_and_decodes():
+    rng = np.random.default_rng(1)
+    base = {"w": jnp.asarray(rng.normal(size=(64,)).astype(np.float32))}
+    stacked = {"w": base["w"][None] + 0.01 * jnp.asarray(
+        rng.normal(size=(4, 64)).astype(np.float32))}
+    plan = make_plan(make_compressor("qsgd"), base, transport="packed")
+    block = delta_pack_stacked(stacked, base, plan)
+    delta_bits = sum(float(p.nbits) for p in block["payloads"])
+    dense_bits = 4 * 64 * 32.0
+    assert delta_bits < dense_bits
+    out = delta_unpack_stacked(block, base)
+    assert out["w"].shape == (4, 64)
+    # lossy codec: approximate, not exact (dense mode owns bit-exactness)
+    assert np.allclose(np.asarray(out["w"]), np.asarray(stacked["w"]),
+                       atol=0.2)
+
+
+def test_delta_block_deterministic():
+    base = {"w": jnp.zeros((32,))}
+    stacked = {"w": jnp.ones((2, 32))}
+    plan = make_plan(make_compressor("natural"), base, transport="flat")
+    b1 = delta_pack_stacked(stacked, base, plan)
+    b2 = delta_pack_stacked(stacked, base, plan)
+    for p1, p2 in zip(b1["payloads"], b2["payloads"]):
+        for a, b in zip(jax.tree_util.tree_leaves(p1),
+                        jax.tree_util.tree_leaves(p2)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_refs_need_buffers():
+    sink = ArraySink(1 << 20)
+    skel = pack_tree({"w": np.ones(3, np.float32)}, sink=sink)
+    with pytest.raises(ValueError, match="shard buffers"):
+        unpack_tree(skel)

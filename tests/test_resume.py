@@ -1,0 +1,360 @@
+"""Resume keystone (PR-9, DESIGN.md §14): a rollout interrupted at any
+chunk boundary and resumed from ``(checkpoint, RNG key, ledger state)``
+is BIT-EXACT — ``array_equal``, not ``allclose`` — with the
+uninterrupted run, across codecs × engines × participation.
+
+The invariant holds by construction (every RNG stream is keyed by the
+global step counter carried in ``L2GDState.step`` / ``AsyncAggState.
+rnd``, so chunk boundaries are invisible); these tests enforce it
+empirically, including across a real SIGKILL of the training process.
+"""
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import N_CLIENTS, quad_batch, quad_grad_fn, zero_params
+from repro import checkpoint
+from repro.checkpoint import CheckpointManager, CheckpointPolicy
+from repro.core import Identity, L2GDHyper, init_state, make_compressor
+from repro.fl import run_l2gd
+from repro.fl.faults import FaultPlan
+
+BATCH = quad_batch()
+HP = L2GDHyper(eta=0.1, lam=0.5, p=0.4, n=N_CLIENTS)
+FAULTS = FaultPlan(max_delay=2, drop_rate=0.1, crash_rate=0.05,
+                   quorum=0.75)
+STEPS, CHUNK = 24, 6
+
+
+def _rollout(key, steps=STEPS, *, codec="qsgd", participation=None,
+             faults=None, **kw):
+    return run_l2gd(key, zero_params(), quad_grad_fn, HP,
+                    lambda k: BATCH, steps,
+                    client_comp=make_compressor(codec), chunk=CHUNK,
+                    participation=participation, faults=faults, **kw)
+
+
+def _assert_bit_exact(base, other):
+    assert np.array_equal(np.asarray(base.state.params["w"]),
+                          np.asarray(other.state.params["w"]))
+    assert np.array_equal(np.asarray(base.state.cache["w"]),
+                          np.asarray(other.state.cache["w"]))
+    assert other.losses == base.losses
+    assert other.evals == base.evals
+    assert other.ledger.history == base.ledger.history
+    assert other.ledger.bits_per_client == base.ledger.bits_per_client
+    assert other.ledger.rounds == base.ledger.rounds
+    assert np.array_equal(other.xis, base.xis)
+    assert (other.n_local, other.n_agg_comm, other.n_agg_cached) \
+        == (base.n_local, base.n_agg_comm, base.n_agg_cached)
+    assert other.fault_stats == base.fault_stats
+
+
+# -- the keystone matrix ----------------------------------------------------
+
+@pytest.mark.parametrize("participation", [None, 0.5],
+                         ids=["full", "part0.5"])
+@pytest.mark.parametrize("engine", ["sync", "async"])
+@pytest.mark.parametrize("codec", ["identity", "qsgd", "natural"])
+def test_resume_bit_exact(tmp_path, codec, engine, participation):
+    """≥3 codecs × {sync, async-with-faults} × partial participation:
+    checkpoint run == plain run, and a resume from a mid-run boundary
+    reproduces the plain run array-for-array."""
+    faults = FAULTS if engine == "async" else None
+    key = jax.random.PRNGKey(3)
+    kw = dict(codec=codec, participation=participation, faults=faults)
+    root = str(tmp_path / "ckpt")
+
+    base = _rollout(key, **kw)
+    pol = CheckpointPolicy(root)
+    ckpt_run = _rollout(key, checkpoint_policy=pol, **kw)
+    pol.resolve().close()
+    _assert_bit_exact(base, ckpt_run)   # snapshotting changed nothing
+
+    steps = checkpoint.all_steps(root)
+    assert steps and steps[-1] == STEPS  # final boundary always saved
+    mid = steps[len(steps) // 2 - 1]
+    assert 0 < mid < STEPS
+    resumed = _rollout(key, resume_from=root, resume_step=mid, **kw)
+    _assert_bit_exact(base, resumed)
+
+
+@pytest.mark.parametrize("engine", ["sync", "async"])
+def test_resume_from_every_boundary(tmp_path, engine):
+    """One combo per engine resumes from EVERY intermediate boundary."""
+    faults = FAULTS if engine == "async" else None
+    key = jax.random.PRNGKey(9)
+    kw = dict(codec="natural", participation=0.5, faults=faults)
+    root = str(tmp_path / "ckpt")
+
+    base = _rollout(key, **kw)
+    pol = CheckpointPolicy(root)
+    _rollout(key, checkpoint_policy=pol, **kw)
+    pol.resolve().close()
+
+    boundaries = checkpoint.all_steps(root)
+    assert boundaries == list(range(CHUNK, STEPS + 1, CHUNK))
+    for step in boundaries[:-1]:
+        resumed = _rollout(key, resume_from=root, resume_step=step, **kw)
+        _assert_bit_exact(base, resumed)
+    # resume from the FINAL boundary: zero steps left to run, but the
+    # restored run must still carry the full traces/ledger
+    done = _rollout(key, resume_from=root, resume_step=STEPS, **kw)
+    _assert_bit_exact(base, done)
+
+
+def test_resume_continues_eval_trace(tmp_path):
+    """eval_fn continuation: the resumed run's eval trace (prefix
+    restored from the snapshot + suffix recomputed) equals the
+    uninterrupted one."""
+    key = jax.random.PRNGKey(4)
+    eval_fn = lambda params: float(jnp.sum(params["w"] ** 2))
+    kw = dict(codec="qsgd", eval_fn=eval_fn, eval_every=CHUNK)
+    root = str(tmp_path / "ckpt")
+
+    base = _rollout(key, **kw)
+    assert len(base.evals) == STEPS // CHUNK
+    pol = CheckpointPolicy(root)
+    _rollout(key, checkpoint_policy=pol, **kw)
+    pol.resolve().close()
+
+    resumed = _rollout(key, resume_from=root, resume_step=CHUNK * 2, **kw)
+    _assert_bit_exact(base, resumed)
+
+
+def test_every_n_chunks_cadence_and_final_boundary(tmp_path):
+    """every_n_chunks=2 with 4 chunks saves steps {12, 24}; a cadence
+    that misses the end (every_n_chunks=3) still saves the final one."""
+    key = jax.random.PRNGKey(5)
+    r2 = str(tmp_path / "every2")
+    pol = CheckpointPolicy(r2, every_n_chunks=2)
+    _rollout(key, checkpoint_policy=pol)
+    pol.resolve().close()
+    assert checkpoint.all_steps(r2) == [12, 24]
+
+    r3 = str(tmp_path / "every3")
+    pol = CheckpointPolicy(r3, every_n_chunks=3)
+    _rollout(key, checkpoint_policy=pol)
+    pol.resolve().close()
+    assert checkpoint.all_steps(r3) == [18, 24]
+
+
+# -- refusal paths ----------------------------------------------------------
+
+def test_resume_wrong_key_refused(tmp_path):
+    root = str(tmp_path / "ckpt")
+    pol = CheckpointPolicy(root)
+    _rollout(jax.random.PRNGKey(3), checkpoint_policy=pol)
+    pol.resolve().close()
+    with pytest.raises(ValueError, match="PRNG key"):
+        _rollout(jax.random.PRNGKey(4), resume_from=root)
+
+
+@pytest.mark.parametrize("delta", [
+    dict(steps=30), dict(participation=0.5), dict(faults=FAULTS),
+    dict(codec="identity"),
+], ids=["steps", "participation", "faults", "codec-bits"])
+def test_resume_config_mismatch_refused(tmp_path, delta):
+    root = str(tmp_path / "ckpt")
+    pol = CheckpointPolicy(root)
+    kw = dict(codec="qsgd")
+    _rollout(jax.random.PRNGKey(3), checkpoint_policy=pol, **kw)
+    pol.resolve().close()
+    kw.update(delta)
+    steps = kw.pop("steps", STEPS)
+    with pytest.raises(ValueError, match="mismatch"):
+        _rollout(jax.random.PRNGKey(3), steps, resume_from=root, **kw)
+
+
+def test_host_mode_cannot_checkpoint_or_resume(tmp_path):
+    root = str(tmp_path / "ckpt")
+    with pytest.raises(ValueError, match="scan"):
+        _rollout(jax.random.PRNGKey(0), mode="host",
+                 checkpoint_policy=CheckpointPolicy(root))
+    pol = CheckpointPolicy(root)
+    _rollout(jax.random.PRNGKey(0), checkpoint_policy=pol)
+    pol.resolve().close()
+    with pytest.raises(ValueError, match="scan"):
+        _rollout(jax.random.PRNGKey(0), mode="host", resume_from=root)
+
+
+# -- delta-mode checkpoints (storage format, DESIGN.md §12/§14) -------------
+
+def test_delta_checkpoint_lossy_resume_refused(tmp_path):
+    root = str(tmp_path / "ckpt")
+    pol = CheckpointPolicy(root, mode="delta",
+                           delta_plan=make_compressor("qsgd"))
+    _rollout(jax.random.PRNGKey(3), checkpoint_policy=pol)
+    pol.resolve().close()
+    with pytest.raises(ValueError, match="[Ll]ossy"):
+        _rollout(jax.random.PRNGKey(3), resume_from=root,
+                 resume_step=CHUNK * 2)
+    # explicit opt-in proceeds (approximate — no exactness claim here)
+    run = _rollout(jax.random.PRNGKey(3), resume_from=root,
+                   resume_step=CHUNK * 2, allow_lossy_resume=True)
+    assert run.state.params["w"].shape == (N_CLIENTS, BATCH.shape[1])
+    assert len(run.losses) == STEPS
+
+
+def test_delta_checkpoint_identity_plan_resumes_close(tmp_path):
+    """Even a LOSSLESS delta plan is only ulp-close, never bit-exact:
+    ``(x - base) + base`` re-rounds.  This is WHY dense mode owns the
+    resume path — the test pins the boundary of the exactness claim."""
+    key = jax.random.PRNGKey(3)
+    base = _rollout(key)
+    root = str(tmp_path / "ckpt")
+    pol = CheckpointPolicy(root, mode="delta", delta_plan=Identity())
+    _rollout(key, checkpoint_policy=pol)
+    pol.resolve().close()
+    resumed = _rollout(key, resume_from=root, resume_step=CHUNK * 2,
+                       allow_lossy_resume=True)
+    np.testing.assert_allclose(np.asarray(resumed.state.params["w"]),
+                               np.asarray(base.state.params["w"]),
+                               rtol=0, atol=1e-5)
+    assert np.array_equal(resumed.xis, base.xis)  # protocol unaffected
+    assert resumed.ledger.history == base.ledger.history
+
+
+def test_store_adopts_delta_checkpoint(tmp_path):
+    """DeltaModelStore.from_checkpoint on a delta rollout snapshot
+    adopts the per-client payloads directly (no plan needed, no dense
+    materialization); a dense snapshot needs an explicit plan."""
+    from repro.serve.store import DeltaModelStore
+    key = jax.random.PRNGKey(3)
+    droot = str(tmp_path / "delta")
+    pol = CheckpointPolicy(droot, mode="delta", delta_plan=Identity())
+    run = _rollout(key, checkpoint_policy=pol)
+    pol.resolve().close()
+
+    store = DeltaModelStore.from_checkpoint(droot)
+    assert sorted(store.tenants) == [str(i) for i in range(N_CLIENTS)]
+    for i in range(N_CLIENTS):
+        got = store.materialize(str(i))["w"]
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(run.state.params["w"][i]),
+                                   rtol=0, atol=1e-6)
+
+    root = str(tmp_path / "dense")
+    pol = CheckpointPolicy(root)
+    run = _rollout(key, checkpoint_policy=pol)
+    pol.resolve().close()
+    with pytest.raises(ValueError, match="plan"):
+        DeltaModelStore.from_checkpoint(root)
+    store = DeltaModelStore.from_checkpoint(root, plan=Identity())
+    assert len(store) == N_CLIENTS
+    got = store.materialize("1")["w"]
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(run.state.params["w"][1]),
+                               rtol=0, atol=1e-6)
+
+
+# -- launch-layer wrapper ---------------------------------------------------
+
+def test_checkpointed_rollout_wrapper(tmp_path):
+    """steps.checkpointed_rollout commits the RETURNED carries of a
+    built rollout fn at the configured cadence."""
+    from repro.core.rollout import rollout_l2gd
+    from repro.launch.steps import checkpointed_rollout
+
+    length = 6
+    batches = jnp.broadcast_to(BATCH, (length,) + BATCH.shape)
+
+    def roll(state, batches, key):
+        return rollout_l2gd(key, state, HP, batches,
+                            grad_fn=quad_grad_fn, steps=length)
+
+    root = str(tmp_path / "ckpt")
+    wrapped = checkpointed_rollout(roll, root, length=length, every=2,
+                                   wait=True)
+    state = init_state(zero_params())
+    key = jax.random.PRNGKey(5)
+    for i in range(4):
+        state, _trace = wrapped(state, batches, jax.random.fold_in(key, i))
+    wrapped.manager.close()
+
+    assert wrapped.step == 24 and wrapped.dispatches == 4
+    assert checkpoint.all_steps(root) == [12, 24]
+    tree = CheckpointManager(root).restore(24)
+    assert np.array_equal(np.asarray(tree["state"]["params"]["w"]),
+                          np.asarray(state.params["w"]))
+
+
+# -- crash the process for real ---------------------------------------------
+
+_CHILD = r"""
+import sys, time
+import jax, jax.numpy as jnp
+from conftest import quad_batch, quad_grad_fn, zero_params
+from repro.core import L2GDHyper, make_compressor
+from repro.fl import run_l2gd
+from repro.fl.faults import FaultPlan
+from repro.checkpoint import CheckpointPolicy
+
+root = sys.argv[1]
+batch = quad_batch()
+hp = L2GDHyper(eta=0.1, lam=0.5, p=0.4, n=4)
+faults = FaultPlan(max_delay=2, drop_rate=0.1, crash_rate=0.05,
+                   quorum=0.75)
+
+def eval_fn(params):
+    time.sleep(0.25)          # throttle so the parent can aim mid-run
+    return float(jnp.sum(params["w"] ** 2))
+
+pol = CheckpointPolicy(root, wait=True)
+run_l2gd(jax.random.PRNGKey(11), zero_params(), quad_grad_fn, hp,
+         lambda k: batch, 600, client_comp=make_compressor("natural"),
+         chunk=6, eval_fn=eval_fn, eval_every=6, participation=0.5,
+         faults=faults, checkpoint_policy=pol)
+pol.resolve().close()
+"""
+
+
+@pytest.mark.slow
+def test_sigkill_mid_run_then_resume_bit_exact(tmp_path):
+    """The ISSUE's durability drill: SIGKILL a seeded faulty rollout
+    mid-run, resume from the latest snapshot, and land bit-exactly on
+    the uninterrupted trajectory."""
+    root = str(tmp_path / "ckpt")
+    here = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.join(os.path.dirname(here), "src")
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join(
+                   [src, here, os.environ.get("PYTHONPATH", "")]),
+               JAX_PLATFORMS="cpu")
+    proc = subprocess.Popen([sys.executable, "-c", _CHILD, root], env=env)
+    try:
+        deadline = time.monotonic() + 180
+        while time.monotonic() < deadline:
+            if len(checkpoint.all_steps(root)) >= 2:
+                break
+            if proc.poll() is not None:
+                pytest.fail("child exited before being killed "
+                            f"(rc={proc.returncode})")
+            time.sleep(0.1)
+        else:
+            pytest.fail("child produced <2 snapshots before the deadline")
+        os.kill(proc.pid, signal.SIGKILL)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+        proc.wait()
+
+    latest = checkpoint.latest_step(root)
+    assert latest is not None and 0 < latest < 600
+
+    kw = dict(codec="natural", participation=0.5, faults=FAULTS)
+    base = _rollout(jax.random.PRNGKey(11), 600, **kw)
+    resumed = _rollout(jax.random.PRNGKey(11), 600, resume_from=root,
+                       **kw)
+    assert np.array_equal(np.asarray(base.state.params["w"]),
+                          np.asarray(resumed.state.params["w"]))
+    assert resumed.ledger.history == base.ledger.history
+    assert resumed.fault_stats == base.fault_stats
+    assert np.array_equal(resumed.xis, base.xis)
