@@ -191,18 +191,31 @@ class CheckpointManager:
         """Snapshot ``tree`` now; commit it as ``step`` in the background.
 
         Returns the commit ``Future`` (its result is the step dir path).
-        The caller may mutate/donate the original arrays immediately."""
+        The caller may mutate/donate the original arrays immediately.
+        A failure of an EARLIER background commit (disk full, pack
+        error, ...) is re-raised here — never silently dropped, or a
+        run could finish "successfully" with zero durable checkpoints."""
+        self._reap_pending()
         snapshot = _host_snapshot(tree)
         if self._pool is None:
             self._pool = ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix="ckpt-commit")
         fut = self._pool.submit(self._commit, int(step), snapshot)
         self._pending.append(fut)
-        self._pending = [f for f in self._pending if not f.done()] + \
-            ([fut] if fut.done() else [])
         if wait:
             fut.result()
         return fut
+
+    def _reap_pending(self) -> None:
+        """Drop finished commits from the pending list, re-raising the
+        first failure among them (the rest stay queued on the worker)."""
+        done, self._pending = \
+            [f for f in self._pending if f.done()], \
+            [f for f in self._pending if not f.done()]
+        for fut in done:
+            exc = fut.exception()
+            if exc is not None:
+                raise exc
 
     def _commit(self, step: int, snapshot: Any) -> str:
         final = step_dir(self.root, step)

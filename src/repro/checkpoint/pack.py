@@ -262,8 +262,8 @@ def pack_tree(obj: Any, sink: Optional[ArraySink] = None):
     raise TypeError(f"cannot checkpoint {type(obj)}")
 
 
-def _as_array(data, dtype: str, shape, np_views: bool):
-    a = np.frombuffer(data, dtype=np.dtype(dtype)).reshape(shape)
+def _materialize(a: np.ndarray, np_views: bool):
+    """Finalize one restored leaf (BOTH the inline and __ref__ paths)."""
     if np_views:
         return a                      # read-only view over the buffer
     from jax import dtypes as jax_dtypes
@@ -273,6 +273,11 @@ def _as_array(data, dtype: str, shape, np_views: bool):
         #                      host copy instead
     import jax.numpy as jnp
     return jnp.asarray(a)
+
+
+def _as_array(data, dtype: str, shape, np_views: bool):
+    return _materialize(
+        np.frombuffer(data, dtype=np.dtype(dtype)).reshape(shape), np_views)
 
 
 def unpack_tree(obj: Any, *, buffers: Optional[Callable] = None,
@@ -295,11 +300,7 @@ def unpack_tree(obj: Any, *, buffers: Optional[Callable] = None,
                               count=int(np.prod(obj["shape"], dtype=np.int64))
                               if obj["shape"] else 1,
                               offset=int(obj["offset"]))
-            a = a.reshape(obj["shape"])
-            if np_views:
-                return a
-            import jax.numpy as jnp
-            return jnp.asarray(a)
+            return _materialize(a.reshape(obj["shape"]), np_views)
         if _SCALAR in obj:
             return obj["v"]
         if _TUPLE in obj and len(obj) == 1:

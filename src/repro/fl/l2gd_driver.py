@@ -418,7 +418,6 @@ def _run_scan(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
         done, xi_prev = resume.done, resume.xi_prev
         if resume.xis.size:
             xis_all.append(resume.xis)
-    chunks_done = 0
     while done < steps:
         length = min(chunk, steps - done)
         if const:
@@ -447,11 +446,18 @@ def _run_scan(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
         done += length
         if eval_fn is not None and done % eval_every == 0:
             run.evals.append((done, float(eval_fn(state.params))))
-        chunks_done += 1
-        if policy is not None and (chunks_done % policy.every_n_chunks == 0
-                                   or done == steps):
+        # cadence off the GLOBAL chunk index, not a counter that resets
+        # at resume — a resumed run snapshots the same boundaries as the
+        # uninterrupted one it mirrors
+        if policy is not None and \
+                ((done // chunk) % policy.every_n_chunks == 0
+                 or done == steps):
             _checkpoint_chunk(policy, signature, key, done, xi_prev, state,
                               None, run, xis_all)
+    if policy is not None:
+        # surface any background commit failure (incl. the final one)
+        # before the run reports success
+        policy.resolve().wait_until_finished()
     run.state = state
     run.xis = np.concatenate(xis_all) if xis_all \
         else np.zeros((0,), np.int32)
@@ -516,7 +522,6 @@ def _run_scan_async(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
         if resume.fault_stats is not None:
             totals.update({k: int(v)
                            for k, v in resume.fault_stats.items()})
-    chunks_done = 0
     while done < steps:
         length = min(chunk, steps - done)
         if const:
@@ -549,12 +554,15 @@ def _run_scan_async(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
         done += length
         if eval_fn is not None and done % eval_every == 0:
             run.evals.append((done, float(eval_fn(state.params))))
-        chunks_done += 1
-        if policy is not None and (chunks_done % policy.every_n_chunks == 0
-                                   or done == steps):
+        # global-chunk-index cadence: identical boundaries on resume
+        if policy is not None and \
+                ((done // chunk) % policy.every_n_chunks == 0
+                 or done == steps):
             run.fault_stats = dict(totals)
             _checkpoint_chunk(policy, signature, key, done, xi_prev, state,
                               agg, run, xis_all)
+    if policy is not None:
+        policy.resolve().wait_until_finished()
     run.state = state
     run.xis = np.concatenate(xis_all) if xis_all \
         else np.zeros((0,), np.int32)

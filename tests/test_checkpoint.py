@@ -154,6 +154,8 @@ def test_zero_length_arrays(tmp_path):
 @pytest.mark.parametrize("dtype", ["bfloat16", "int8", "uint8", "int32",
                                    "float64"])
 def test_dtypes_roundtrip_bitexact(tmp_path, dtype):
+    """Both formats: the inline single file AND the sharded (__ref__)
+    layout CheckpointManager writes — f64 must survive x32 on each."""
     p = str(tmp_path / "d.ckpt")
     if dtype == "bfloat16":
         a = jnp.asarray([1.5, -2.25, 3e-2, 65504.0], jnp.bfloat16)
@@ -163,6 +165,11 @@ def test_dtypes_roundtrip_bitexact(tmp_path, dtype):
         a = np.arange(-4, 4).astype(dtype)
     checkpoint.save(p, {"a": a})
     out = np.asarray(checkpoint.restore(p)["a"])
+    assert str(out.dtype) == dtype
+    assert np.array_equal(out, np.asarray(a))
+    d = str(tmp_path / "d_sharded")
+    save_sharded(d, {"a": a})
+    out = np.asarray(restore_sharded(d)["a"])
     assert str(out.dtype) == dtype
     assert np.array_equal(out, np.asarray(a))
 
@@ -285,6 +292,26 @@ def test_manager_async_future(tmp_path):
     path = fut.result()                      # commit ran on the worker
     assert os.path.isdir(path)
     mgr.close()
+
+
+def test_manager_background_failure_surfaces(tmp_path):
+    """A failed background commit must NOT be silently swallowed: the
+    error re-raises on the next save() and on wait_until_finished() —
+    never a 'successful' run with zero durable checkpoints."""
+    import concurrent.futures
+    mgr = CheckpointManager(str(tmp_path / "ck"))
+    fut = mgr.save(1, {"bad": {1, 2}})       # sets can't be checkpointed:
+    with pytest.raises(TypeError):           # the worker's pack raises
+        mgr.wait_until_finished()
+    assert isinstance(fut.exception(), TypeError)
+
+    mgr2 = CheckpointManager(str(tmp_path / "ck2"))
+    fut = mgr2.save(1, {"bad": {1, 2}})
+    concurrent.futures.wait([fut])
+    with pytest.raises(TypeError):
+        mgr2.save(2, {"ok": np.ones((2,))})  # reaps the failed commit
+    mgr.close()
+    mgr2.close()
 
 
 def test_manager_pruning(tmp_path):

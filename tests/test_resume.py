@@ -146,6 +146,26 @@ def test_every_n_chunks_cadence_and_final_boundary(tmp_path):
     assert checkpoint.all_steps(r3) == [18, 24]
 
 
+def test_resume_cadence_matches_uninterrupted(tmp_path):
+    """Snapshot cadence keys off the GLOBAL chunk index: a resumed run
+    writes snapshots at the same step boundaries as the uninterrupted
+    run it mirrors (a counter restarting at 0 on resume used to shift
+    them — resuming step 6 under every_n_chunks=2 saved {18, 24})."""
+    key = jax.random.PRNGKey(5)
+    r1 = str(tmp_path / "dense")
+    pol = CheckpointPolicy(r1, every_n_chunks=1)
+    _rollout(key, checkpoint_policy=pol)
+    pol.resolve().close()
+    assert checkpoint.all_steps(r1) == [6, 12, 18, 24]
+
+    r2 = str(tmp_path / "resumed")
+    pol = CheckpointPolicy(r2, every_n_chunks=2)
+    _rollout(key, resume_from=r1, resume_step=CHUNK,
+             checkpoint_policy=pol)
+    pol.resolve().close()
+    assert checkpoint.all_steps(r2) == [12, 24]
+
+
 # -- refusal paths ----------------------------------------------------------
 
 def test_resume_wrong_key_refused(tmp_path):
