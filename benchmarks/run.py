@@ -8,6 +8,7 @@
   agg    -- fused decode->reduce aggregation engine     [system, DESIGN §10]
   rollout -- scanned rollout engine vs host loop        [system, DESIGN §8]
   sharded -- client-sharded rollout scaling             [system, DESIGN §9]
+  lm     -- 2-D mesh LM training, tokens/sec headline   [system, DESIGN §15]
   async  -- arrival-ordered faulty rounds vs sync scan  [system, DESIGN §11]
   serve  -- base+delta serving: residency, TTFT         [system, DESIGN §12]
   fleet  -- heterogeneous per-cohort plans, mixed fleet [system, DESIGN §13]
@@ -35,8 +36,8 @@ import traceback
 from benchmarks import (bench_agg_reduce, bench_async, bench_checkpoint,
                         bench_fig3_sweep, bench_fig4_compressors,
                         bench_fig7_fedavg_recovery, bench_fleet,
-                        bench_kernels, bench_roofline, bench_rollout,
-                        bench_serve, bench_sharded_rollout,
+                        bench_kernels, bench_lm, bench_roofline,
+                        bench_rollout, bench_serve, bench_sharded_rollout,
                         bench_table2_bits, common)
 
 BENCHES = {
@@ -48,6 +49,7 @@ BENCHES = {
     "agg": bench_agg_reduce.run,
     "rollout": bench_rollout.run,
     "sharded": bench_sharded_rollout.run,
+    "lm": bench_lm.run,
     "async": bench_async.run,
     "serve": bench_serve.run,
     "fleet": bench_fleet.run,
@@ -61,7 +63,7 @@ BENCHES = {
 # baseline was recorded on ONE machine and wall-clock ratios across CI
 # runner generations drift — widen BENCH_CHECK_FACTOR there rather than
 # re-recording baselines from a slow runner.
-_CHECK_MARKERS = ("_fused", "_pack")
+_CHECK_MARKERS = ("_fused", "_pack", "lm_tokens")
 _CHECK_FACTOR = float(os.environ.get("BENCH_CHECK_FACTOR", "2.0"))
 
 

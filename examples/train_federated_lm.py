@@ -11,10 +11,11 @@ Full run (a few hours on 1 CPU core — TPU is the real target):
 Quick verification:
   PYTHONPATH=src python examples/train_federated_lm.py --steps 20
 """
-import argparse
 import sys
 
-sys.argv = [sys.argv[0]] + [
+from repro.launch.train import main
+
+DEFAULTS = [
     "--arch", "stablelm-1.6b",           # dense family
     "--layers", "12", "--d-model", "640", "--d-ff", "2560",
     "--heads", "10", "--kv-heads", "10", "--vocab", "8192",
@@ -23,9 +24,10 @@ sys.argv = [sys.argv[0]] + [
     "--compressor", "natural",
     "--ckpt", "experiments/federated_lm_100m.msgpack",
     "--log-every", "10",
-] + (sys.argv[1:] if len(sys.argv) > 1 else ["--steps", "300"])
-
-from repro.launch.train import main  # noqa: E402
+]
 
 if __name__ == "__main__":
-    main()
+    # explicit argv composition (no sys.argv splicing): argparse's
+    # last-wins ordering lets any user flag override a default above
+    user = sys.argv[1:]
+    main(argv=DEFAULTS + (user if user else ["--steps", "300"]))

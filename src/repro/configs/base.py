@@ -74,6 +74,12 @@ class ArchConfig:
     activation: str = "silu"
     param_dtype: str = "float32"
     compute_dtype: str = "float32"
+    attn_impl: str = "dense"        # dense | flash: train-path attention
+                                    # kernel (flash = the tiled Pallas /
+                                    # reference kernel; dispatch falls back
+                                    # to dense when a layer's mask cannot be
+                                    # expressed statically — see
+                                    # models/model.py)
     remat: bool = True
     mlp_fused: bool = False         # fuse gate+up input projections (§Perf)
     remat_policy: str = "full"      # full | dots (dots_saveable: keep matmul

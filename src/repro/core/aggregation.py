@@ -391,6 +391,14 @@ def make_client_sharded_average(axis_name: str, n_clients: int,
     payload for every client (simulation-only overhead; the LEDGER still
     charges per-client ``round_bits(i)`` of the client's own plan —
     wire accounting and simulator collectives are decoupled, §13).
+
+    ``client_comp`` may also be a length-n SEQUENCE of plans — a
+    per-client plan vector (ROADMAP fleet headroom).  Structurally equal
+    plans dedupe into cohorts (:func:`repro.fl.fleet.fleet_from_plans`),
+    so the vector spelling is bit-exact vs manual cohort grouping by
+    construction: n equal plans collapse to the uniform fleet and take
+    the single-plan path; only genuinely distinct plans pay the mixed
+    path (a true singleton cohort per client when all n differ).
     """
     up = _resolve_uplink(client_comp)
     down_plan = as_plan(master_comp)

@@ -113,10 +113,21 @@ def init_state(params_stacked) -> L2GDState:
 
 
 def local_update(params_stacked, grads_stacked, hp: L2GDHyper):
-    """x_i <- x_i - eta/(n(1-p)) grad f_i(x_i), all clients at once."""
+    """x_i <- x_i - eta/(n(1-p)) grad f_i(x_i), all clients at once.
+
+    Precision policy (DESIGN.md §15): the update is computed in float32
+    and rounded ONCE back to the parameter dtype.  For float32 params the
+    casts are identities, so this is bit-identical to the historic
+    ``x - s * g`` path; for bfloat16 params it avoids the silent f32
+    promotion that ``f32_scalar * bf16`` would otherwise introduce (the
+    result would no longer match the stacked state dtype) and keeps the
+    rounding error to one rounding per step."""
     s = hp.local_scale
-    return jax.tree.map(lambda x, g: x - s * g.astype(x.dtype), params_stacked,
-                        grads_stacked)
+    return jax.tree.map(
+        lambda x, g: (x.astype(jnp.float32)
+                      - jnp.asarray(s, jnp.float32) * g.astype(jnp.float32)
+                      ).astype(x.dtype),
+        params_stacked, grads_stacked)
 
 
 def aggregation_update(params_stacked, target, hp: L2GDHyper, mask=None):
@@ -129,13 +140,17 @@ def aggregation_update(params_stacked, target, hp: L2GDHyper, mask=None):
     """
     c = hp.agg_scale
     if mask is None:
-        return jax.tree.map(
-            lambda x, t: x - jnp.asarray(c, x.dtype) * (x - t[None].astype(x.dtype)),
-            params_stacked, target)
+        def one(x, t):
+            xf = x.astype(jnp.float32)
+            return (xf - jnp.asarray(c, jnp.float32)
+                    * (xf - t[None].astype(jnp.float32))).astype(x.dtype)
+        return jax.tree.map(one, params_stacked, target)
 
     def one(x, t):
-        mb = mask.reshape((x.shape[0],) + (1,) * (x.ndim - 1)).astype(x.dtype)
-        return x - jnp.asarray(c, x.dtype) * mb * (x - t[None].astype(x.dtype))
+        xf = x.astype(jnp.float32)
+        mb = mask.reshape((x.shape[0],) + (1,) * (x.ndim - 1)).astype(jnp.float32)
+        return (xf - jnp.asarray(c, jnp.float32) * mb
+                * (xf - t[None].astype(jnp.float32))).astype(x.dtype)
 
     return jax.tree.map(one, params_stacked, target)
 
@@ -149,7 +164,8 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
               client_comp: Compressor = Identity(),
               master_comp: Compressor = Identity(),
               average_fn: Callable = None, flat=_UNSET, *,
-              participation_mask=None, axis_name: str = None):
+              participation_mask=None, axis_name: str = None,
+              local_steps: int = 1):
     """One step of Algorithm 1.
 
     Args:
@@ -189,6 +205,14 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
              shard's clients by ``lax.axis_index``.  Requires an
              ``average_fn`` that performs the cross-shard collective
              (repro.core.aggregation.make_client_sharded_average).
+      local_steps: LoCoDL-style local-training burst H >= 1 (DESIGN.md
+             §15): a protocol step whose xi draw selects the LOCAL branch
+             runs H gradient steps on this step's batch before returning.
+             Aggregation branches are unaffected, so the wire cost of a
+             round is charged once regardless of H (the ledger replays xi
+             transitions, not gradient passes).  ``local_steps=1`` is
+             structurally identical to the historic step (the extra-pass
+             loop body is simply absent from the trace) — bit-exact.
 
     Returns: (new_state, metrics dict).  Metrics include the mean client
     loss — evaluated at the PRE-update params on every branch, so the
@@ -197,6 +221,8 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
     branch id.  The aggregation branches only use grad_fn's loss output;
     XLA dead-code-eliminates the gradient computation there.
     """
+    if not isinstance(local_steps, int) or local_steps < 1:
+        raise ValueError(f"local_steps must be an int >= 1, got {local_steps}")
     transport = None
     if flat is not _UNSET:
         transport = _legacy_transport(flat, "l2gd_step(..., flat=)")
@@ -234,6 +260,12 @@ def l2gd_step(state: L2GDState, batch, xi_k: jax.Array, key: jax.Array,
         st, k = op
         losses, grads = jax.vmap(grad_fn)(st.params, batch)
         new_params = local_update(st.params, grads, hp)
+        # LoCoDL burst: H-1 further passes on the SAME batch (unrolled —
+        # H is static and small).  The reported loss stays the pre-update
+        # loss of the first pass, so the trace semantics match H=1.
+        for _ in range(local_steps - 1):
+            _, grads = jax.vmap(grad_fn)(new_params, batch)
+            new_params = local_update(new_params, grads, hp)
         return (L2GDState(new_params, st.cache, jnp.asarray(0, jnp.int32),
                           st.step + 1),
                 _reduce_losses(losses))

@@ -157,7 +157,8 @@ def rollout_l2gd(key: jax.Array, state: L2GDState, hp: L2GDHyper, batches,
                  grad_fn: Callable, steps: Optional[int] = None,
                  client_comp: Any = Identity(), master_comp: Any = Identity(),
                  batch_axis: Optional[int] = 0, average_fn=None,
-                 unroll: int = 1, participation: Optional[float] = None):
+                 unroll: int = 1, participation: Optional[float] = None,
+                 local_steps: int = 1):
     """Run K rounds of Algorithm 1 inside one ``lax.scan``.
 
     Args:
@@ -192,6 +193,11 @@ def rollout_l2gd(key: jax.Array, state: L2GDState, hp: L2GDHyper, batches,
         stream (module docstring; DESIGN.md §9).  ``None`` (or a
         fraction giving s == n) is the historic full-participation path,
         bit-exactly.
+      local_steps: LoCoDL-style burst H >= 1 forwarded to
+        :func:`~repro.core.l2gd.l2gd_step` — local-branch protocol steps
+        run H gradient passes on their step's batch; the wire cost of a
+        round is unchanged (the ledger replays xi transitions).  H=1 is
+        the historic step, bit-exactly.
 
     Returns: ``(final_state, RolloutTrace)`` — everything stays on
     device; a jitted rollout issues zero per-step host transfers
@@ -224,7 +230,7 @@ def rollout_l2gd(key: jax.Array, state: L2GDState, hp: L2GDHyper, batches,
     def step_fn(st, batch, xi, sub, mask):
         return l2gd_step(st, batch, xi, sub, grad_fn, hp, client_comp,
                          master_comp, average_fn=average_fn,
-                         participation_mask=mask)
+                         participation_mask=mask, local_steps=local_steps)
 
     final, outs = _protocol_scan(state, length, xis_in, subs, masks,
                                  batches, batch_axis, unroll, step_fn)
@@ -290,7 +296,7 @@ def rollout_l2gd_sharded(key: jax.Array, state: L2GDState, hp: L2GDHyper,
                          master_comp: Any = Identity(),
                          participation: Optional[float] = None,
                          batch_axis: Optional[int] = 0, unroll: int = 1,
-                         axis_name: str = "clients"):
+                         axis_name: str = "clients", local_steps: int = 1):
     """:func:`rollout_l2gd` with the stacked client axis SHARDED over a
     device mesh — the whole K-step scan runs inside ONE shard_map over
     ``mesh``'s ``axis_name`` axis (repro.launch.mesh.make_client_mesh).
@@ -354,7 +360,8 @@ def rollout_l2gd_sharded(key: jax.Array, state: L2GDState, hp: L2GDHyper,
             sub = jax.random.wrap_key_data(sub_data)
             return l2gd_step(st, batch, xi, sub, grad_fn, hp, up_plan,
                              down_plan, average_fn=average_fn,
-                             participation_mask=mask, axis_name=axis_name)
+                             participation_mask=mask, axis_name=axis_name,
+                             local_steps=local_steps)
 
         return _protocol_scan(st, length, xis_in, subs, masks, batches,
                               batch_axis, unroll, step_fn)

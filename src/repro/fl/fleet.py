@@ -55,7 +55,8 @@ import numpy as np
 
 from repro.core.codec import CompressionPlan, as_plan
 
-__all__ = ["FleetPlan", "as_fleet_plan", "resolve_uplink", "cohort_label",
+__all__ = ["FleetPlan", "as_fleet_plan", "fleet_from_plans",
+           "resolve_uplink", "cohort_label",
            "CohortBatch", "fleet_encode", "fleet_finite_mask",
            "fleet_weighted_sum", "fleet_mean"]
 
@@ -207,12 +208,52 @@ def as_fleet_plan(plan_or_fleet, n_clients: int, params=None) -> FleetPlan:
     return FleetPlan(cohorts=(plan,), assignment=(0,) * int(n_clients))
 
 
+def _plan_key(plan: CompressionPlan):
+    """Structural identity of a plan for cohort dedup: codec (frozen
+    dataclass — field-wise equality/hash), transport, bucket, narrow.
+    ``specs`` is deliberately excluded: two copies of one recipe bound to
+    the same model are the same cohort."""
+    return (plan.codec, plan.transport, plan.bucket, plan.narrow)
+
+
+def fleet_from_plans(plans) -> FleetPlan:
+    """Build a :class:`FleetPlan` from a length-n PER-CLIENT plan vector
+    (ROADMAP fleet headroom: a singleton cohort per client).
+
+    Structurally equal plans (same codec fields, transport, bucket,
+    narrow — :func:`_plan_key`) dedupe into ONE cohort, so the vector
+    form is bit-exact with manual cohort grouping BY CONSTRUCTION: n
+    copies of one plan become the uniform one-cohort fleet (which
+    :func:`resolve_uplink` unwraps to the literal single-plan path), and
+    clients sharing a recipe always fold inside the same cohort partial
+    sum — f32 association order never forks between the two spellings.
+    Genuinely distinct plans keep one cohort each (true per-client
+    compression).  Entries may be plans or plain compressors
+    (``as_plan`` coercion)."""
+    plans = [as_plan(p) for p in plans]
+    if not plans:
+        raise ValueError("fleet_from_plans needs at least one plan")
+    cohorts, assignment, seen = [], [], {}
+    for p in plans:
+        k = _plan_key(p)
+        if k not in seen:
+            seen[k] = len(cohorts)
+            cohorts.append(p)
+        assignment.append(seen[k])
+    return FleetPlan(cohorts=tuple(cohorts), assignment=tuple(assignment))
+
+
 def resolve_uplink(comp, transport: Optional[str] = None):
     """The plan-or-fleet coercion every engine entry point applies to its
     uplink argument: plain compressors/plans -> ``as_plan`` (historic
     behaviour, including the deprecated-transport shim), uniform fleets
     -> their single plan (the keystone unwrap: the engine compiles the
-    literal single-plan graph), mixed fleets -> the fleet itself."""
+    literal single-plan graph), mixed fleets -> the fleet itself.  A
+    length-n SEQUENCE of plans is a per-client plan vector
+    (:func:`fleet_from_plans`): dedupe into cohorts, then the same
+    uniform/mixed rule."""
+    if isinstance(comp, (list, tuple)):
+        comp = fleet_from_plans(comp)
     if isinstance(comp, FleetPlan):
         if comp.is_uniform:
             return comp.uniform_plan

@@ -76,8 +76,12 @@ def _resolve_plans(client_comp, master_comp, plan, one_client):
     shapes here; a UNIFORM fleet unwraps to its single plan immediately
     (keystone: the driver then runs the literal single-plan stack,
     scalar ledger charge included).  The downlink is always one
-    broadcast plan."""
-    from repro.fl.fleet import FleetPlan, resolve_uplink
+    broadcast plan.  A length-n SEQUENCE as ``client_comp`` is a
+    per-client plan vector (:func:`repro.fl.fleet.fleet_from_plans` —
+    equal plans dedupe into cohorts)."""
+    from repro.fl.fleet import FleetPlan, fleet_from_plans, resolve_uplink
+    if isinstance(client_comp, (list, tuple)):
+        client_comp = fleet_from_plans(client_comp)
     if plan is None:
         up_plan = client_comp \
             if isinstance(client_comp, (CompressionPlan, FleetPlan)) \
@@ -126,7 +130,8 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
              faults: Optional[FaultPlan] = None,
              checkpoint_policy=None, resume_from=None,
              resume_step: Optional[int] = None,
-             allow_lossy_resume: bool = False) -> L2GDRun:
+             allow_lossy_resume: bool = False,
+             local_steps: int = 1) -> L2GDRun:
     """Run Algorithm 1 for ``steps`` iterations.
 
     batch_fn(step) -> per-client batch pytree (leading client axis n);
@@ -196,6 +201,13 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
     ``ValueError`` before any step runs; delta-mode (lossy) checkpoints
     are refused unless ``allow_lossy_resume=True``.
 
+    ``local_steps`` (LoCoDL, DESIGN.md §15) runs H >= 1 gradient passes
+    per LOCAL protocol step — identical in both modes, and the ledger is
+    untouched by construction: rounds are charged on xi transitions
+    (``replay_xi_trace`` / the host loop's transition counter), never per
+    gradient pass, so H local passes still cost zero wire bits and an
+    aggregation round still costs exactly one round of bits.
+
     Deprecated shims: ``packed_uplink=`` maps to
     ``plan=make_plan(client_comp, one_client, transport="packed")``;
     ``seed=`` predates the unified PRNG contract (module docstring) and
@@ -206,6 +218,10 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
     if faults is not None and mode != "scan":
         raise ValueError("faults= requires mode='scan': the async engine "
                          "is the scanned rollout (repro.core.async_engine)")
+    if faults is not None and int(local_steps) != 1:
+        raise ValueError("local_steps > 1 is not supported on the async "
+                         "fault engine yet (its round clock assumes one "
+                         "gradient pass per local step)")
     if seed is not _UNSET:
         warnings.warn(
             "run_l2gd(seed=) is deprecated: xi is drawn from `key` (split "
@@ -291,7 +307,7 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
     if mode == "host":
         _run_host(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
                   down_plan, up_bits, down_bits, eval_fn, eval_every, jit,
-                  xi_trace, participation)
+                  xi_trace, participation, local_steps)
     elif faults is not None:
         _run_scan_async(run, key, state, grad_fn, hp, batch_fn, steps,
                         up_plan, down_plan, up_bits, down_bits, eval_fn,
@@ -301,7 +317,7 @@ def run_l2gd(key, params_stacked, grad_fn: Callable, hp: L2GDHyper,
         _run_scan(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
                   down_plan, up_bits, down_bits, eval_fn, eval_every, chunk,
                   xi_trace, participation,
-                  checkpoint_policy, signature, resume)
+                  checkpoint_policy, signature, resume, local_steps)
     return run
 
 
@@ -323,7 +339,7 @@ def _checkpoint_chunk(policy, signature, key, done, xi_prev, state, agg,
 
 def _run_host(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
               down_plan, up_bits, down_bits, eval_fn, eval_every, jit,
-              xi_trace, participation):
+              xi_trace, participation, local_steps: int = 1):
     """Legacy per-step reference loop: one dispatch + one blocking loss
     fetch per step.  Kept bit-identical to the scan path (same RNG
     derivation, same step function, same participation masks) as the
@@ -350,7 +366,8 @@ def _run_host(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
 
     step_fn = lambda st, b, xi, k, m: l2gd_step(st, b, xi, k, grad_fn, hp,
                                                 up_plan, down_plan,
-                                                participation_mask=m)
+                                                participation_mask=m,
+                                                local_steps=local_steps)
     if jit:
         step_fn = jax.jit(step_fn)
 
@@ -384,7 +401,7 @@ def _run_host(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
 def _run_scan(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
               down_plan, up_bits, down_bits, eval_fn, eval_every, chunk,
               xi_trace, participation, policy=None, signature=None,
-              resume=None):
+              resume=None, local_steps: int = 1):
     """Chunked wrapper over the scanned rollout: the chunk boundary is
     the only place the host touches device data (trace fetch, ledger
     replay, eval_fn, checkpoint snapshot)."""
@@ -408,7 +425,7 @@ def _run_scan(run, key, state, grad_fn, hp, batch_fn, steps, up_plan,
                 rollout_l2gd, grad_fn=grad_fn, steps=length,
                 client_comp=up_plan, master_comp=down_plan,
                 batch_axis=None if const else 0,
-                participation=participation))
+                participation=participation, local_steps=local_steps))
         return rolled[length]
 
     done = 0

@@ -154,6 +154,14 @@ class BitsLedger:
         per-client vector — fleet charging, module docstring.  Returns
         the trace's final xi — feed it back as ``xi_prev`` for the next
         chunk.
+
+        Local-step rule (DESIGN.md §15): the replay charges xi
+        TRANSITIONS, never gradient passes, so a ``local_steps=H`` run
+        (H gradient passes inside each local protocol step, LoCoDL
+        amortization) is charged identically to H=1 — the wire cost of a
+        round is paid once per round regardless of how much local work
+        amortizes it.  This is by construction, not a special case: the
+        xi trace has one entry per PROTOCOL step.
         """
         up_bits = per_client_uplink(uplink_bits_one_client, self.n_clients)
         scale = 1.0

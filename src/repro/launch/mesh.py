@@ -26,7 +26,8 @@ except ImportError:  # older jax: no explicit-sharding axis types
     AxisType = None
 
 __all__ = ["make_compat_mesh", "make_production_mesh", "make_client_mesh",
-           "client_axes", "n_clients_of"]
+           "make_train_mesh", "client_axes", "n_clients_of",
+           "model_shards_of"]
 
 
 def make_compat_mesh(shape, axes, devices):
@@ -41,13 +42,49 @@ def make_compat_mesh(shape, axes, devices):
     return Mesh(np.asarray(devices).reshape(shape), axes)
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def make_production_mesh(*, multi_pod: bool = False, clients: int = None,
+                         model: int = None):
+    """The 2-D training mesh: a ``(clients, model)``-style axis pair.
+
+    Default shapes keep the historic ``("data", "model")`` naming —
+    (16, 16) single pod, (2, 16, 16) multi-pod, where the FL client axis
+    is ``("pod", "data")``.  Passing ``clients=``/``model=`` instead
+    builds an explicit ``("clients", "model")`` mesh of that shape (the
+    2-D engine layout, DESIGN.md §15): each of the ``clients`` rows holds
+    a client subset whose personalized models are FSDP-style sharded over
+    its ``model`` columns."""
+    if clients is not None or model is not None:
+        c = int(clients or 1)
+        m = int(model or 1)
+        if multi_pod:
+            raise ValueError("multi_pod composes the pod axis with the "
+                             "default data x model shape; pass clients=/"
+                             "model= without multi_pod")
+        return make_compat_mesh((c, m), ("clients", "model"),
+                                jax.devices()[:c * m])
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = 1
     for s in shape:
         n *= s
     return make_compat_mesh(shape, axes, jax.devices()[:n])
+
+
+def make_train_mesh(clients: int = None, model_shards: int = 1):
+    """The 2-D ``(clients, model)`` mesh of the LM training engine
+    (DESIGN.md §15); ``model_shards=1`` degenerates to the column-free
+    layout that is bit-exact with :func:`make_client_mesh` rollouts.
+    ``clients=None`` uses every visible device divided by
+    ``model_shards``."""
+    devices = jax.devices()
+    m = int(model_shards)
+    if m < 1:
+        raise ValueError(f"model_shards must be >= 1, got {model_shards}")
+    c = (len(devices) // m) if clients is None else int(clients)
+    if c * m > len(devices):
+        raise ValueError(f"mesh ({c} clients x {m} model shards) needs "
+                         f"{c * m} devices, have {len(devices)}")
+    return make_compat_mesh((c, m), ("clients", "model"), devices[:c * m])
 
 
 def make_client_mesh(n_shards: int = None):
@@ -73,3 +110,10 @@ def n_clients_of(mesh) -> int:
     for a in client_axes(mesh):
         n *= mesh.shape[a]
     return n
+
+
+def model_shards_of(mesh) -> int:
+    """Size of the ``model`` axis (1 when the mesh has none) — the 2-D
+    engine's switch between the pure client-sharded path and FSDP-style
+    param sharding."""
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1

@@ -24,7 +24,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 __all__ = ["param_pspecs", "batch_pspec", "cache_pspecs", "tree_shardings",
            "client_sharded_shardings", "client_sharded_batch_shardings",
-           "MODEL_AXIS"]
+           "train_state_pspecs", "train_state_shardings",
+           "train_batch_shardings", "MODEL_AXIS"]
 
 MODEL_AXIS = "model"
 
@@ -192,6 +193,47 @@ def client_sharded_shardings(mesh, state, axis: str = "clients"):
     so the whole-rollout dispatch starts from device-resident shards."""
     from repro.core.rollout import sharded_state_specs
     return tree_shardings(mesh, sharded_state_specs(state, axis))
+
+
+def train_state_pspecs(state, model_size: int, client_axis: str = "clients"):
+    """PartitionSpec pytree of an :class:`~repro.core.l2gd.L2GDState` on
+    the 2-D ``(clients, model)`` training mesh (DESIGN.md §15): stacked
+    ``params`` shard the leading client axis on ``client_axis`` AND their
+    weight dims FSDP-style on "model" per the Megatron rules above; the
+    ``cache`` (shared aggregation target, no client axis) is
+    model-sharded only; protocol scalars replicate.  ``model_size=1``
+    degenerates every model rule to replication — the layout of
+    :func:`~repro.core.rollout.sharded_state_specs` exactly."""
+    from repro.core.l2gd import L2GDState
+    return L2GDState(
+        params=param_pspecs(state.params, model_size,
+                            client_axes=(client_axis,)),
+        cache=param_pspecs(state.cache, model_size, client_axes=()),
+        xi_prev=P(), step=P())
+
+
+def train_state_shardings(mesh, state, client_axis: str = "clients"):
+    """NamedShardings of :func:`train_state_pspecs` on ``mesh`` (its
+    "model"-axis size sets the Megatron divisibility checks)."""
+    from repro.launch.mesh import model_shards_of
+    return tree_shardings(
+        mesh, train_state_pspecs(state, model_shards_of(mesh), client_axis))
+
+
+def train_batch_shardings(mesh, batches, client_axis: str = "clients",
+                          batch_axis=0):
+    """NamedShardings for the 2-D engine's batch pytree: client axis
+    sharded on ``client_axis`` (after the leading steps axis when
+    ``batch_axis=0``), token/feature dims replicated across the model
+    columns (every model shard sees its clients' full batch)."""
+    if batch_axis is None:
+        spec = jax.tree.map(
+            lambda a: P(*([client_axis] + [None] * (a.ndim - 1))), batches)
+    else:
+        spec = jax.tree.map(
+            lambda a: P(*([None, client_axis] + [None] * (a.ndim - 2))),
+            batches)
+    return tree_shardings(mesh, spec)
 
 
 def client_sharded_batch_shardings(mesh, batches, axis: str = "clients",

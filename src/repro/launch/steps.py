@@ -116,7 +116,11 @@ def _uplink_plan(client_comp, shapes):
     CompressionPlans pass through (bound if needed), and a
     :class:`repro.fl.fleet.FleetPlan` binds every cohort to the model
     shapes and unwraps if uniform (DESIGN.md §13 keystone — the builder
-    then emits the literal single-plan graph)."""
+    then emits the literal single-plan graph).  A length-n sequence is a
+    per-client plan vector (``fleet_from_plans`` dedup, same rule)."""
+    if isinstance(client_comp, (list, tuple)):
+        from repro.fl.fleet import fleet_from_plans
+        client_comp = fleet_from_plans(client_comp)
     if hasattr(client_comp, "cohorts"):      # FleetPlan (lazy fl import)
         from repro.fl.fleet import resolve_uplink
         return resolve_uplink(client_comp.bind(shapes))
@@ -239,9 +243,12 @@ def build_rollout_fn(cfg: ArchConfig, hp: L2GDHyper,
                      client_comp: Compressor = Identity(),
                      master_comp: Compressor = Identity(),
                      average_fn=None, plans=None, length: int = 8,
-                     unroll: int = 1, donate: bool = True):
+                     unroll: int = 1, donate: bool = True,
+                     local_steps: int = 1):
     """Scanned multi-round train function (DESIGN.md §8): ``length``
     rounds of Algorithm 1 inside ONE ``lax.scan``, drawing xi on device.
+    ``local_steps=H`` runs H gradient passes per local protocol step
+    (LoCoDL amortization, DESIGN.md §15) — wire accounting is unchanged.
 
     Same plan rules as :func:`build_train_step` (leafwise transports by
     default — pjit-safe under model-axis sharding).  The returned
@@ -273,7 +280,7 @@ def build_rollout_fn(cfg: ArchConfig, hp: L2GDHyper,
         return rollout_l2gd(key, state, hp, batches, grad_fn=grad_fn,
                             steps=length, client_comp=up_plan,
                             master_comp=down_plan, average_fn=average_fn,
-                            unroll=unroll)
+                            unroll=unroll, local_steps=local_steps)
 
     if donate:
         return jax.jit(rollout, donate_argnums=(0,))
@@ -335,13 +342,29 @@ def build_sharded_rollout_fn(cfg: ArchConfig, hp: L2GDHyper, *, mesh,
                              participation: Optional[float] = None,
                              length: int = 8, unroll: int = 1,
                              axis_name: str = "clients",
-                             donate: bool = True):
+                             donate: bool = True, local_steps: int = 1):
     """Client-sharded multi-round train function (DESIGN.md §9): the
     :func:`build_rollout_fn` scan running inside one shard_map over
     ``mesh``'s ``axis_name`` axis (repro.launch.mesh.make_client_mesh) —
     each device holds hp.n/n_devices whole personalized models, the
     aggregation branch all_gathers wire payloads, and ``participation``
     enables per-round client sampling.
+
+    2-D training mesh (DESIGN.md §15): when ``mesh`` ALSO carries a
+    "model" axis (repro.launch.mesh.make_train_mesh), the engine switches
+    from the shard_map to a GSPMD-partitioned jit of the SAME stacked
+    scan: the state enters under ``repro.launch.sharding.
+    train_state_pspecs`` constraints — leading client axis on
+    ``axis_name``, weight dims FSDP-style on "model" per the Megatron
+    rules — so each client row's personalized model is sharded over its
+    model columns and the compiler inserts the collectives.  Plans stay
+    leafwise (the flat ravel would force a cross-shard rematerialization,
+    DESIGN.md §7).  On a (clients=1, model=1) mesh the traced graph IS
+    the stacked :func:`repro.core.rollout.rollout_l2gd` — bit-exact with
+    the 1-D client-mesh engine (keystone, tests/test_mesh2d.py).
+    ``local_steps=H`` amortizes each aggregation round with H gradient
+    passes per local step on both paths (wire bits unchanged — the
+    ledger replays xi transitions, not gradient passes).
 
     The returned ``rollout(state, batches, key_data)`` matches
     :func:`build_rollout_fn`'s contract; place ``state``/``batches``
@@ -362,7 +385,7 @@ def build_sharded_rollout_fn(cfg: ArchConfig, hp: L2GDHyper, *, mesh,
     ``donate=True`` (default) jits the rollout with the state carry
     donated, exactly as :func:`build_rollout_fn` (each device's param
     shard is aliased input->output across the chunk)."""
-    from repro.core.rollout import rollout_l2gd_sharded
+    from repro.core.rollout import rollout_l2gd, rollout_l2gd_sharded
     shapes = param_shapes(cfg)
     up_plan = _uplink_plan(client_comp, shapes)
     down_plan = make_plan(master_comp, shapes, transport="leafwise")
@@ -372,14 +395,31 @@ def build_sharded_rollout_fn(cfg: ArchConfig, hp: L2GDHyper, *, mesh,
             lambda p: loss_fn(p, cfg, batch_i), has_aux=True)(params_i)
         return loss, grads
 
-    def rollout(state: L2GDState, batches, key_data: jax.Array):
-        key = jax.random.wrap_key_data(key_data)
-        return rollout_l2gd_sharded(key, state, hp, batches, mesh=mesh,
-                                    grad_fn=grad_fn, steps=length,
-                                    client_comp=up_plan,
-                                    master_comp=down_plan,
-                                    participation=participation,
-                                    unroll=unroll, axis_name=axis_name)
+    if "model" in mesh.axis_names:
+        from repro.launch.sharding import (train_batch_shardings,
+                                           train_state_shardings)
+
+        def rollout(state: L2GDState, batches, key_data: jax.Array):
+            key = jax.random.wrap_key_data(key_data)
+            state = jax.lax.with_sharding_constraint(
+                state, train_state_shardings(mesh, state, axis_name))
+            batches = jax.lax.with_sharding_constraint(
+                batches, train_batch_shardings(mesh, batches, axis_name))
+            return rollout_l2gd(key, state, hp, batches, grad_fn=grad_fn,
+                                steps=length, client_comp=up_plan,
+                                master_comp=down_plan,
+                                participation=participation, unroll=unroll,
+                                local_steps=local_steps)
+    else:
+        def rollout(state: L2GDState, batches, key_data: jax.Array):
+            key = jax.random.wrap_key_data(key_data)
+            return rollout_l2gd_sharded(key, state, hp, batches, mesh=mesh,
+                                        grad_fn=grad_fn, steps=length,
+                                        client_comp=up_plan,
+                                        master_comp=down_plan,
+                                        participation=participation,
+                                        unroll=unroll, axis_name=axis_name,
+                                        local_steps=local_steps)
 
     if donate:
         return jax.jit(rollout, donate_argnums=(0,))

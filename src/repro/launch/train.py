@@ -33,7 +33,79 @@ def build(cfg, overrides):
     return dataclasses.replace(cfg, **changes)
 
 
-def main() -> None:
+def tokens_processed(n_local: int, n_agg: int, local_steps: int, n: int,
+                     batch: int, seq: int) -> int:
+    """Tokens put through the model by a rollout: every protocol step
+    forwards the full n x batch x seq token batch at least once (the
+    aggregation branches evaluate the pre-update loss), and local steps
+    run ``local_steps`` gradient passes over it (DESIGN.md §15) — the
+    headline metric of bench_lm.py."""
+    passes = n_local * int(local_steps) + n_agg
+    return passes * n * batch * seq
+
+
+def run_mesh2d(args, cfg, hp, params, comp, mcomp, grad_fn, batch_fn,
+               n: int) -> None:
+    """The 2-D (clients x model) mesh engine leg of the CLI: ONE
+    ``build_sharded_rollout_fn`` dispatch over the whole run (DESIGN.md
+    §15), ledger replayed from the trace, tokens/s reported."""
+    from repro.core import init_state
+    from repro.core.codec import make_plan
+    from repro.core.rollout import RolloutTrace  # noqa: F401 (doc pointer)
+    from repro.fl.ledger import BitsLedger
+    from repro.launch.mesh import make_train_mesh, model_shards_of
+    from repro.launch.steps import build_sharded_rollout_fn
+
+    mesh = make_train_mesh(model_shards=args.model_shards)
+    print(f"mesh2d: clients axis={mesh.shape['clients']} "
+          f"model shards={model_shards_of(mesh)} "
+          f"dtype={cfg.param_dtype} local_steps={args.local_steps}",
+          flush=True)
+    rollout = build_sharded_rollout_fn(
+        cfg, hp, mesh=mesh, client_comp=comp, master_comp=mcomp,
+        length=args.steps, local_steps=args.local_steps)
+    state = init_state(params)
+    # plans BEFORE dispatch: the jit donates state, which aliases params
+    one_client = jax.tree.map(lambda a: a[0], params)
+    up_plan = make_plan(comp, one_client, transport="leafwise")
+    down_plan = make_plan(mcomp, one_client, transport="leafwise")
+    batches = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[batch_fn(k) for k in range(args.steps)])
+    key_data = jax.random.key_data(jax.random.PRNGKey(args.seed + 3))
+
+    t0 = time.time()
+    state, trace = jax.block_until_ready(rollout(state, batches, key_data))
+    dt = time.time() - t0
+    ledger = BitsLedger(n)
+    ledger.replay_xi_trace(np.asarray(trace.xis), up_plan.round_bits(),
+                           down_plan.round_bits())
+    losses = np.asarray(trace.losses)
+    for i in range(0, len(losses), max(args.log_every, 1)):
+        print(f"step {i:5d}  client-mean loss {float(losses[i]):8.4f}")
+    if len(losses):
+        print(f"final loss {float(losses[-1]):.4f}")
+    n_local = int(trace.n_local)
+    n_agg = int(trace.n_agg_comm) + int(trace.n_agg_cached)
+    toks = tokens_processed(n_local, n_agg, args.local_steps, n,
+                            args.batch, args.seq)
+    print(f"steps/s={args.steps / dt:.2f}  tokens/s={toks / dt:.0f}  "
+          f"rounds={ledger.rounds}  "
+          f"bits/n={ledger.bits_per_client:.3e}  "
+          f"local={n_local} aggC={int(trace.n_agg_comm)} "
+          f"aggK={int(trace.n_agg_cached)}")
+    if args.ckpt:
+        checkpoint.save_state(args.ckpt, state.params,
+                              {"arch": cfg.name, "steps": args.steps,
+                               "bits_per_client": ledger.bits_per_client})
+        print(f"checkpoint -> {args.ckpt}")
+
+
+def main(argv=None) -> None:
+    """CLI entry point.  ``argv`` (optional list) replaces
+    ``sys.argv[1:]`` — callers compose flag lists explicitly
+    (examples/train_federated_lm.py) instead of splicing ``sys.argv``;
+    argparse's last-wins ordering then lets trailing user flags override
+    a caller's defaults."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="stablelm-1.6b")
     ap.add_argument("--full", action="store_true",
@@ -69,7 +141,27 @@ def main() -> None:
                     help="resume bit-exactly from the latest snapshot "
                          "under --ckpt")
     ap.add_argument("--log-every", type=int, default=20)
-    args = ap.parse_args()
+    ap.add_argument("--local-steps", type=int, default=1,
+                    help="gradient passes per LOCAL protocol step "
+                         "(LoCoDL amortization, DESIGN.md §15; wire "
+                         "bits per round unchanged)")
+    ap.add_argument("--engine", choices=("driver", "mesh2d"),
+                    default="driver",
+                    help="driver: the chunked run_l2gd simulator "
+                         "(default); mesh2d: the 2-D (clients x model) "
+                         "mesh engine via build_sharded_rollout_fn")
+    ap.add_argument("--model-shards", type=int, default=1,
+                    help="size of the mesh's model axis (mesh2d engine; "
+                         "clients x model-shards devices needed)")
+    ap.add_argument("--dtype", choices=("float32", "bfloat16"),
+                    default=None,
+                    help="override param+compute dtype (bf16 training "
+                         "keeps fp32 wire norms/accumulators — DESIGN.md "
+                         "§15 precision policy)")
+    ap.add_argument("--attn-impl", choices=("dense", "flash"), default=None,
+                    help="train-path attention kernel (flash only takes "
+                         "effect on all-global-causal configs)")
+    args = ap.parse_args(argv)
     if (args.ckpt_every or args.resume) and not args.ckpt:
         ap.error("--ckpt-every/--resume need --ckpt (the manager root)")
 
@@ -78,7 +170,9 @@ def main() -> None:
                        "d_ff": args.d_ff, "n_heads": args.heads,
                        "n_kv_heads": args.kv_heads,
                        "vocab_size": args.vocab,
-                       "head_dim": None if args.d_model else base.head_dim})
+                       "head_dim": None if args.d_model else base.head_dim,
+                       "param_dtype": args.dtype, "compute_dtype": args.dtype,
+                       "attn_impl": args.attn_impl})
     n = args.clients
     ts = TokenStream(n_clients=n, vocab=cfg.vocab_size, batch=args.batch,
                      seq=args.seq, seed=args.seed)
@@ -107,6 +201,14 @@ def main() -> None:
     hp = L2GDHyper(eta=args.eta, lam=args.lam, p=args.p, n=n)
     comp = make_compressor(args.compressor)
     mcomp = make_compressor(args.master_compressor or args.compressor)
+
+    if args.engine == "mesh2d":
+        if args.ckpt_every or args.resume:
+            ap.error("--engine mesh2d has no checkpoint manager yet; "
+                     "use the driver engine for --ckpt-every/--resume")
+        run_mesh2d(args, cfg, hp, params, comp, mcomp, grad_fn, batch_fn, n)
+        return
+
     policy = None
     if args.ckpt_every:
         policy = checkpoint.CheckpointPolicy(
@@ -121,7 +223,7 @@ def main() -> None:
     run = run_l2gd(jax.random.PRNGKey(args.seed + 3), params, grad_fn, hp,
                    batch_fn, args.steps, client_comp=comp, master_comp=mcomp,
                    seed=args.seed + 4, checkpoint_policy=policy,
-                   resume_from=resume_from)
+                   resume_from=resume_from, local_steps=args.local_steps)
     if policy is not None:
         policy.resolve().close()   # join the in-flight commits
     dt = time.time() - t0
@@ -133,7 +235,10 @@ def main() -> None:
     if losses:
         print(f"final loss {losses[-1][1]:.4f}  "
               f"({np.mean([l for _, l in losses[-5:]]):.4f} tail-5 mean)")
-    print(f"steps/s={args.steps / dt:.2f}  rounds={run.ledger.rounds}  "
+    toks = tokens_processed(run.n_local, run.n_agg_comm + run.n_agg_cached,
+                            args.local_steps, n, args.batch, args.seq)
+    print(f"steps/s={args.steps / dt:.2f}  tokens/s={toks / dt:.0f}  "
+          f"rounds={run.ledger.rounds}  "
           f"bits/n={run.ledger.bits_per_client:.3e}  "
           f"local={run.n_local} aggC={run.n_agg_comm} aggK={run.n_agg_cached}")
 

@@ -115,11 +115,21 @@ def gqa_attention(params: dict, x: jax.Array, positions: jax.Array, *,
                   cache: Optional[KVCache] = None,
                   cache_index: Optional[jax.Array] = None,
                   ring: bool = False,
-                  mask_override: Optional[jax.Array] = None):
+                  mask_override: Optional[jax.Array] = None,
+                  impl: str = "dense"):
     """Returns (out, new_cache).  Train/prefill when cache is None.
     ``mask_override`` replaces the computed causal mask (used by the
     scan-over-layers path where the window/global pattern is a traced
-    per-layer flag)."""
+    per-layer flag).
+
+    ``impl="flash"`` routes the train/prefill path through the tiled
+    flash-attention kernel (repro.kernels.flash_attention: Pallas on
+    TPU, the fused dense oracle elsewhere) with a STATIC causal/window
+    mask — callers must only select it when the layer's mask is exactly
+    ``causal_mask(S, S, window)`` (models/model.py gates the dispatch on
+    ``cfg.sliding_window is None``, where every layer is plain causal;
+    a traced per-layer window flag cannot reach the static kernel).
+    Decode always uses the dense cache path."""
     B, S, _ = x.shape
     if "wqkv" in params:  # qkv_fused layout
         qkv = x @ params["wqkv"]
@@ -143,8 +153,13 @@ def gqa_attention(params: dict, x: jax.Array, positions: jax.Array, *,
     k = apply_rope(k, positions, theta)
 
     if cache is None:
-        mask = mask_override if mask_override is not None else causal_mask(S, S, window)
-        out = attention_core(q, k, v, mask)
+        if impl == "flash":
+            from repro.kernels.flash_attention.ops import flash_attention_op
+            out = flash_attention_op(q, k, v, causal=True, window=window)
+        else:
+            mask = mask_override if mask_override is not None \
+                else causal_mask(S, S, window)
+            out = attention_core(q, k, v, mask)
     else:
         C = cache.k.shape[1]
         idx = cache_index

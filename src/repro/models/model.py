@@ -178,12 +178,25 @@ def param_count(params) -> int:
 # layer application (train / prefill)
 # ---------------------------------------------------------------------------
 
+def _attn_impl_train(cfg: ArchConfig) -> str:
+    """Train-path attention kernel selection (DESIGN.md §15): the flash
+    kernel needs a STATIC causal/window mask, so it is only safe when
+    every layer is plain causal — ``sliding_window is None`` (the
+    scan-over-layers path traces the per-layer global/local flag into
+    the mask otherwise).  ``attn_impl="dense"`` (the default) keeps the
+    historic fused-XLA softmax bit-exactly."""
+    if cfg.attn_impl == "flash" and cfg.sliding_window is None:
+        return "flash"
+    return "dense"
+
+
 def _apply_mixer_train(cfg: ArchConfig, lp: dict, x, positions, mask):
     if cfg.mixer == "gqa":
         out, _ = attn.gqa_attention(
             lp["attn"], x, positions, n_heads=cfg.n_heads,
             n_kv=cfg.n_kv_heads, head_dim=cfg.hd, theta=cfg.rope_theta,
-            qk_norm=cfg.qk_norm, mask_override=mask)
+            qk_norm=cfg.qk_norm, mask_override=mask,
+            impl=_attn_impl_train(cfg))
         return out
     if cfg.mixer == "mla":
         out, _ = attn.mla_attention(
@@ -199,7 +212,7 @@ def _apply_mixer_train(cfg: ArchConfig, lp: dict, x, positions, mask):
         a, _ = attn.gqa_attention(
             lp["attn"], x, positions, n_heads=cfg.n_heads,
             n_kv=cfg.n_kv_heads, head_dim=cfg.hd, theta=cfg.rope_theta,
-            mask_override=mask)
+            mask_override=mask, impl=_attn_impl_train(cfg))
         m = mb.mamba_forward(lp["mamba"], x, d_state=cfg.ssm_state,
                              chunk=cfg.scan_chunk)
         return 0.5 * (blocks.rmsnorm(lp["norm_attn"], a)

@@ -1,0 +1,348 @@
+"""2-D mesh training engine + bf16 precision policy (DESIGN.md §15).
+
+Pins the PR's keystones:
+  * bf16 params round-trip every codec x transport with the SAME wire
+    payload spec as f32 — norms/codes are computed in f32 (encode casts
+    up before quantizing), ``round_bits`` is unchanged, and decode dtype
+    is pinned to the param dtype;
+  * ``local_steps=1`` is structurally identical to the historic engine
+    (bit-exact across stacked / sharded / host modes) and ``local_steps=
+    H`` charges the ledger exactly like H=1 (xi transitions, never
+    gradient passes);
+  * the 2-D GSPMD engine (``build_sharded_rollout_fn`` on a
+    ``make_train_mesh`` carrying a "model" axis) is bit-exact with the
+    stacked engine on a (1,1) mesh;
+  * a length-n per-client plan vector reaches every entry point
+    (``fleet_from_plans`` structural dedup) and a vector of EQUAL plans
+    is bit-exact with the single-plan graph.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import DIM as D, N_CLIENTS as N, quad_batch, quad_grad_fn, \
+    zero_params
+from repro.core import (init_state, make_compressor, make_hyper, make_plan,
+                        rollout_l2gd, rollout_l2gd_sharded)
+from repro.fl import run_l2gd
+from repro.fl.fleet import FleetPlan, fleet_from_plans
+from repro.fl.ledger import BitsLedger
+from repro.launch.mesh import make_client_mesh, make_train_mesh, \
+    model_shards_of
+
+BATCH = quad_batch()
+multidevice = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=2")
+
+CODEC_TRANSPORTS = [("identity", "leafwise"), ("terngrad", "leafwise"),
+                    ("bernoulli", "leafwise"), ("randk", "leafwise"),
+                    ("topk", "leafwise")] + [
+    (c, t) for c in ("qsgd", "natural")
+    for t in ("leafwise", "flat", "packed")]
+
+
+def _hp(p=0.5):
+    return make_hyper(eta=0.3, lam=1.0, p=p, n=N)
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), (x, y)
+
+
+# ---------------------------------------------------------------------------
+# bf16 wire precision policy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec,transport", CODEC_TRANSPORTS)
+def test_bf16_roundtrip_payload_spec(codec, transport):
+    """bf16 params: SAME wire bits as f32 (fp32 norms/codes on the wire),
+    payload arrays bit-identical to encoding the f32 upcast, decode
+    dtype pinned to bf16."""
+    params32 = {"a": jnp.linspace(-1.0, 1.0, 64).reshape(8, 8),
+                "b": jnp.arange(16, dtype=jnp.float32) * 0.1}
+    params16 = jax.tree.map(lambda x: x.astype(jnp.bfloat16), params32)
+    comp = make_compressor(codec)
+    plan32 = make_plan(comp, params32, transport=transport)
+    plan16 = make_plan(comp, params16, transport=transport)
+    assert plan16.round_bits() == plan32.round_bits()
+
+    key = jax.random.PRNGKey(3)
+    pay16 = plan16.encode(key, params16)
+    # bf16 -> f32 is exact, so the quantizer sees the SAME f32 values:
+    # every wire array (codes, fp32 norms) is bit-identical
+    pay32 = plan32.encode(key, jax.tree.map(
+        lambda x: x.astype(jnp.float32), params16))
+    for a, b in zip(jax.tree.leaves(pay16), jax.tree.leaves(pay32)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    dec = plan16.decode(pay16)
+    assert all(leaf.dtype == jnp.bfloat16 for leaf in jax.tree.leaves(dec))
+    assert jax.tree.structure(dec) == jax.tree.structure(params16)
+
+
+@pytest.mark.parametrize("codec", ["natural", "qsgd", "identity"])
+def test_bf16_rollout_param_dtype_stable(codec):
+    """A whole bf16 rollout keeps bf16 params (no silent f32 promotion
+    through the f32-computed updates) and produces finite losses."""
+    comp = make_compressor(codec)
+    params = jax.tree.map(lambda x: x.astype(jnp.bfloat16), zero_params())
+    batch = BATCH.astype(jnp.bfloat16)
+
+    def grad_fn(p, b):
+        g = p["w"] - b
+        return 0.5 * jnp.sum((g.astype(jnp.float32)) ** 2), {"w": g}
+
+    final, trace = rollout_l2gd(
+        jax.random.PRNGKey(1), init_state(params), _hp(), batch,
+        grad_fn=grad_fn, steps=8, client_comp=comp, master_comp=comp,
+        batch_axis=None)
+    assert final.params["w"].dtype == jnp.bfloat16
+    assert final.cache["w"].dtype == jnp.bfloat16
+    assert np.all(np.isfinite(np.asarray(trace.losses)))
+
+
+# ---------------------------------------------------------------------------
+# local steps
+# ---------------------------------------------------------------------------
+
+def _stacked(steps=12, comp=None, local_steps=1, key=jax.random.PRNGKey(1)):
+    comp = comp if comp is not None else make_compressor("natural")
+    return rollout_l2gd(
+        key, init_state(zero_params()), _hp(), BATCH, grad_fn=quad_grad_fn,
+        steps=steps, client_comp=comp,
+        master_comp=make_compressor("natural"), batch_axis=None,
+        local_steps=local_steps)
+
+
+def test_local_steps_one_is_the_historic_engine():
+    """H=1 is an EMPTY extra-pass loop: the traced graph is the historic
+    engine's, so results are bit-exact, not just close."""
+    ref, rtr = _stacked()
+    new, ntr = _stacked(local_steps=1)
+    _tree_equal(ref.params, new.params)
+    _tree_equal(ref.cache, new.cache)
+    assert np.array_equal(np.asarray(rtr.losses), np.asarray(ntr.losses))
+
+
+def test_local_steps_sharded_matches_stacked():
+    mesh = make_client_mesh(1)
+    ref, rtr = _stacked(local_steps=2)
+    shd, strace = rollout_l2gd_sharded(
+        jax.random.PRNGKey(1), init_state(zero_params()), _hp(), BATCH,
+        mesh=mesh, grad_fn=quad_grad_fn, steps=12,
+        client_comp=make_compressor("natural"),
+        master_comp=make_compressor("natural"), batch_axis=None,
+        local_steps=2)
+    _tree_equal(ref.params, shd.params)
+    assert np.array_equal(np.asarray(rtr.xis), np.asarray(strace.xis))
+
+
+def test_local_steps_host_matches_scan():
+    kw = dict(client_comp=make_compressor("natural"),
+              master_comp=make_compressor("natural"), local_steps=3)
+    key = jax.random.PRNGKey(5)
+    scan = run_l2gd(key, zero_params(), quad_grad_fn, _hp(),
+                    lambda k: BATCH, 10, mode="scan", **kw)
+    host = run_l2gd(key, zero_params(), quad_grad_fn, _hp(),
+                    lambda k: BATCH, 10, mode="host", **kw)
+    _tree_equal(scan.state.params, host.state.params)
+    assert scan.ledger.bits_per_client == host.ledger.bits_per_client
+
+
+def test_local_steps_actually_step():
+    """H=2 takes a second gradient pass on local steps: with p<1 some
+    branch is local, so params must differ from H=1."""
+    one, _ = _stacked(local_steps=1)
+    two, ttr = _stacked(local_steps=2)
+    assert int(ttr.n_local) > 0
+    assert not np.array_equal(np.asarray(one.params["w"]),
+                              np.asarray(two.params["w"]))
+
+
+def test_local_steps_ledger_invariant():
+    """The wire cost of a round is paid ONCE regardless of H: identical
+    xi streams (keyed by global step, not by gradient passes) and
+    identical replayed bits."""
+    _, tr1 = _stacked(local_steps=1)
+    _, tr2 = _stacked(local_steps=4)
+    assert np.array_equal(np.asarray(tr1.xis), np.asarray(tr2.xis))
+    plan = make_plan(make_compressor("natural"), zero_params(),
+                     transport="leafwise")
+    led1, led2 = BitsLedger(N), BitsLedger(N)
+    led1.replay_xi_trace(np.asarray(tr1.xis), plan.round_bits(), 0.0)
+    led2.replay_xi_trace(np.asarray(tr2.xis), plan.round_bits(), 0.0)
+    assert led1.bits_per_client == led2.bits_per_client
+    assert led1.rounds == led2.rounds
+
+
+def test_local_steps_validation():
+    with pytest.raises(ValueError):
+        _stacked(local_steps=0)
+
+
+# ---------------------------------------------------------------------------
+# per-client plan vectors (fleet_from_plans)
+# ---------------------------------------------------------------------------
+
+def test_fleet_from_plans_dedupes_equal_plans():
+    plans = [make_plan(make_compressor("natural"), transport="leafwise")
+             for _ in range(N)]
+    fleet = fleet_from_plans(plans)
+    assert isinstance(fleet, FleetPlan)
+    assert len(fleet.cohorts) == 1 and fleet.is_uniform
+    assert fleet.assignment == tuple([0] * N)
+
+
+def test_fleet_from_plans_mixed():
+    nat = make_plan(make_compressor("natural"), transport="leafwise")
+    q = make_plan(make_compressor("qsgd"), transport="packed")
+    fleet = fleet_from_plans([nat, q, nat, q])
+    assert len(fleet.cohorts) == 2
+    assert fleet.assignment == (0, 1, 0, 1)
+    with pytest.raises(ValueError):
+        fleet_from_plans([])
+
+
+def test_plan_vector_rollout_bit_exact():
+    """A vector of n EQUAL plans is the single-plan graph (structural
+    dedup -> uniform fleet -> unwrap): bit-exact, not just close."""
+    comp = make_compressor("natural")
+    ref, rtr = _stacked(comp=comp)
+    vec, vtr = _stacked(comp=[comp] * N)
+    _tree_equal(ref.params, vec.params)
+    assert np.array_equal(np.asarray(rtr.xis), np.asarray(vtr.xis))
+
+
+def test_plan_vector_reaches_sharded_engine():
+    """satellite: the length-n vector flows through the sharded
+    all_gather path (make_client_sharded_average) bit-exactly vs the
+    cohort grouping it dedupes to."""
+    mesh = make_client_mesh(1)
+    comp = make_compressor("natural")
+    run = functools.partial(
+        rollout_l2gd_sharded, jax.random.PRNGKey(1),
+        init_state(zero_params()), _hp(), BATCH, mesh=mesh,
+        grad_fn=quad_grad_fn, steps=10, master_comp=comp, batch_axis=None)
+    ref, rtr = run(client_comp=comp)
+    vec, vtr = run(client_comp=[comp] * N)
+    _tree_equal(ref.params, vec.params)
+    assert np.array_equal(np.asarray(rtr.xis), np.asarray(vtr.xis))
+
+
+def test_plan_vector_length_mismatch_raises():
+    """A MIXED vector of the wrong length is caught by the engine's
+    fleet validation.  (A wrong-length vector of EQUAL plans dedupes to
+    the uniform single-plan broadcast first — same semantics as passing
+    the plain compressor — so only mixed vectors carry a length.)"""
+    nat = make_compressor("natural")
+    q = make_compressor("qsgd")
+    with pytest.raises(ValueError):
+        _stacked(comp=[nat] * N + [q])
+
+
+# ---------------------------------------------------------------------------
+# 2-D training mesh
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg(dtype="float32"):
+    from repro.configs.base import get_config
+    return dataclasses.replace(
+        get_config("stablelm-1.6b").reduced(),
+        n_layers=1, d_model=16, d_ff=32, n_heads=2, n_kv_heads=2,
+        vocab_size=64, head_dim=None, param_dtype=dtype,
+        compute_dtype=dtype)
+
+
+def _lm_problem(cfg, n=2, batch=1, seq=8, steps=3):
+    from repro.models import init_params
+    keys = jax.random.split(jax.random.PRNGKey(0), n)
+    params = jax.vmap(lambda k: init_params(k, cfg))(keys)
+    tokens = jax.random.randint(jax.random.PRNGKey(9),
+                                (steps, n, batch, seq), 0, cfg.vocab_size)
+    return params, {"tokens": tokens}
+
+
+def test_make_train_mesh():
+    mesh = make_train_mesh(model_shards=1)
+    assert mesh.axis_names == ("clients", "model")
+    assert model_shards_of(mesh) == 1
+    assert model_shards_of(make_client_mesh(1)) == 1
+    with pytest.raises(ValueError):
+        make_train_mesh(model_shards=0)
+    with pytest.raises(ValueError):
+        make_train_mesh(clients=len(jax.devices()) + 1, model_shards=1)
+
+
+def test_mesh2d_keystone_bit_exact_with_stacked_engine():
+    """§15 keystone: on a (1,1) train mesh the 2-D GSPMD engine's traced
+    graph IS the stacked scan — final params and xi stream bit-exact."""
+    from repro.launch.steps import build_rollout_fn, build_sharded_rollout_fn
+    cfg = _tiny_cfg()
+    hp = make_hyper(eta=0.1, lam=0.5, p=0.5, n=2)
+    comp = make_compressor("natural")
+    params, batches = _lm_problem(cfg)
+    key_data = jax.random.key_data(jax.random.PRNGKey(11))
+    kw = dict(client_comp=comp, master_comp=comp, length=3, donate=False)
+    ref, rtr = build_rollout_fn(cfg, hp, **kw)(
+        init_state(params), batches, key_data)
+    mesh = make_train_mesh(model_shards=1)
+    out, otr = build_sharded_rollout_fn(cfg, hp, mesh=mesh, **kw)(
+        init_state(params), batches, key_data)
+    _tree_equal(ref.params, out.params)
+    assert np.array_equal(np.asarray(rtr.xis), np.asarray(otr.xis))
+    assert np.array_equal(np.asarray(rtr.losses), np.asarray(otr.losses))
+
+
+def test_mesh2d_bf16_local_steps_end_to_end():
+    """bf16 params + H=2 through the 2-D engine: dtype stable, losses
+    finite, ledger replay charges rounds once."""
+    from repro.launch.steps import build_sharded_rollout_fn
+    cfg = _tiny_cfg("bfloat16")
+    hp = make_hyper(eta=0.1, lam=0.5, p=0.5, n=2)
+    comp = make_compressor("natural")
+    params, batches = _lm_problem(cfg)
+    mesh = make_train_mesh(model_shards=1)
+    roll = build_sharded_rollout_fn(cfg, hp, mesh=mesh, client_comp=comp,
+                                    master_comp=comp, length=3,
+                                    local_steps=2, donate=False)
+    final, trace = roll(init_state(params), batches,
+                        jax.random.key_data(jax.random.PRNGKey(11)))
+    assert all(leaf.dtype == jnp.bfloat16
+               for leaf in jax.tree.leaves(final.params))
+    assert np.all(np.isfinite(np.asarray(trace.losses)))
+    assert int(trace.n_local) + int(trace.n_agg_comm) \
+        + int(trace.n_agg_cached) == 3
+
+
+@multidevice
+def test_mesh2d_two_model_shards():
+    """2 model shards: same protocol trace, params agree with the
+    unsharded run to reduction-order ulps (GSPMD repartitions matmuls,
+    so exact equality is NOT the contract here — the (1,1) keystone is)."""
+    from repro.launch.steps import build_rollout_fn, build_sharded_rollout_fn
+    cfg = _tiny_cfg()
+    hp = make_hyper(eta=0.1, lam=0.5, p=0.5, n=2)
+    comp = make_compressor("natural")
+    params, batches = _lm_problem(cfg)
+    key_data = jax.random.key_data(jax.random.PRNGKey(11))
+    kw = dict(client_comp=comp, master_comp=comp, length=3, donate=False)
+    ref, rtr = build_rollout_fn(cfg, hp, **kw)(
+        init_state(params), batches, key_data)
+    mesh = make_train_mesh(model_shards=2)
+    assert model_shards_of(mesh) == 2
+    out, otr = build_sharded_rollout_fn(cfg, hp, mesh=mesh, **kw)(
+        init_state(params), batches, key_data)
+    assert np.array_equal(np.asarray(rtr.xis), np.asarray(otr.xis))
+    for a, b in zip(jax.tree.leaves(ref.params),
+                    jax.tree.leaves(out.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
